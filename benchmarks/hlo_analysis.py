@@ -1,0 +1,383 @@
+"""Static cost analysis of optimized HLO text (roofline extraction).
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
+while-loop body ONCE, so any scanned program (layer scans, T_E rounds,
+q-chunked attention) is under-reported by its trip count.  This analyzer
+parses the optimized HLO text, recovers scan trip counts from loop
+conditions, and accumulates:
+
+  * flops            -- 2*M*N*K for dot ops (+ ~1 flop/elem for fused
+                        elementwise arithmetic), x trip multipliers;
+  * hbm_bytes        -- sum of operand+output bytes of every top-level
+                        (post-fusion) instruction: XLA's own HBM-traffic
+                        model for fusions counts exactly these;
+  * collective bytes -- operand bytes of all-reduce / all-gather /
+                        reduce-scatter / all-to-all / collective-permute
+                        (+ their async -start forms), each attributed to
+                        the mesh axes its replica groups span.
+
+Used by launch/dryrun.py (Sec. Dry-run) and benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?([%\w.\-]+)\s*=\s*(.*)$")
+
+ELEMENTWISE_HINT = re.compile(
+    r"^(add|subtract|multiply|divide|exponential|log|tanh|maximum|minimum|"
+    r"power|rsqrt|sqrt|negate|abs|select|compare|and|or|xor|convert|"
+    r"logistic|sign|floor|ceil|cosine|sine|reduce|clamp|remainder)")
+
+
+def _type_bytes_elems(type_str: str) -> tuple[int, int]:
+    """Total (bytes, elements) across all shapes in a type string."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            elems = math.prod(int(d) for d in dims.split(","))
+        total_e += elems
+        total_b += elems * DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "opcode", "operands", "attrs", "root")
+
+    def __init__(self, name, type_str, opcode, operands, attrs, root):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.operands = operands
+        self.attrs = attrs
+        self.root = root
+
+
+def _split_type_rest(rhs: str):
+    """rhs = '<type> opcode(...), attrs' where tuple types are (...)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return rhs[: i + 1], rhs[i + 1:].strip()
+    i = rhs.find(" ")
+    return rhs[:i], rhs[i + 1:].strip()
+
+
+def _parse_call(rest: str):
+    """'opcode(operands), attrs' -> (opcode, [operand names], attrs)."""
+    i = rest.find("(")
+    opcode = rest[:i].strip()
+    depth = 0
+    for j in range(i, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    inner = rest[i + 1: j]
+    attrs = rest[j + 1:].lstrip(", ")
+    ops = []
+    depth = 0
+    cur = ""
+    for ch in inner:
+        if ch == "," and depth == 0:
+            ops.append(cur.strip())
+            cur = ""
+        else:
+            depth += ch in "([{"
+            depth -= ch in ")]}"
+            cur += ch
+    if cur.strip():
+        ops.append(cur.strip())
+    names = []
+    for o in ops:
+        m = re.match(r"%?([\w.\-]+)", o.strip())
+        names.append(m.group(1) if m else o.strip())
+    return opcode, names, attrs
+
+
+def parse_module(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.endswith("{") and "->" in s:
+            header = s[:-1].strip()
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", header)
+            if m and "(" in header:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+            continue
+        if s == "}" or s.startswith("}"):
+            continue
+        if cur is None or "=" not in s:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        root, name, rhs = m.group(1), m.group(2).lstrip("%"), m.group(3)
+        if "(" not in rhs:
+            continue
+        try:
+            type_str, rest = _split_type_rest(rhs)
+            opcode, operands, attrs = _parse_call(rest)
+        except Exception:
+            continue
+        comps[cur].append(Instr(name, type_str, opcode, operands, attrs,
+                                bool(root)))
+    return comps
+
+
+def _comp_ref(attrs: str, key: str):
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _find(instrs, name):
+    for i in instrs:
+        if i.name == name:
+            return i
+    return None
+
+
+def _replica_group_axes(attrs: str, axis_sizes: dict[str, int] | None):
+    """Label which mesh axes a collective's replica groups span."""
+    if not axis_sizes:
+        return "unknown", 0
+    sizes = list(axis_sizes.values())
+    names = list(axis_sizes.keys())
+    n_dev = math.prod(sizes)
+    group = None
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        group = [int(x) for x in m.group(1).split(",")]
+    else:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                      r"(?:T\(([0-9,]+)\))?", attrs)
+        if m:
+            g, s = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")]
+            arr = np.arange(math.prod(dims)).reshape(dims)
+            if m.group(4):
+                arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+            arr = arr.reshape(g, s)
+            group = list(arr[0])
+    if not group:
+        return "unknown", 0
+    coords = np.array(np.unravel_index(np.array(group), sizes)).T
+    varying = [names[i] for i in range(len(sizes))
+               if len(set(coords[:, i])) > 1]
+    return "+".join(varying) if varying else "self", len(group)
+
+
+def analyze_hlo_text(text: str, axis_sizes: dict[str, int] | None = None):
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"error": "no entry computation found"}
+
+    # keep raw lines for constant extraction
+    const_vals: dict[str, int] = {}
+    for m in re.finditer(r"%?([\w.\-]+) = s32\[\] constant\((\d+)\)", text):
+        const_vals[m.group(1)] = int(m.group(2))
+
+    def trip_of(cond_name):
+        for ins in comps.get(cond_name, []):
+            if ins.opcode == "compare" and "direction=LT" in ins.attrs:
+                for op in ins.operands:
+                    if op in const_vals:
+                        return const_vals[op]
+        vals = [const_vals[i.name] for i in comps.get(cond_name, [])
+                if i.name in const_vals]
+        return max(vals) if vals else 1
+
+    totals = {
+        "flops": 0.0, "hbm_bytes": 0.0, "hbm_bytes_out": 0.0,
+        "wire_bytes": 0.0,
+        "collectives": defaultdict(lambda: {"bytes": 0.0, "count": 0}),
+        "per_axis_bytes": defaultdict(float),
+        "while_trips": {},
+        "top_collectives": [],
+    }
+    visited_fusion_flops: dict[str, float] = {}
+
+    def fusion_flops(comp_name: str) -> float:
+        if comp_name in visited_fusion_flops:
+            return visited_fusion_flops[comp_name]
+        fl = 0.0
+        for ins in comps.get(comp_name, []):
+            fl += instr_flops(ins, comp_name)
+        visited_fusion_flops[comp_name] = fl
+        return fl
+
+    def instr_flops(ins: Instr, comp_name: str) -> float:
+        if ins.opcode == "dot":
+            out_b, out_e = _type_bytes_elems(ins.type_str)
+            lhs = _find(comps[comp_name], ins.operands[0])
+            k = 1.0
+            if lhs is not None:
+                dims = _shape_dims(lhs.type_str)
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                              ins.attrs)
+                if m and m.group(1):
+                    for d in m.group(1).split(","):
+                        if int(d) < len(dims):
+                            k *= dims[int(d)]
+            return 2.0 * out_e * k
+        if ins.opcode == "fusion":
+            callee = _comp_ref(ins.attrs, "calls")
+            return fusion_flops(callee) if callee else 0.0
+        if ins.opcode in ("custom-call",):
+            if "matmul" in ins.attrs or "dot" in ins.attrs.lower():
+                _, out_e = _type_bytes_elems(ins.type_str)
+                return 2.0 * out_e * 128.0     # conservative fallback
+            return 0.0
+        if ELEMENTWISE_HINT.match(ins.opcode):
+            _, out_e = _type_bytes_elems(ins.type_str)
+            return float(out_e)
+        return 0.0
+
+    SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "iota"}
+
+    def walk(comp_name: str, mult: float):
+        for ins in comps.get(comp_name, []):
+            op = ins.opcode
+            if op == "while":
+                body = _comp_ref(ins.attrs, "body")
+                cond = _comp_ref(ins.attrs, "condition")
+                trips = trip_of(cond) if cond else 1
+                totals["while_trips"][body] = trips
+                walk(body, mult * trips)
+                continue
+            if op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    ref = _comp_ref(ins.attrs, key)
+                    if ref:
+                        walk(ref, mult)
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if m:
+                    for ref in m.group(1).split(","):
+                        walk(ref.strip().lstrip("%"), mult)
+                continue
+            if op == "call":
+                ref = _comp_ref(ins.attrs, "to_apply")
+                if ref:
+                    walk(ref, mult)
+                continue
+            # flops + bytes for regular instructions
+            totals["flops"] += mult * instr_flops(ins, comp_name)
+            if op not in SKIP_BYTES:
+                out_b, _ = _type_bytes_elems(ins.type_str)
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the sliced region (~= output), NOT the
+                    # full operand: critical inside scans, where charging
+                    # the stacked xs per iteration overstates traffic by
+                    # the trip count.
+                    in_b = out_b
+                elif op == "dynamic-update-slice":
+                    # read-modify-write of the update region only
+                    upd = (_find(comps[comp_name], ins.operands[1])
+                           if len(ins.operands) > 1 else None)
+                    ub = (_type_bytes_elems(upd.type_str)[0]
+                          if upd is not None else 0)
+                    totals["hbm_bytes"] += mult * 2 * ub
+                    totals["hbm_bytes_out"] += mult * ub
+                    continue
+                else:
+                    sliced_fusion = False
+                    if op == "fusion":
+                        callee = comps.get(_comp_ref(ins.attrs, "calls"),
+                                           [])
+                        sliced_fusion = any(
+                            i.opcode in ("dynamic-slice", "slice",
+                                         "gather", "scatter",
+                                         "dynamic-update-slice")
+                            for i in callee)
+                    in_b = 0
+                    for o in ins.operands:
+                        src = _find(comps[comp_name], o)
+                        if src is not None and src.opcode not in (
+                                "constant", "tuple"):
+                            b, _ = _type_bytes_elems(src.type_str)
+                            if sliced_fusion and (b == out_b
+                                                  or b >= 32 * max(out_b,
+                                                                   1)):
+                                # aliased scan accumulator / sliced source:
+                                # the fusion touches a slice, not the full
+                                # stacked buffer (in-place DUS / DS read)
+                                continue
+                            in_b += b
+                    if sliced_fusion and in_b == 0:
+                        in_b = out_b  # at least the slice region
+                # upper bound: every op re-reads its operands (CPU fusion
+                # granularity); lower bound: each tensor written once
+                # (perfect-fusion limit).  TPU truth lies between.
+                totals["hbm_bytes"] += mult * (out_b + in_b)
+                totals["hbm_bytes_out"] += mult * out_b
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                in_b = 0
+                for o in ins.operands:
+                    src = _find(comps[comp_name], o)
+                    if src is not None:
+                        b, _ = _type_bytes_elems(src.type_str)
+                        in_b += b
+                axes, gsz = _replica_group_axes(ins.attrs, axis_sizes)
+                # ring wire cost: AR moves ~2N(K-1)/K, AG/RS/A2A ~N(K-1)/K
+                k = max(gsz, 2)
+                ring = (k - 1) / k
+                factor = 2.0 * ring if base == "all-reduce" else ring
+                totals["wire_bytes"] += mult * in_b * factor
+                totals["collectives"][base]["bytes"] += mult * in_b
+                totals["collectives"][base]["count"] += mult
+                totals["per_axis_bytes"][axes] += mult * in_b
+                totals["top_collectives"].append(
+                    {"op": base, "bytes": in_b, "mult": mult,
+                     "axes": axes, "group_size": gsz,
+                     "comp": comp_name})
+
+    walk("__entry__", 1.0)
+    totals["collectives"] = {k: v for k, v in totals["collectives"].items()}
+    totals["per_axis_bytes"] = dict(totals["per_axis_bytes"])
+    totals["collective_bytes_total"] = sum(
+        v["bytes"] for v in totals["collectives"].values())
+    totals["top_collectives"] = sorted(
+        totals["top_collectives"], key=lambda d: -d["bytes"] * d["mult"]
+    )[:24]
+    return totals

@@ -1,0 +1,80 @@
+"""Paper reproductions: Table II + Figs. 2, 3, 4 (one function per table).
+
+Each returns a list of CSV rows: (name, us_per_call, derived...).
+``us_per_call`` is the measured wall time of one global round; ``derived``
+carries the reproduction quantity (final accuracy / loss / bits).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.fed_runner import FedBenchCfg, run_fed
+from repro.core import signs
+
+METHODS = ["hier_sgd", "hier_local_qsgd", "hier_signsgd",
+           "dc_hier_signsgd"]
+
+
+def table2_uplink_cost(d: int = 51008, t_e: int = 15):
+    """Table II: device->edge uplink bits per global round."""
+    rows = []
+    base = signs.uplink_bits("hier_sgd", d, t_e)
+    for m in METHODS:
+        bits = signs.uplink_bits(m, d, t_e)
+        rows.append((f"table2/{m}", 0.0,
+                     f"bits={bits} ratio_vs_fp32={base / bits:.1f}x"))
+    return rows
+
+
+def fig2_accuracy(seeds=(0, 1), rounds=8):
+    """Fig. 2: test accuracy of the 4 methods, IID and non-IID."""
+    rows = []
+    for iid in (False, True):
+        for m in METHODS:
+            accs, wall = [], []
+            for s in seeds:
+                r = run_fed(FedBenchCfg(method=m, iid=iid, seed=s,
+                                        rounds=rounds))
+                accs.append(r["acc"][-1])
+                wall.append(r["wall_s_per_round"])
+            tag = "iid" if iid else "noniid"
+            rows.append((f"fig2/{tag}/{m}", np.mean(wall) * 1e6,
+                         f"final_acc={np.mean(accs):.4f}"))
+    return rows
+
+
+def fig3_te_sweep(te_values=(5, 15, 30), seeds=(0,), rounds=6):
+    """Fig. 3: effect of T_E on training loss, DC (solid) vs plain."""
+    rows = []
+    for iid in (False, True):
+        for te in te_values:
+            for m in ("hier_signsgd", "dc_hier_signsgd"):
+                finals, wall = [], []
+                for s in seeds:
+                    r = run_fed(FedBenchCfg(method=m, iid=iid, t_e=te,
+                                            seed=s, rounds=rounds))
+                    finals.append(r["loss"][-1])
+                    wall.append(r["wall_s_per_round"])
+                tag = "iid" if iid else "noniid"
+                rows.append((f"fig3/{tag}/te{te}/{m}",
+                             np.mean(wall) * 1e6,
+                             f"final_loss={np.mean(finals):.4f}"))
+    return rows
+
+
+def fig4_rho_sweep(rhos=(0.0, 0.1, 0.2, 0.5, 1.0), seeds=(0,), rounds=8):
+    """Fig. 4: sensitivity to the correction strength rho (T_E=15)."""
+    rows = []
+    for rho in rhos:
+        finals, wall = [], []
+        for s in seeds:
+            r = run_fed(FedBenchCfg(method="dc_hier_signsgd", rho=rho,
+                                    iid=False, t_e=15, seed=s,
+                                    rounds=rounds))
+            finals.append(r["loss"][-1])
+            wall.append(r["wall_s_per_round"])
+        rows.append((f"fig4/rho{rho}", np.mean(wall) * 1e6,
+                     f"final_loss={np.mean(finals):.4f}"))
+    return rows

@@ -1,0 +1,93 @@
+"""Render the dry-run + roofline reports as the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src:. python -m benchmarks.report_md [--tag baseline]
+        > reports/roofline_baseline.md
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import roofline
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(tag: str):
+    rows = ["| arch | shape | mesh | phase | params | bytes/dev (args) | "
+            "bytes/dev (temp) | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for cell in roofline.load_cells(tag):
+        if cell.get("skipped"):
+            rows.append(
+                f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "
+                f"SKIP | - | - | - | - |")
+            continue
+        for ph, r in cell["phases"].items():
+            mem = r.get("memory", {})
+            rows.append(
+                f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "
+                f"{ph} | {cell['params']/1e9:.1f}B | "
+                f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+                f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+                f"{r.get('compile_s', '-')} |")
+    return "\n".join(rows)
+
+
+def roofline_table(tag: str, t_e: int = 15):
+    from repro import configs
+    from repro.models.config import SHAPES
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s |"
+            " dominant | roofline frac | useful-FLOPs ratio | "
+            "data-axis B/dev | model-axis B/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for cell in roofline.load_cells(tag):
+        r = roofline.analyze_cell(cell, t_e)
+        if r is None:
+            rows.append(f"| {cell['arch']} | {cell['shape']} | "
+                        f"{cell['mesh']} | - | - | - | SKIPPED | - | - | "
+                        f"- | - |")
+            continue
+        cfg = configs.get_config(cell["arch"])
+        shape = SHAPES[cell["shape"]]
+        mf = roofline.model_flops(cfg, shape, cfg.active_param_count())
+        hlo_global = r["compute_s"] * roofline.PEAK_FLOPS * r["chips"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        pab = r["per_axis_bytes"]
+        data_b = sum(v for k, v in pab.items() if "data" in k)
+        model_b = sum(v for k, v in pab.items() if "model" in k)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.3f} | {useful:.3f} | "
+            f"{fmt_bytes(data_b)} | {fmt_bytes(model_b)} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--section", default="both",
+                    choices=["both", "dryrun", "roofline"])
+    args = ap.parse_args()
+    if args.section in ("both", "dryrun"):
+        print("### Dry-run memory/compile table\n")
+        print(dryrun_table(args.tag))
+        print()
+    if args.section in ("both", "roofline"):
+        print("### Roofline terms (per chip, per step; train cells are "
+              "T_E-amortized)\n")
+        print(roofline_table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

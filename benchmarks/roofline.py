@@ -1,0 +1,158 @@
+"""Roofline analysis from the dry-run reports (deliverable g).
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s  (pod axis rides DCN in reality; we price
+                                   it at ICI rate and note the caveat --
+                                   its bytes are 1/T_E-amortized anyway)
+
+The SPMD HLO module is per-device, so analyzer outputs are already
+per-chip:
+    compute_term    = flops / 197e12            [s]
+    memory_term     = hbm_bytes / 819e9         [s]
+    collective_term = collective_bytes / 50e9   [s]
+
+For train cells the per-step cost amortizes the round structure:
+    per_step = ((T_E - 1) * local_step + sync_step) / T_E
+
+``roofline fraction`` = compute_term / max(all terms): 1.0 means the cell
+is perfectly compute-bound at peak; the dominant term names the
+bottleneck the perf loop attacks (EXPERIMENTS.md Sec. Perf).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[1] / "reports" / \
+    "dryrun"
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def _terms(h: dict) -> dict:
+    return {
+        "compute_s": h["flops"] / PEAK_FLOPS,
+        "memory_s": h["hbm_bytes"] / HBM_BW,
+        "collective_s": h["collective_bytes_total"] / ICI_BW,
+        "per_axis_bytes": h.get("per_axis_bytes", {}),
+    }
+
+
+def _combine_round(local: dict, sync: dict, t_e: int) -> dict:
+    out = {}
+    for k in ("compute_s", "memory_s", "collective_s"):
+        out[k] = ((t_e - 1) * local[k] + sync[k]) / t_e
+    out["per_axis_bytes"] = {
+        a: ((t_e - 1) * local["per_axis_bytes"].get(a, 0.0)
+            + sync["per_axis_bytes"].get(a, 0.0)) / t_e
+        for a in set(local["per_axis_bytes"]) | set(
+            sync["per_axis_bytes"])}
+    return out
+
+
+def analyze_cell(cell: dict, t_e: int = 15) -> dict | None:
+    if cell.get("skipped"):
+        return None
+    phases = cell["phases"]
+    if "local_step" in phases:
+        local = _terms(phases["local_step"]["hlo"])
+        sync = _terms(phases["sync_step"]["hlo"])
+        terms = _combine_round(local, sync, t_e)
+        kind = "train"
+    else:
+        ph = next(iter(phases.values()))
+        terms = _terms(ph["hlo"])
+        kind = next(iter(phases))
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    bound = max(terms["compute_s"], terms["memory_s"],
+                terms["collective_s"])
+    chips = MESH_CHIPS[cell["mesh"]]
+    # MODEL_FLOPS = 6 * N(_active) * tokens, global; HLO flops are per-chip
+    n_params = cell.get("params") or 0
+    out = {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": kind,
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "per_axis_bytes": terms["per_axis_bytes"],
+        "dominant": dominant.replace("_s", ""),
+        "roofline_fraction": (terms["compute_s"] / bound) if bound else 0.0,
+        "step_time_bound_s": bound,
+        "chips": chips,
+        "params": n_params,
+    }
+    return out
+
+
+def model_flops(arch_cfg, shape, n_params_active: int) -> float:
+    """6 * N_active * D (training tokens) -- global, per step."""
+    if shape.kind != "train":
+        return 2.0 * n_params_active * shape.global_batch * (
+            shape.seq_len if shape.kind == "prefill" else 1)
+    return 6.0 * n_params_active * shape.global_batch * shape.seq_len
+
+
+_PARAM_CACHE: dict = {}
+
+
+def exact_params(arch_name: str) -> int:
+    """Exact parameter count from abstract init shapes (the stored
+    'params' field of early reports hit an int32 overflow)."""
+    if arch_name not in _PARAM_CACHE:
+        import math
+        import jax
+        from repro import configs
+        from repro.models import build as mbuild
+        cfg = configs.get_config(arch_name)
+        arch = mbuild.make_archdef(cfg, 16)
+        shapes = jax.eval_shape(lambda r: mbuild.init_params(arch, r),
+                                jax.random.PRNGKey(0))
+        _PARAM_CACHE[arch_name] = sum(
+            math.prod(a.shape) for a in jax.tree.leaves(shapes))
+    return _PARAM_CACHE[arch_name]
+
+
+def load_cells(tag: str = "baseline", report_dir: pathlib.Path | None = None):
+    rd = report_dir or REPORT_DIR
+    cells = []
+    for f in sorted(rd.glob(f"{tag}.*.json")):
+        cell = json.loads(f.read_text())
+        if not cell.get("skipped"):
+            cell["params"] = exact_params(cell["arch"])
+        cells.append(cell)
+    return cells
+
+
+def roofline_rows(tag: str = "baseline", t_e: int = 15):
+    """CSV rows for benchmarks.run + the EXPERIMENTS.md table."""
+    from repro import configs
+    from repro.models.config import SHAPES
+    rows = []
+    for cell in load_cells(tag):
+        r = analyze_cell(cell, t_e)
+        if r is None:
+            rows.append((f"roofline/{cell['arch']}/{cell['shape']}/"
+                         f"{cell['mesh']}", 0.0,
+                         f"SKIPPED: {cell['skip_reason'][:60]}"))
+            continue
+        cfg = configs.get_config(cell["arch"])
+        shape = SHAPES[cell["shape"]]
+        mf = model_flops(cfg, shape, cfg.active_param_count())
+        hlo_global = r["compute_s"] * PEAK_FLOPS * r["chips"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["step_time_bound_s"] * 1e6,
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.4f}s dom={r['dominant']} "
+            f"roofline_frac={r['roofline_fraction']:.3f} "
+            f"useful_flops_ratio={useful:.3f}"))
+    return rows

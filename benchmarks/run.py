@@ -1,0 +1,64 @@
+"""Benchmark entry point: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV and mirrors it to
+reports/bench_results.csv.
+
+  table2    device->edge uplink bits per round  (paper Table II)
+  fig2      4-method accuracy, IID & non-IID    (paper Fig. 2)
+  fig3      T_E sweep, DC vs plain              (paper Fig. 3)
+  fig4      rho sensitivity at T_E=15           (paper Fig. 4)
+  roofline  3-term roofline per dry-run cell    (deliverable g)
+
+Flags: ``--only fig2`` to run a subset; ``--fast`` shrinks seeds/rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "table2", "fig2", "fig3", "fig4",
+                             "roofline"])
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "src"))
+    from benchmarks import paper_figs, roofline
+
+    rows = []
+    want = lambda k: args.only in ("all", k)
+    if want("table2"):
+        rows += paper_figs.table2_uplink_cost()
+    if want("fig2"):
+        rows += paper_figs.fig2_accuracy(
+            seeds=(0,) if args.fast else (0, 1))
+    if want("fig3"):
+        rows += paper_figs.fig3_te_sweep(
+            te_values=(5, 15) if args.fast else (5, 15, 30))
+    if want("fig4"):
+        rows += paper_figs.fig4_rho_sweep(
+            rhos=(0.0, 0.2, 1.0) if args.fast else
+            (0.0, 0.1, 0.2, 0.5, 1.0))
+    if want("roofline"):
+        try:
+            rows += roofline.roofline_rows()
+        except Exception as e:
+            rows.append(("roofline/ERROR", 0.0, str(e)[:80]))
+
+    out = ["name,us_per_call,derived"]
+    for name, us, derived in rows:
+        out.append(f"{name},{us:.1f},{derived}")
+    csv = "\n".join(out)
+    print(csv)
+    rep = pathlib.Path(__file__).resolve().parents[1] / "reports"
+    rep.mkdir(exist_ok=True)
+    (rep / "bench_results.csv").write_text(csv + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Async checkpointing: device->host transfer on the caller, serialization
+on a background thread, so training never blocks on disk I/O.
+
+Usage:
+    saver = AsyncSaver(ckpt_dir, keep=3)
+    saver.submit(step, state)     # returns immediately
+    saver.wait()                  # drain (end of run / before restore)
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+
+from repro.checkpoint import store
+
+
+class AsyncSaver:
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue()
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                store.save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            except Exception as e:  # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree):
+        if self._err:
+            raise self._err
+        # synchronous device->host copy (cheap vs serialization), then
+        # hand off to the writer thread.
+        host = jax.tree.map(lambda x: jax.device_get(x), tree)
+        self._q.put((step, host))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join()

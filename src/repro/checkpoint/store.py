@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpoint store (atomic, integrity-checked, keep-k).
+
+Layout per checkpoint:
+    <dir>/step_<N>.tmp-<pid>/   (written)   ->  <dir>/step_<N>/  (renamed)
+        manifest.json           {step, tree structure, per-file crc32}
+        arrays.npz              flat leaves (key = leaf path)
+    <dir>/LATEST                text file with the newest complete step
+
+Atomicity: everything is written into a tmp dir and os.rename'd into
+place (POSIX-atomic), LATEST updated last; a crash mid-write can never
+corrupt an existing checkpoint.  ``restore_latest`` verifies CRCs and
+falls back to the previous checkpoint if the newest is damaged --
+together with the driver's retry loop this is the node-failure story
+(DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def _is_prng_key(x) -> bool:
+    try:
+        return jnp.issubdtype(x.dtype, jax.dtypes.prng_key)
+    except Exception:
+        return False
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if _is_prng_key(leaf):
+            leaf = jax.random.key_data(leaf)   # typed key -> uint32 payload
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":              # bfloat16: no numpy dtype --
+            arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+        out[key] = arr                         # restore casts back
+    return out, treedef
+
+
+def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
+         keep: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:010d}"
+    tmp = ckpt_dir / f"step_{step:010d}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    arrays, _ = _flatten(tree)
+    npz_path = tmp / "arrays.npz"
+    np.savez(npz_path, **arrays)
+    crc = zlib.crc32(npz_path.read_bytes())
+    manifest = {
+        "step": step,
+        "crc32": crc,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    (ckpt_dir / "LATEST.tmp").write_text(str(step))
+    os.rename(ckpt_dir / "LATEST.tmp", ckpt_dir / "LATEST")
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob(
+        "step_*") if p.is_dir() and ".tmp" not in p.name)
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:010d}", ignore_errors=True)
+
+
+def available_steps(ckpt_dir: str | pathlib.Path) -> list[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob(
+        "step_*") if p.is_dir() and ".tmp" not in p.name)
+
+
+def _verify(path: pathlib.Path) -> bool:
+    try:
+        manifest = json.loads((path / "manifest.json").read_text())
+        crc = zlib.crc32((path / "arrays.npz").read_bytes())
+        return crc == manifest["crc32"]
+    except Exception:
+        return False
+
+
+def restore(ckpt_dir: str | pathlib.Path, step: int,
+            like: PyTree) -> PyTree:
+    """Restore into the structure (and shardings) of ``like``."""
+    path = pathlib.Path(ckpt_dir) / f"step_{step:010d}"
+    if not _verify(path):
+        raise IOError(f"checkpoint {path} failed integrity check")
+    data = np.load(path / "arrays.npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = SEP.join(str(getattr(x, "key", getattr(x, "idx", x)))
+                       for x in p)
+        arr = data[key]
+        if _is_prng_key(leaf):
+            arr = jax.random.wrap_key_data(jnp.asarray(arr))
+        elif hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
+            arr = jax.device_put(jnp.asarray(arr).astype(leaf.dtype),
+                                 leaf.sharding)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str | pathlib.Path, like: PyTree
+                   ) -> tuple[int, PyTree] | None:
+    """Newest intact checkpoint (skipping corrupted ones), or None."""
+    for step in reversed(available_steps(ckpt_dir)):
+        path = pathlib.Path(ckpt_dir) / f"step_{step:010d}"
+        if _verify(path):
+            return step, restore(ckpt_dir, step, like)
+    return None

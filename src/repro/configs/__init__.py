@@ -1,0 +1,63 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``get_smoke(name)``.
+
+Each module defines CONFIG (the exact assigned configuration) and SMOKE (a
+reduced same-family variant for CPU tests).  ``ARCH_NAMES`` is the assigned
+10-arch pool; ``shape_applicable`` encodes the skip rules from DESIGN.md
+Sec. 4 (long_500k only for sub-quadratic archs; decode only for archs with
+a decoder).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import LMConfig, SHAPES, ShapeCfg
+
+ARCH_NAMES = [
+    "arctic_480b",
+    "deepseek_v3_671b",
+    "whisper_base",
+    "internvl2_76b",
+    "stablelm_3b",
+    "gemma3_12b",
+    "gemma3_1b",
+    "mistral_large_123b",
+    "zamba2_2p7b",
+    "xlstm_350m",
+]
+
+# accept dashed external ids too
+_ALIASES = {n.replace("_", "-").replace("p", "."): n for n in ARCH_NAMES}
+
+
+def _module(name: str):
+    name = name.replace("-", "_").replace(".", "p")
+    if name not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> LMConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> LMConfig:
+    return _module(name).SMOKE
+
+
+def shape_applicable(cfg: LMConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch: no decode step"
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sub-quadratic attention (DESIGN.md Sec. 4)")
+    return True, ""
+
+
+def all_cells():
+    """Yield (arch_name, shape_name, applicable, reason) for all 40 cells."""
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            yield a, s.name, ok, why

@@ -1,0 +1,136 @@
+"""Per-device parameter lifting: master [P, ...] -> device copies [P, D, ...].
+
+Two regimes (DESIGN.md Sec. 5):
+
+* ``broadcast_devices`` (replicated / gathered-ZeRO regime, small-to-mid
+  archs): a plain differentiable broadcast with a sharding constraint.  The
+  train step differentiates w.r.t. the *device copies*, so per-device
+  gradients are ordinary JAX grads and all sign/vote/EF logic is explicit
+  post-grad code (``repro.core.hier``).
+
+* ``fsdp_lift`` (FSDP regime, 76B-671B archs): a ``custom_vjp`` whose
+  forward all-gathers the layer shard into per-device copies and whose
+  BACKWARD runs the paper's compression: per-device (corrected) sign ->
+  1-bit vote transport over ``data`` -> scatter of the per-pod vote back
+  onto the owning shard.  The "gradient" that autodiff returns for the
+  master shard is therefore the majority vote s~_q (or the full-precision
+  weighted mean for the HierSGD baseline / anchor passes).  This fuses
+  compression into backprop -- the per-layer vote of layer i overlaps with
+  the backward of layer i-1 -- and never materializes a full-model
+  per-device gradient (which at 671B x 16 devices would be impossible).
+
+The lifted copies are bitwise identical across devices; XLA keeps one copy
+per data slice because of the explicit [P, D, ...] -> (pod, data, *tp)
+constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import signs, votes
+from repro.core.topology import Topology
+
+PyTree = Any
+
+
+def _dev_shape(w: jax.Array, d: int):
+    return w.shape[:1] + (d,) + w.shape[1:]
+
+
+def broadcast_devices(topo: Topology, tree: PyTree, compute_specs: PyTree,
+                      dtype=None) -> PyTree:
+    """[P, *leaf] master -> [P, D, *leaf] device copies (differentiable).
+
+    compute_specs: per-leaf PartitionSpec for the *leaf* dims (TP layout).
+    """
+    d = topo.devices_per_pod
+
+    def lift(w, spec):
+        wd = jnp.broadcast_to(w[:, None], _dev_shape(w, d))
+        if dtype is not None and jnp.issubdtype(w.dtype, jnp.floating):
+            wd = wd.astype(dtype)
+        return topo.constrain(wd, P(topo.pod_axis, topo.data_axis, *spec))
+
+    return jax.tree.map(lift, tree, compute_specs,
+                        is_leaf=lambda n: n is None)
+
+
+@dataclasses.dataclass(frozen=True)
+class LiftCfg:
+    """Static configuration for the FSDP lift (closed over, not traced)."""
+    topo: Topology
+    transport: str = "ag_packed"     # ag_packed | ar_int8 | wmean
+    rho: float = 0.2
+    compute_dtype: Any = jnp.bfloat16
+
+
+def fsdp_lift(cfg: LiftCfg, w: jax.Array, delta: jax.Array,
+              master_spec: P, compute_spec: P, *,
+              maskf: jax.Array, devwf: jax.Array) -> jax.Array:
+    """Lift one master leaf [P, *leaf] (data-sharded) to [P, D, *leaf].
+
+    maskf:  [P, D] float voter mask (1.0 = vote counted).
+    devwf:  [P, D] float device weights |D_qk|/D_q (wmean transport only).
+    master_spec / compute_spec: specs for the *leaf* dims of the master
+    (typically containing 'data' -> ZeRO sharding) and of the lifted copy.
+
+    Backward: cotangent [P, D, *leaf] = true per-device gradients ->
+    transport -> per-pod direction [P, *leaf], re-constrained to the master
+    layout (a reduce-scatter under FSDP).
+    """
+    topo = cfg.topo
+    d = topo.devices_per_pod
+    dev_spec = P(topo.pod_axis, topo.data_axis, *compute_spec)
+    pod_master_spec = P(topo.pod_axis, *master_spec)
+    leaf_spec_c = P(*compute_spec)
+    wdtype = w.dtype  # static (closed over; dtypes are not traced)
+
+    @jax.custom_vjp
+    def lift(w, delta, maskf, devwf):
+        wd = jnp.broadcast_to(w[:, None], _dev_shape(w, d))
+        return topo.constrain(wd.astype(cfg.compute_dtype), dev_spec)
+
+    def lift_fwd(w, delta, maskf, devwf):
+        return lift(w, delta, maskf, devwf), (delta, maskf, devwf)
+
+    def lift_bwd(res, g_dev):
+        delta, maskf, devwf = res
+        if cfg.transport == "wmean":
+            direction = votes.weighted_mean_dev(
+                topo, g_dev.astype(jnp.float32), devwf)
+        else:
+            u = g_dev
+            if cfg.rho:
+                # gather the (stale) correction alongside -- pre-sign, per
+                # the paper: sgn(g_qk + rho * delta_q).
+                d_full = jnp.broadcast_to(
+                    delta[:, None], _dev_shape(delta, d))
+                d_full = topo.constrain(
+                    d_full.astype(g_dev.dtype), dev_spec)
+                u = g_dev + cfg.rho * d_full
+            s = signs.sgn(u)
+            mask = (maskf > 0.5)
+            direction = votes.majority_vote_dev(
+                topo, s, mask, cfg.transport, leaf_spec_c)
+        direction = topo.constrain(
+            direction.astype(wdtype), pod_master_spec)
+        return (direction, jnp.zeros_like(delta),
+                jnp.zeros_like(maskf), jnp.zeros_like(devwf))
+
+    lift.defvjp(lift_fwd, lift_bwd)
+    return lift(w, delta, maskf, devwf)
+
+
+def fsdp_lift_tree(cfg: LiftCfg, tree: PyTree, delta_tree: PyTree,
+                   master_specs: PyTree, compute_specs: PyTree, *,
+                   maskf: jax.Array, devwf: jax.Array) -> PyTree:
+    return jax.tree.map(
+        lambda w, dl, ms, cs: fsdp_lift(cfg, w, dl, ms, cs,
+                                        maskf=maskf, devwf=devwf),
+        tree, delta_tree, master_specs, compute_specs,
+        is_leaf=lambda n: n is None)

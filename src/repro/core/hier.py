@@ -1,0 +1,395 @@
+"""Distributed HierSignSGD / DC-HierSignSGD train steps (the paper's core).
+
+Step semantics (bit-equivalent to Algorithms 1/2, validated against
+``repro.core.ref_fed``): each ``train_step`` call is one local step tau.
+At a round boundary (step % T_E == 0) a prologue first runs
+
+  1. cloud aggregation  v_q <- sum_q (D_q/N) v_q   (pod-axis all-reduce) --
+     this is Alg. 1/2's end-of-round step folded into the next step's
+     prologue (identical trajectory, single uniform step function), and
+  2. (DC only) the anchor pass: c_q = sum_k (|D_qk|/D_q) grad f_qk(w),
+     c = sum_q (D_q/N) c_q, delta_q = c - c_q.  With
+     ``anchor_staleness=1`` (paper's pipelined variant) the freshly
+     computed delta is *staged* and the previous round's delta is used, so
+     devices at round t correct with c^(t-1) - c_q^(t-1) exactly as in
+     Alg. 2; ``anchor_staleness=0`` is the fresh variant (extra cross-pod
+     sync before local steps, no staging buffer).
+
+Then the local step: per-device grads -> (+ rho*delta, + EF residual) ->
+sign -> majority vote over the ``data`` axis -> v_q <- v_q - mu * vote.
+
+Methods: hier_signsgd | dc_hier_signsgd | hier_sgd | hier_local_qsgd,
+plus beyond-paper options (error feedback, sign-momentum) in the
+replicated regime.
+
+Regimes:
+  * replicated: per-device grads are explicit ([P, D, ...] arrays) --
+    supports every method + EF + momentum.
+  * fsdp: the vote happens inside backprop via ``fsdp_lift`` and autodiff
+    returns per-pod directions directly (sign methods + hier_sgd).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import device_axis, signs, votes
+from repro.core.device_axis import LiftCfg
+from repro.core.topology import Topology
+
+PyTree = Any
+
+SIGN_METHODS = ("hier_signsgd", "dc_hier_signsgd")
+ALL_METHODS = SIGN_METHODS + ("hier_sgd", "hier_local_qsgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoConfig:
+    method: str = "dc_hier_signsgd"
+    mu: float = 1e-3                  # sign-step size
+    mu_sgd: float = 0.1               # full-precision baseline step size
+    t_e: int = 15                     # local steps per global round
+    rho: float = 0.2                  # correction strength (DC)
+    transport: str = "ag_packed"      # ag_packed (faithful) | ar_int8 (optimized)
+    anchor_staleness: int = 1         # 1 = paper's pipelined delta, 0 = fresh
+    error_feedback: bool = False      # beyond-paper (replicated regime only)
+    momentum: float = 0.0             # beyond-paper signum-style momentum
+    compute_dtype: Any = jnp.bfloat16
+    master_dtype: Any = jnp.float32
+    delta_dtype: Any = jnp.bfloat16
+    decay: bool = False               # mu_t = mu / sqrt(round + 1)
+
+    @property
+    def is_sign(self) -> bool:
+        return self.method in SIGN_METHODS
+
+    @property
+    def is_dc(self) -> bool:
+        return self.method == "dc_hier_signsgd"
+
+
+class TrainState(NamedTuple):
+    step: jax.Array                   # global step counter (t * T_E + tau)
+    params: PyTree                    # [P, ...] per-pod edge models v_q
+    delta: PyTree                     # [P, ...] active correction c - c_q
+    delta_next: PyTree | None         # staged delta (anchor_staleness=1)
+    ef: PyTree | None                 # [P, D, ...] error-feedback residual
+    mom: PyTree | None                # [P, D, ...] sign-momentum buffer
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    """What a model must provide to train under the hierarchy.
+
+    loss(params, batch, rng) -> scalar  -- mean loss of ONE replica on ONE
+        device batch (no leading P/D dims); cotangents through it are the
+        paper's per-device gradients.
+    compute_specs -- per-leaf PartitionSpec of the *leaf* dims during
+        compute (TP layout).
+    master_specs  -- per-leaf PartitionSpec of the master storage (equal to
+        compute_specs in the replicated regime; includes 'data' for FSDP).
+    loss_master(params, delta, batch, rngs, lift) -> (sum_loss, aux) --
+        FSDP regime only: model applies ``lift`` per layer inside its scan.
+    """
+    loss: Callable[[PyTree, Any, jax.Array], jax.Array] | None
+    compute_specs: PyTree
+    master_specs: PyTree
+    loss_master: Callable | None = None
+    param_mode: str = "replicated"    # replicated | fsdp
+
+
+def _bcast_pd(topo: Topology, tree: PyTree, specs: PyTree, dtype) -> PyTree:
+    return device_axis.broadcast_devices(topo, tree, specs, dtype)
+
+
+def _tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
+                   sync: str = "cond"):
+    """Build (init_fn, train_step).
+
+    train_step(state, batch, edge_weights, dev_weights, dev_mask)
+        -> (state, metrics)
+
+    batch: {'train': pytree of [P, D, b, ...], 'anchor': optional same}.
+    edge_weights: [P] = D_q/N;  dev_weights: [P, D] = |D_qk|/D_q;
+    dev_mask: [P, D] float in {0,1} -- vote quorum / straggler mask.
+
+    sync: 'cond'  -- prologue under lax.cond on step % T_E (the driver);
+          'always'/'never' -- statically include/skip the prologue (used by
+          the dry-run so cost_analysis sees straight-line programs: a
+          global round costs (T_E-1) x never + 1 x always).
+    """
+    t_e = algo.t_e
+    fsdp = bundle.param_mode == "fsdp"
+    vmap2 = lambda f: jax.vmap(jax.vmap(f))
+
+    # ---------------- gradient machinery -------------------------------
+    def per_device_grads(params, batch, rngs):
+        """Replicated regime: explicit [P, D, ...] per-device grads."""
+        v_dev = _bcast_pd(topo, params, bundle.compute_specs,
+                          algo.compute_dtype)
+
+        def tot(vd):
+            losses = vmap2(bundle.loss)(vd, batch, rngs)
+            return jnp.sum(losses), losses
+
+        g_dev, losses = jax.grad(tot, has_aux=True)(v_dev)
+        return g_dev, losses
+
+    def pod_direction_fsdp(params, delta, batch, rngs, maskf, devwf,
+                           transport, rho):
+        """FSDP regime: autodiff returns per-pod directions (vote/wmean)."""
+        cfg = LiftCfg(topo=topo, transport=transport, rho=rho,
+                      compute_dtype=algo.compute_dtype)
+        lift = functools.partial(device_axis.fsdp_lift_tree, cfg,
+                                 maskf=maskf, devwf=devwf)
+
+        def tot(p):
+            return bundle.loss_master(p, delta, batch, rngs, lift)
+
+        direction, losses = jax.grad(tot, has_aux=True)(params)
+        return direction, losses
+
+    def pod_avg(tree, edge_w):
+        return jax.tree.map(
+            lambda v: votes.pod_weighted_average(topo, v, edge_w), tree)
+
+    # ---------------- anchor (DC) pass ----------------------------------
+    def compute_delta(params, delta_shaped, batch, rngs, edge_w, dev_w,
+                      maskf):
+        if fsdp:
+            # delta_shaped: values ignored (rho=0.0 in the anchor pass);
+            # only its shapes matter to the model's lift plumbing.
+            c_q, _ = pod_direction_fsdp(params, delta_shaped, batch,
+                                        rngs, maskf, dev_w.astype(jnp.float32),
+                                        "wmean", 0.0)
+        else:
+            g_dev, _ = per_device_grads(params, batch, rngs)
+            c_q = jax.tree.map(
+                lambda g: votes.weighted_mean_dev(
+                    topo, g.astype(jnp.float32), dev_w), g_dev)
+        c = pod_avg(c_q, edge_w)
+        delta = jax.tree.map(lambda a, b: (a - b).astype(algo.delta_dtype),
+                             c, c_q)
+        return constrain_master(delta)
+
+    def constrain_master(tree):
+        return jax.tree.map(
+            lambda x, s: topo.constrain(x, topo.pod_spec(*s)),
+            tree, bundle.master_specs)
+
+    # ---------------- local step direction ------------------------------
+    def local_direction(state, params, delta, batch, rngs, dev_w, maskf):
+        """-> (direction [P,...], new_ef, new_mom, losses)."""
+        if fsdp:
+            transport = (algo.transport if algo.is_sign else "wmean")
+            rho = algo.rho if algo.is_dc else 0.0
+            direction, losses = pod_direction_fsdp(
+                params, delta, batch, rngs, maskf,
+                dev_w.astype(jnp.float32), transport, rho)
+            return direction, state.ef, state.mom, losses
+
+        g_dev, losses = per_device_grads(params, batch, rngs)
+        new_ef, new_mom = state.ef, state.mom
+
+        if algo.method == "hier_sgd":
+            direction = jax.tree.map(
+                lambda g: votes.weighted_mean_dev(
+                    topo, g.astype(jnp.float32), dev_w), g_dev)
+        elif algo.method == "hier_local_qsgd":
+            leaves, treedef = jax.tree.flatten(g_dev)
+            qleaves = []
+            for i, g in enumerate(leaves):
+                rr_pd = jax.vmap(jax.vmap(
+                    lambda k: jax.random.fold_in(k, i)))(rngs)
+                qleaves.append(jax.vmap(jax.vmap(signs.ternary_quantize))(
+                    g.astype(jnp.float32), rr_pd))
+            q_dev = treedef.unflatten(qleaves)
+            direction = jax.tree.map(
+                lambda g: votes.weighted_mean_dev(topo, g, dev_w), q_dev)
+        else:  # sign methods
+            u_dev = g_dev
+            if algo.momentum > 0.0:
+                new_mom = jax.tree.map(
+                    lambda m, g: algo.momentum * m
+                    + (1.0 - algo.momentum) * g.astype(m.dtype),
+                    state.mom, g_dev)
+                u_dev = new_mom
+            if algo.error_feedback:
+                u_dev = jax.tree.map(
+                    lambda u, e: u.astype(jnp.float32) + e, u_dev, state.ef)
+            if algo.is_dc:
+                d_dev = _bcast_pd(topo, delta, bundle.compute_specs, None)
+                u_dev = jax.tree.map(
+                    lambda u, dl: u + algo.rho * dl.astype(u.dtype),
+                    u_dev, d_dev)
+            s_dev = jax.tree.map(signs.sgn, u_dev)
+            if algo.error_feedback:
+                # e' = u - scale * s, scale = per-device mean |u|
+                def ef_upd(u, s):
+                    scale = jnp.mean(jnp.abs(u),
+                                     axis=tuple(range(2, u.ndim)),
+                                     keepdims=True)
+                    return (u - scale * s.astype(u.dtype)).astype(jnp.float32)
+                new_ef = jax.tree.map(ef_upd, u_dev, s_dev)
+            mask = maskf > 0.5
+            direction = jax.tree.map(
+                lambda s, cs: votes.majority_vote_dev(
+                    topo, s, mask, algo.transport, cs),
+                s_dev, bundle.compute_specs)
+        return direction, new_ef, new_mom, losses
+
+    # ---------------- the step ------------------------------------------
+    def train_step(state: TrainState, batch, edge_weights, dev_weights,
+                   dev_mask):
+        rng, r_local, r_anchor = jax.random.split(state.rng, 3)
+        pd = (topo.pods, topo.devices_per_pod)
+        rngs_l = jax.random.split(r_local, pd[0] * pd[1])
+        rngs_l = rngs_l.reshape(pd + rngs_l.shape[1:])
+        rngs_a = jax.random.split(r_anchor, pd[0] * pd[1])
+        rngs_a = rngs_a.reshape(pd + rngs_a.shape[1:])
+        maskf = dev_mask.astype(jnp.float32)
+        anchor_batch = batch.get("anchor", batch["train"])
+
+        # -- prologue: cloud aggregation + anchor refresh at round start
+        def prologue(op):
+            params, delta, delta_next = op
+            params = pod_avg(params, edge_weights)
+            params = constrain_master(params)
+            if algo.is_dc:
+                fresh = compute_delta(params, delta, anchor_batch, rngs_a,
+                                      edge_weights, dev_weights, maskf)
+                if algo.anchor_staleness == 1:
+                    delta, delta_next = delta_next, fresh
+                else:
+                    delta = fresh
+            return params, delta, delta_next
+
+        def no_op(op):
+            return op
+
+        operand = (state.params, state.delta, state.delta_next)
+        if sync == "cond":
+            params, delta, delta_next = jax.lax.cond(
+                state.step % t_e == 0, prologue, no_op, operand)
+        elif sync == "always":
+            params, delta, delta_next = prologue(operand)
+        else:  # 'never'
+            params, delta, delta_next = operand
+
+        # -- local sign step
+        direction, new_ef, new_mom, losses = local_direction(
+            state, params, delta, batch["train"], rngs_l, dev_weights, maskf)
+
+        mu = jnp.asarray(
+            algo.mu if algo.is_sign else algo.mu_sgd, algo.master_dtype)
+        if algo.decay:
+            rnd = (state.step // t_e).astype(algo.master_dtype)
+            mu = mu / jnp.sqrt(rnd + 1.0)
+        params = jax.tree.map(
+            lambda v, s: v - mu * s.astype(v.dtype), params, direction)
+        params = constrain_master(params)
+
+        new_state = TrainState(
+            step=state.step + 1, params=params, delta=delta,
+            delta_next=delta_next, ef=new_ef, mom=new_mom, rng=rng)
+        metrics = {
+            "loss": jnp.mean(losses.astype(jnp.float32)),
+            "loss_per_pod": jnp.mean(losses.astype(jnp.float32), axis=1),
+            "mu": mu,
+        }
+        return new_state, metrics
+
+    # ---------------- init ----------------------------------------------
+    def init_fn(params_single: PyTree, rng: jax.Array) -> TrainState:
+        """params_single: one replica's params (no leading dims)."""
+        p = topo.pods
+
+        def rep(x, s):
+            xp = jnp.broadcast_to(x[None], (p,) + x.shape)
+            return topo.constrain(
+                xp.astype(algo.master_dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else xp,
+                topo.pod_spec(*s))
+
+        params = jax.tree.map(rep, params_single, bundle.master_specs)
+        zeros_m = lambda dt: jax.tree.map(
+            lambda v: jnp.zeros_like(v, dtype=dt), params)
+        delta = constrain_master(zeros_m(algo.delta_dtype))
+        delta_next = (constrain_master(zeros_m(algo.delta_dtype))
+                      if (algo.is_dc and algo.anchor_staleness == 1) else None)
+        ef = mom = None
+        if not fsdp and algo.error_feedback:
+            ef = _bcast_pd(topo, zeros_m(jnp.float32),
+                           bundle.compute_specs, None)
+        if not fsdp and algo.momentum > 0.0:
+            mom = _bcast_pd(topo, zeros_m(jnp.float32),
+                            bundle.compute_specs, None)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          delta=delta, delta_next=delta_next, ef=ef,
+                          mom=mom, rng=rng)
+
+    return init_fn, train_step
+
+
+def make_global_round(topo: Topology, algo: AlgoConfig, bundle: ModelBundle):
+    """One fused global round: prologue + lax.scan over T_E local steps.
+
+    Used by the dry-run/benchmarks so the compiled artifact carries the
+    paper's true per-round cost (T_E one-bit local steps + one cloud sync +
+    one anchor exchange) with correct 1/T_E amortization.
+
+    batches: pytree of [T_E, P, D, b, ...].
+    """
+    init_fn, train_step = make_hier_step(topo, algo, bundle)
+
+    def global_round(state: TrainState, batches, edge_weights, dev_weights,
+                     dev_mask):
+        def body(st, batch_t):
+            st, metrics = train_step(st, {"train": batch_t}, edge_weights,
+                                     dev_weights, dev_mask)
+            return st, metrics["loss"]
+
+        state, losses = jax.lax.scan(body, state, batches)
+        return state, {"loss": jnp.mean(losses)}
+
+    return init_fn, global_round
+
+
+def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
+                    abstract_state: TrainState) -> TrainState:
+    """NamedSharding tree for a TrainState (dry-run / checkpoint layouts)."""
+    rep = topo.sharding(jax.sharding.PartitionSpec())
+
+    def master(tree):
+        return jax.tree.map(
+            lambda _, s: topo.sharding(topo.pod_spec(*s)),
+            tree, bundle.master_specs)
+
+    def dev(tree):
+        if tree is None:
+            return None
+        return jax.tree.map(
+            lambda _, s: topo.sharding(topo.dev_spec(*s)),
+            tree, bundle.compute_specs)
+
+    return TrainState(
+        step=rep,
+        params=master(abstract_state.params),
+        delta=master(abstract_state.delta),
+        delta_next=(master(abstract_state.delta_next)
+                    if abstract_state.delta_next is not None else None),
+        ef=dev(abstract_state.ef),
+        mom=dev(abstract_state.mom),
+        rng=rep,
+    )

@@ -1,0 +1,149 @@
+"""Reference (oracle) implementation of the paper's algorithms.
+
+A faithful, loop-over-clusters transcription of Algorithm 1 (HierSignSGD)
+and Algorithm 2 (DC-HierSignSGD), plus the two baselines the paper compares
+against (HierSGD and the Hier-Local-QSGD-style ternary-quantized variant).
+
+This module is the ground truth for the distributed implementation in
+``repro.core.hier`` (tested bit-wise equivalent on small problems) and the
+engine behind the paper-reproduction experiments (Figs. 2-4).
+
+Everything operates on flat parameter pytrees; per-device gradients come
+from a user-supplied ``grad_fn(params, device_batch, rng) -> grads`` and the
+loss surface is arbitrary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import signs
+
+PyTree = Any
+GradFn = Callable[[PyTree, Any, jax.Array], PyTree]
+
+
+@dataclasses.dataclass
+class HierConfig:
+    """Hyper-parameters shared by all hierarchical methods (paper Table I)."""
+    mu: float = 5e-3            # step-size (mu)
+    t_e: int = 15               # local steps per global round (T_E)
+    rho: float = 0.2            # correction strength (DC only)
+    method: str = "dc_hier_signsgd"  # hier_sgd | hier_local_qsgd | hier_signsgd | dc_hier_signsgd
+    mu_sgd: float = 1.0         # step-size for the full-precision baselines
+    decay: bool = False         # mu_t = mu0/sqrt(t+1) (paper's CIFAR setting)
+
+
+@dataclasses.dataclass
+class FedState:
+    """Cloud + per-edge state across global rounds."""
+    w: PyTree                         # global model w^(t)
+    delta: list[PyTree]               # per-edge correction c^(t-1) - c_q^(t-1)
+    round: int = 0
+
+
+def init_state(w0: PyTree, num_edges: int) -> FedState:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, w0)
+    return FedState(w=w0, delta=[zeros() for _ in range(num_edges)], round=0)
+
+
+def _tree_axpy(a: float, x: PyTree, y: PyTree) -> PyTree:
+    return jax.tree.map(lambda u, v: a * u + v, x, y)
+
+
+def _tree_weighted_sum(weights: Sequence[float], trees: Sequence[PyTree]) -> PyTree:
+    acc = jax.tree.map(lambda x: weights[0] * x, trees[0])
+    for wgt, t in zip(weights[1:], trees[1:]):
+        acc = jax.tree.map(lambda a, x: a + wgt * x, acc, t)
+    return acc
+
+
+def global_round(
+    state: FedState,
+    cfg: HierConfig,
+    grad_fn: GradFn,
+    batches: Sequence[Sequence[Any]],       # batches[q][k] -> iterator of T_E device batches
+    anchor_batches: Sequence[Sequence[Any]],  # anchor_batches[q][k] -> one batch per device
+    edge_weights: Sequence[float],          # D_q / N
+    device_weights: Sequence[Sequence[float]],  # |D_qk| / D_q
+    rng: jax.Array,
+    device_mask: Sequence[Sequence[bool]] | None = None,
+) -> FedState:
+    """Run one global round t (T_E local steps + cloud aggregation).
+
+    Transcribes Algorithm 2 exactly; Algorithm 1 is the rho=0 / no-anchor
+    special case; baselines replace the sign/vote with full-precision or
+    ternary-quantized averaging.
+    """
+    q_edges = len(batches)
+    mu = cfg.mu if cfg.method in ("hier_signsgd", "dc_hier_signsgd") else cfg.mu_sgd
+    if cfg.decay:
+        mu = mu / jnp.sqrt(state.round + 1.0)
+
+    new_delta = list(state.delta)
+    edge_models: list[PyTree] = []
+    anchors_cq: list[PyTree] = []
+
+    # ---- anchor gradients at w^(t) (DC only): c_q^(t) = sum_k w_qk grad f_qk(w)
+    if cfg.method == "dc_hier_signsgd":
+        for q in range(q_edges):
+            g_devs = []
+            for k in range(len(anchor_batches[q])):
+                rng, sub = jax.random.split(rng)
+                g_devs.append(grad_fn(state.w, anchor_batches[q][k], sub))
+            anchors_cq.append(_tree_weighted_sum(device_weights[q], g_devs))
+        c_glob = _tree_weighted_sum(edge_weights, anchors_cq)
+
+    # ---- T_E local steps per edge (paper: in parallel over q)
+    for q in range(q_edges):
+        v = state.w
+        delta_q = state.delta[q]
+        for tau in range(cfg.t_e):
+            g_devs = []
+            for k in range(len(batches[q])):
+                rng, sub = jax.random.split(rng)
+                g_devs.append(grad_fn(v, batches[q][k][tau], sub))
+
+            if cfg.method in ("hier_signsgd", "dc_hier_signsgd"):
+                # device-side (corrected) sign -> 1-bit uplink -> majority vote
+                def corrected_sign(g, d):
+                    if cfg.method == "dc_hier_signsgd":
+                        return signs.sgn(g + cfg.rho * d)
+                    return signs.sgn(g)
+                sign_devs = [
+                    jax.tree.map(corrected_sign, g, delta_q) for g in g_devs
+                ]
+                mask_q = None
+                if device_mask is not None:
+                    mask_q = jnp.asarray(device_mask[q], dtype=jnp.int32)
+                vote = jax.tree.map(
+                    lambda *s: signs.majority_vote(jnp.stack(s), mask_q, axis=0),
+                    *sign_devs,
+                )
+                v = jax.tree.map(lambda p, s: p - mu * s.astype(p.dtype), v, vote)
+            elif cfg.method == "hier_sgd":
+                g_edge = _tree_weighted_sum(device_weights[q], g_devs)
+                v = _tree_axpy(-mu, g_edge, v)
+            elif cfg.method == "hier_local_qsgd":
+                q_devs = []
+                for g in g_devs:
+                    rng, sub = jax.random.split(rng)
+                    leaves, treedef = jax.tree.flatten(g)
+                    subs = jax.random.split(sub, len(leaves))
+                    q_devs.append(treedef.unflatten([
+                        signs.ternary_quantize(l, r) for l, r in zip(leaves, subs)
+                    ]))
+                g_edge = _tree_weighted_sum(device_weights[q], q_devs)
+                v = _tree_axpy(-mu, g_edge, v)
+            else:
+                raise ValueError(cfg.method)
+        edge_models.append(v)
+        if cfg.method == "dc_hier_signsgd":
+            new_delta[q] = jax.tree.map(lambda c, cq: c - cq, c_glob, anchors_cq[q])
+
+    # ---- cloud aggregation: w^(t+1) = sum_q (D_q/N) v_q^(t, T_E)
+    w_next = _tree_weighted_sum(edge_weights, edge_models)
+    return FedState(w=w_next, delta=new_delta, round=state.round + 1)

@@ -1,0 +1,140 @@
+"""Sign-compression primitives (pure jnp reference ops).
+
+These are the coordinate-wise building blocks of HierSignSGD /
+DC-HierSignSGD (Kazemi et al., 2026):
+
+  * ``sgn``           -- the paper's element-wise sign operator (maps to {-1,+1}).
+  * ``pack_signs``    -- 1 bit/coordinate wire format (uint32 words), the
+                         faithful device->edge uplink payload.
+  * ``unpack_signs``  -- inverse of ``pack_signs``.
+  * ``majority_vote`` -- s_q = sgn(sum_k sgn(g_k)), with optional voter
+                         masking (straggler/fault quorum).
+  * ``ternary_quantize`` -- the unbiased stochastic ternary quantizer used
+                         by the Hier-Local-QSGD baseline (paper Sec. V-B).
+
+Conventions
+-----------
+``sgn(0) = +1`` so that every coordinate is representable in one bit.  Vote
+ties (possible with an even voter count, or with masked voters) therefore
+resolve to +1 deterministically; the packed and integer transports are
+bit-identical by construction (tested in tests/test_signs.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK_WIDTH = 32  # sign bits per uint32 word
+
+
+def sgn(x: jax.Array) -> jax.Array:
+    """Element-wise sign into {-1, +1} (int8); sgn(0) = +1."""
+    return jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def _pad_to_multiple(flat: jax.Array, m: int) -> jax.Array:
+    pad = (-flat.shape[-1]) % m
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.ones(flat.shape[:-1] + (pad,), flat.dtype)], axis=-1
+        )
+    return flat
+
+
+def packed_size(n: int) -> int:
+    """Number of uint32 words used to carry ``n`` sign bits."""
+    return (n + PACK_WIDTH - 1) // PACK_WIDTH
+
+
+def pack_signs(signs: jax.Array) -> jax.Array:
+    """Pack {-1,+1} signs into uint32 words along the last axis.
+
+    signs: (..., n) int8 in {-1, +1}  ->  (..., ceil(n/32)) uint32.
+    Positive sign -> bit 1.  Padding bits are 1 (+1 sign).
+    """
+    flat = _pad_to_multiple(signs, PACK_WIDTH)
+    bits = (flat > 0).astype(jnp.uint32)
+    bits = bits.reshape(bits.shape[:-1] + (-1, PACK_WIDTH))
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(words: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_signs`; returns (..., n) int8 in {-1,+1}."""
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (-1,))[..., :n]
+    return jnp.where(bits == 1, jnp.int8(1), jnp.int8(-1))
+
+
+def majority_vote(signs: jax.Array, mask: jax.Array | None = None,
+                  axis: int = 0) -> jax.Array:
+    """Edge-server majority vote  s = sgn(sum_k sgn_k)  over ``axis``.
+
+    signs: int8 {-1,+1} with voter axis ``axis``.
+    mask:  optional {0,1} per-voter weights broadcastable to ``signs``;
+           a masked-out voter abstains (contributes 0 to the tally).
+    Ties resolve to +1 (consistent with ``sgn``).
+    """
+    tally = signs.astype(jnp.int32)
+    if mask is not None:
+        m = jnp.asarray(mask)
+        if m.ndim < tally.ndim:   # [K] voter mask -> broadcast over leaf
+            m = m.reshape(m.shape + (1,) * (tally.ndim - m.ndim))
+        tally = tally * m.astype(jnp.int32)
+    return sgn(jnp.sum(tally, axis=axis).astype(jnp.float32))
+
+
+def majority_vote_packed(words: jax.Array, n: int,
+                         mask: jax.Array | None = None) -> jax.Array:
+    """Majority vote from bit-packed per-voter words.
+
+    words: (K, ceil(n/32)) uint32 -- one packed sign row per voter.
+    Returns (n,) int8 vote.  Equivalent to
+    ``majority_vote(unpack_signs(words, n), mask, axis=0)`` but computed via
+    bit-plane popcount (this is the faithful "edge receives K one-bit
+    uplinks and votes" path).
+    """
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)      # (K, w, 32)
+    bits = bits.reshape(words.shape[0], -1)[:, :n]           # (K, n)
+    if mask is not None:
+        m = mask.astype(jnp.int32).reshape(-1, 1)
+        pos = jnp.sum(bits.astype(jnp.int32) * m, axis=0)
+        k_eff = jnp.sum(m)
+    else:
+        pos = jnp.sum(bits, axis=0).astype(jnp.int32)
+        k_eff = words.shape[0]
+    # vote = sgn(2*pos - k_eff); ties (2*pos == k_eff) -> +1.
+    return jnp.where(2 * pos >= k_eff, jnp.int8(1), jnp.int8(-1))
+
+
+def ternary_quantize(x: jax.Array, rng: jax.Array) -> jax.Array:
+    """Unbiased stochastic ternary quantizer (paper eq. in Sec. V-B).
+
+    Q(x)_i = ||x||_2 * sign(x_i) with prob |x_i|/||x||_2, else 0; Q(0)=0.
+    E[Q(x)] = x.  Wire cost ~ sign bit + support bit per coordinate + one
+    32-bit scale (Table II row 'Hier-Local-QSGD').
+    """
+    norm = jnp.linalg.norm(x)
+    p = jnp.where(norm > 0, jnp.abs(x) / jnp.maximum(norm, 1e-30), 0.0)
+    keep = jax.random.uniform(rng, x.shape) < p
+    return jnp.where(keep, norm * jnp.sign(x), 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Wire-cost accounting (Table II of the paper), in bits per device per
+# global round, for a d-dimensional model and T_E local steps.
+# ---------------------------------------------------------------------------
+
+def uplink_bits(method: str, d: int, t_e: int) -> int:
+    """Device->edge uplink bits per global round (Table II)."""
+    if method == "hier_sgd":
+        return 32 * t_e * d
+    if method == "hier_local_qsgd":          # sign+support bits + scale
+        return t_e * (2 * d + 32)
+    if method == "hier_signsgd":
+        return t_e * d
+    if method == "dc_hier_signsgd":          # + one full-precision anchor
+        return t_e * d + 32 * d
+    raise ValueError(f"unknown method {method!r}")

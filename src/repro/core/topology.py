@@ -1,0 +1,75 @@
+"""Mesh topology description shared by every distributed component.
+
+The paper's hierarchy is mapped onto mesh axes (DESIGN.md Sec. 2):
+
+    device k   -> one slice along the ``data``  axis   (inner, 1-bit tier)
+    edge q     -> one slice along the ``pod``   axis   (outer, T_E tier)
+    cloud      -> reduction over the ``pod`` axis
+    TP/EP      -> the ``model`` axis (orthogonal to the paper's hierarchy)
+
+``Topology`` carries the mesh + axis names and provides PartitionSpec /
+sharding helpers so that core code never hard-codes axis names.  A
+single-pod mesh simply has ``pod_axis=None`` (P=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    mesh: Mesh
+    pod_axis: str | None = "pod"
+    data_axis: str = "data"
+    model_axis: str = "model"
+
+    @property
+    def pods(self) -> int:
+        if self.pod_axis is None:
+            return 1
+        return self.mesh.shape[self.pod_axis]
+
+    @property
+    def devices_per_pod(self) -> int:
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def model_shards(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    # -- spec builders -----------------------------------------------------
+    def pod_spec(self, *rest) -> P:
+        """Spec for per-edge state: leading pod dim + leaf dims."""
+        return P(self.pod_axis, *rest)
+
+    def dev_spec(self, *rest) -> P:
+        """Spec for per-(edge, device) state: [P, D, ...]."""
+        return P(self.pod_axis, self.data_axis, *rest)
+
+    def batch_spec(self, *rest) -> P:
+        """Global batch laid out as [P, D, local_b, ...]."""
+        return P(self.pod_axis, self.data_axis, *rest)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+    def constrain_tree(self, tree, spec_tree):
+        return jax.tree.map(
+            lambda x, s: self.constrain(x, s), tree, spec_tree,
+            is_leaf=lambda n: n is None)
+
+
+def single_device_topology() -> Topology:
+    """P=1, D=1, M=1 topology on the default device (tests / reference)."""
+    dev = jax.devices()[0]
+    mesh = Mesh(
+        __import__("numpy").asarray([dev]).reshape(1, 1),
+        ("data", "model"),
+    )
+    return Topology(mesh=mesh, pod_axis=None)

@@ -1,0 +1,123 @@
+"""Distributed majority-vote transports over the ``data`` (device) axis.
+
+Input: per-device quantities laid out ``[P, D, *leaf]`` (P pods = edges,
+D data slices = devices).  Output: per-pod vote ``[P, *leaf]``.
+
+Two wire formats (DESIGN.md Sec. 2 "Vote transport"):
+
+``ag_packed``  (paper-faithful) -- each device contributes a bit-packed sign
+    row (1 bit/coordinate, exactly the paper's uplink payload); the packed
+    rows are all-gathered along ``data`` and every chip computes the same
+    popcount vote -- this *is* the paper's "edge broadcasts the vote back",
+    with zero additional downlink.  Leaves whose minor dim is not a multiple
+    of 32 fall back to ``ar_int8`` (negligible bytes; documented).
+
+``ar_int8``  (beyond-paper optimized) -- the vote sgn(sum_k sgn g_k) is
+    computed distributively via an int8 all-reduce of the sign tally
+    (|sum| <= D <= 127 fits int8).  8 bits/coordinate on the wire but a
+    single reduction phase, and under FSDP the tally reduce-scatters
+    straight onto the owning shard.  Bit-identical votes (tested).
+
+``mean`` / ``wmean`` -- full-precision weighted averaging (HierSGD baseline).
+
+All functions are pure jnp + sharding constraints: they lower to data-axis
+collectives under GSPMD and degenerate to local arithmetic at P=D=1 (which
+is how they are unit-tested against ``repro.core.signs``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import signs
+from repro.core.topology import Topology
+
+PACK = signs.PACK_WIDTH
+
+
+def _mask_bcast(mask: jax.Array | None, ndim_leaf: int):
+    """[P, D] voter mask -> broadcastable to [P, D, *leaf]."""
+    if mask is None:
+        return None
+    return mask.reshape(mask.shape + (1,) * ndim_leaf)
+
+
+def vote_ar_int8(topo: Topology, s_dev: jax.Array,
+                 mask: jax.Array | None) -> jax.Array:
+    """sgn(sum_k s_k) via an int8 tally reduction over the device axis."""
+    tally = s_dev.astype(jnp.int8)
+    m = _mask_bcast(mask, s_dev.ndim - 2)
+    n_eff = None
+    if m is not None:
+        tally = tally * m.astype(jnp.int8)
+        n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)        # [P]
+        n_eff = n_eff.reshape((-1,) + (1,) * (s_dev.ndim - 2))
+    tally = jnp.sum(tally, axis=1, dtype=jnp.int8)             # [P, *leaf]
+    if n_eff is None:
+        return signs.sgn(tally.astype(jnp.int32))
+    # with abstentions the tie rule is 2*pos >= n_eff  <=>  tally >= 0
+    return signs.sgn(tally.astype(jnp.int32))
+
+
+def vote_ag_packed(topo: Topology, s_dev: jax.Array,
+                   mask: jax.Array | None, leaf_spec: P) -> jax.Array:
+    """Bit-packed all-gather + local popcount vote (1 bit/coord wire).
+
+    s_dev: [P, D, *leaf] int8 signs; leaf minor dim % 32 == 0 required.
+    The packed words are constrained to be replicated along ``data`` --
+    that resharding is the all-gather whose operand is 1/32 the int8 tally
+    (and 1/256 the fp32 gradient) -- then every chip votes locally.
+    """
+    *lead, minor = s_dev.shape
+    assert minor % PACK == 0, "caller guarantees minor % 32 == 0"
+    words = signs.pack_signs(s_dev)                            # [P, D, *l, minor/32]
+    # device-axis all-gather of the 1-bit payload: keep every other dim's
+    # sharding, drop 'data' from dim 1.
+    gathered_spec = P(topo.pod_axis, None, *leaf_spec)
+    words = topo.constrain(words, gathered_spec)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)        # [P,D,*l,w,32]
+    bits = bits.astype(jnp.int8)
+    if mask is not None:
+        m = _mask_bcast(mask, bits.ndim - 2)
+        pos = jnp.sum(bits * m.astype(jnp.int8), axis=1, dtype=jnp.int32)
+        n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)
+        n_eff = n_eff.reshape((-1,) + (1,) * (pos.ndim - 1))
+    else:
+        pos = jnp.sum(bits, axis=1, dtype=jnp.int32)           # [P,*l,w,32]
+        n_eff = s_dev.shape[1]
+    vote = jnp.where(2 * pos >= n_eff, jnp.int8(1), jnp.int8(-1))
+    return vote.reshape(s_dev.shape[:1] + s_dev.shape[2:])     # [P, *leaf]
+
+
+def majority_vote_dev(topo: Topology, s_dev: jax.Array,
+                      mask: jax.Array | None, transport: str,
+                      leaf_spec: P) -> jax.Array:
+    """Vote [P, D, *leaf] -> [P, *leaf]; dispatch on transport + leaf shape."""
+    if transport == "ag_packed" and s_dev.shape[-1] % PACK == 0:
+        return vote_ag_packed(topo, s_dev, mask, leaf_spec)
+    return vote_ar_int8(topo, s_dev, mask)
+
+
+def weighted_mean_dev(topo: Topology, g_dev: jax.Array,
+                      dev_weights: jax.Array) -> jax.Array:
+    """Full-precision edge aggregation  sum_k (|D_qk|/D_q) g_k  -> [P, *leaf]."""
+    w = dev_weights.reshape(dev_weights.shape + (1,) * (g_dev.ndim - 2))
+    return jnp.sum(g_dev * w.astype(g_dev.dtype), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Pod (edge -> cloud) tier
+# ---------------------------------------------------------------------------
+
+def pod_weighted_average(topo: Topology, v: jax.Array,
+                         edge_weights: jax.Array) -> jax.Array:
+    """Cloud aggregation  w = sum_q (D_q/N) v_q, broadcast back to [P, ...].
+
+    v: [P, *leaf].  Lowers to a pod-axis all-reduce (the edge->cloud model
+    exchange, every T_E steps).
+    """
+    w = edge_weights.reshape((-1,) + (1,) * (v.ndim - 1)).astype(v.dtype)
+    glob = jnp.sum(v * w, axis=0, keepdims=True)               # [1, *leaf]
+    return jnp.broadcast_to(glob, v.shape)

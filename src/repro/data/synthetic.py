@@ -1,0 +1,83 @@
+"""Deterministic synthetic LM token pipeline with inter-edge heterogeneity.
+
+The paper's setting is *inter-cluster* statistical heterogeneity (devices
+within an edge IID; edges skewed).  For LM training we emulate multi-region
+ingestion: each edge q draws tokens from its own Zipf-like unigram
+distribution (a per-edge permutation + temperature of a shared base
+distribution, mixing-parameter alpha -> uniform mixing = IID).
+
+Everything is cursor-addressable: ``batch_at(step)`` is a pure function of
+(seed, step), so restoring a checkpointed step counter exactly resumes the
+stream (no iterator state to persist).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStreamCfg:
+    vocab: int
+    seq_len: int
+    batch_per_device: int
+    pods: int
+    devices_per_pod: int
+    seed: int = 0
+    skew: float = 1.2          # Zipf exponent of the base distribution
+    hetero: float = 1.0        # 0 = IID edges, 1 = fully per-edge skewed
+    frames: int = 0            # audio stub frontend
+    frontend_dim: int = 0
+    n_patches: int = 0         # vlm stub frontend
+    d_model: int = 0
+
+
+def _edge_logits(cfg: LMStreamCfg) -> np.ndarray:
+    """[P, V] unigram logits per edge (numpy, deterministic)."""
+    rng = np.random.default_rng(cfg.seed)
+    base = -cfg.skew * np.log(np.arange(1, cfg.vocab + 1))
+    logits = np.zeros((cfg.pods, cfg.vocab), np.float32)
+    for q in range(cfg.pods):
+        perm = rng.permutation(cfg.vocab)
+        edge = base[perm]                       # edge-specific Zipf ranks
+        logits[q] = cfg.hetero * edge + (1.0 - cfg.hetero) * base
+    return logits
+
+
+def make_stream(cfg: LMStreamCfg):
+    """Returns batch_at(step) -> batch pytree of [P, D, b, ...]."""
+    logits = jnp.asarray(_edge_logits(cfg))
+
+    def batch_at(step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        shape = (cfg.pods, cfg.devices_per_pod, cfg.batch_per_device,
+                 cfg.seq_len)
+        keys = jax.random.split(key, cfg.pods)
+        toks = jnp.stack([
+            jax.random.categorical(keys[q], logits[q], shape=shape[1:])
+            for q in range(cfg.pods)])
+        batch = {"tokens": toks.astype(jnp.int32)}
+        if cfg.frames:
+            kf = jax.random.fold_in(key, 1)
+            batch["frames"] = 0.1 * jax.random.normal(
+                kf, (cfg.pods, cfg.devices_per_pod, cfg.batch_per_device,
+                     cfg.frames, cfg.frontend_dim))
+        if cfg.n_patches:
+            kp = jax.random.fold_in(key, 2)
+            batch["patches"] = 0.02 * jax.random.normal(
+                kp, (cfg.pods, cfg.devices_per_pod, cfg.batch_per_device,
+                     cfg.n_patches, cfg.d_model))
+        return batch
+
+    return batch_at
+
+
+def serve_request_batch(cfg: LMStreamCfg, n_requests: int, prompt_len: int,
+                        seed: int = 17):
+    """Batched serving requests (prompts) for the serve example."""
+    key = jax.random.PRNGKey(seed)
+    return {"tokens": jax.random.randint(
+        key, (n_requests, prompt_len), 0, cfg.vocab, jnp.int32)}

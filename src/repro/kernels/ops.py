@@ -1,0 +1,82 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles arbitrary pytree/shape inputs (flatten -> pad -> 2D view ->
+kernel -> unpad), and falls back to the jnp reference implementation when
+Pallas is unavailable (CPU distributed paths use the reference; the
+kernels are the TPU target, validated in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, sign_pack as _sp, ternary_quant as _tq
+from repro.kernels import vote_update as _vu
+
+PACK = 32
+
+
+def _to_2d(x: jax.Array, block_r: int, block_c: int):
+    """Flatten + zero-pad to an [R, C] view divisible by the block."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per_row = block_c
+    rows = -(-n // per_row)
+    rows = -(-rows // block_r) * block_r
+    pad = rows * per_row - n
+    flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
+    return flat.reshape(rows, per_row), n
+
+
+def sign_pack_nd(g: jax.Array, delta: jax.Array | None = None,
+                 rho: float = 0.0, *, use_pallas: bool = True,
+                 interpret: bool = True,
+                 block_r: int = _sp.BLOCK_R, block_c: int = _sp.BLOCK_C):
+    """Any-shape g (+delta) -> (packed [n_words] uint32, n_coords)."""
+    g2, n = _to_2d(g, block_r, block_c)
+    d2 = None
+    if delta is not None:
+        d2, _ = _to_2d(delta.astype(g.dtype), block_r, block_c)
+    if use_pallas:
+        packed = _sp.sign_pack(g2, d2, rho, block_r=block_r,
+                               block_c=block_c, interpret=interpret)
+    else:
+        packed = ref.sign_pack_ref(g2, d2, rho)
+    return packed.reshape(-1), n
+
+
+def vote_update_nd(packed_rows: jax.Array, v: jax.Array,
+                   mask: jax.Array | None = None, *, mu: float,
+                   use_pallas: bool = True, interpret: bool = True,
+                   block_r: int = _vu.BLOCK_R, block_c: int = _vu.BLOCK_C):
+    """packed_rows: [K, n_words] (from sign_pack_nd on each device);
+    v: any-shape model tensor.  Returns updated v."""
+    k = packed_rows.shape[0]
+    v2, n = _to_2d(v, block_r, block_c)
+    r, c = v2.shape
+    packed = packed_rows.reshape(k, r, c // PACK)
+    if use_pallas:
+        out = _vu.vote_update(packed, v2, mask, mu=mu, block_r=block_r,
+                              block_c=block_c, interpret=interpret)
+    else:
+        out = ref.vote_update_ref(packed, v2, mu, mask)
+    return out.reshape(-1)[:n].reshape(v.shape)
+
+
+def ternary_quant_nd(x: jax.Array, rng: jax.Array, *,
+                     use_pallas: bool = True, interpret: bool = True,
+                     block_r: int = _tq.BLOCK_R, block_c: int = _tq.BLOCK_C):
+    """Any-shape unbiased ternary quantization (baseline compressor)."""
+    x2, n = _to_2d(x, block_r, block_c)
+    # zero the padding so it cannot influence the norm
+    flat = x2.reshape(-1).at[n:].set(0.0).reshape(x2.shape)
+    norm = jnp.linalg.norm(flat.astype(jnp.float32))
+    u = jax.random.uniform(rng, x2.shape, jnp.float32)
+    if use_pallas:
+        out = _tq.ternary_quant(flat, u, norm, block_r=block_r,
+                                block_c=block_c, interpret=interpret)
+    else:
+        out = ref.ternary_quant_ref(flat, u, norm)
+    return out.reshape(-1)[:n].reshape(x.shape)

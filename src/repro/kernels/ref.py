@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests).
+
+These mirror ``repro.core.signs`` exactly; kernels are validated
+element-wise against them over shape/dtype sweeps (interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import signs
+
+
+def sign_pack_ref(g: jax.Array, delta: jax.Array | None, rho: float
+                  ) -> jax.Array:
+    """(g, delta) -> packed uint32 words; g/delta: [R, C], C % 32 == 0."""
+    u = g.astype(jnp.float32)
+    if delta is not None and rho:
+        u = u + rho * delta.astype(jnp.float32)
+    return signs.pack_signs(signs.sgn(u))
+
+
+def vote_update_ref(packed: jax.Array, v: jax.Array, mu: float,
+                    mask: jax.Array | None = None) -> jax.Array:
+    """packed: [K, R, C/32] uint32; v: [R, C] f32 -> v - mu * vote."""
+    k, r, w = packed.shape
+    c = v.shape[-1]
+    vote = jax.vmap(
+        lambda col: signs.majority_vote_packed(col, c, mask),
+        in_axes=1, out_axes=0)(packed)          # [R, C]
+    return v - mu * vote.astype(v.dtype)
+
+
+def ternary_quant_ref(x: jax.Array, u: jax.Array, norm: jax.Array
+                      ) -> jax.Array:
+    """Stochastic ternary quantizer given uniforms u and global l2 norm."""
+    p = jnp.where(norm > 0, jnp.abs(x) / jnp.maximum(norm, 1e-30), 0.0)
+    return jnp.where(u < p, norm * jnp.sign(x), 0.0).astype(x.dtype)

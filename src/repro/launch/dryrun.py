@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. lowers the appropriate step:
+       train_4k    -> hier train_step, twice: sync='never' (local 1-bit
+                      step) and sync='always' (round boundary: cloud
+                      aggregation + anchors) -- a global round costs
+                      (T_E-1) x never + 1 x always;
+       prefill_32k -> serve prefill;
+       decode_*    -> serve decode_step (one token against a full cache),
+  3. compiles, prints memory_analysis() + cost_analysis(),
+  4. extracts per-axis collective bytes from the optimized HLO
+     (benchmarks.hlo_analysis -- multiplies while-loop bodies by their
+      trip counts, which compiled.cost_analysis() does NOT),
+  5. appends a JSON record under reports/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm_3b \
+      --shape train_4k --mesh single [--method dc_hier_signsgd]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import hier
+from repro.launch import mesh as mesh_mod
+from repro.launch import specs as S
+from repro.models import build
+from repro.models.config import SHAPES
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def lower_train(built, topo, algo, shape, sync):
+    _, step = hier.make_hier_step(topo, algo, built.bundle, sync=sync)
+    state_abs = S.train_state_abstract(built, topo, algo)
+    batch_abs = S.train_batch_abstract(built.cfg, shape, topo)
+    ew, dw, mask = S.weights_abstract(topo)
+    return jax.jit(step).lower(state_abs, batch_abs, ew, dw, mask)
+
+
+def lower_prefill(built, topo, shape):
+    params_abs = S.serve_params_abstract(built, topo)
+    batch_abs = S.prefill_batch_abstract(built.cfg, shape, topo)
+    # VLM prompts occupy n_patches extra cache slots
+    max_len = shape.seq_len + built.cfg.n_patches
+    fn = functools.partial(built.prefill, max_len=max_len)
+    return jax.jit(fn).lower(params_abs, batch_abs)
+
+
+def lower_decode(built, topo, shape):
+    params_abs = S.serve_params_abstract(built, topo)
+    cache_abs, tokens_abs = S.decode_args_abstract(built, shape, topo)
+    return jax.jit(built.decode_step).lower(params_abs, cache_abs,
+                                            tokens_abs)
+
+
+def analyze(lowered, label, verbose=True, axis_sizes=None,
+            hlo_cache: pathlib.Path | None = None):
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem[k] = getattr(ma, k, None)
+    except Exception as e:  # some backends lack memory analysis
+        mem["error"] = str(e)
+    cost = dict(compiled.cost_analysis() or {})
+    if verbose:
+        print(f"    [{label}] compile={compile_s:.1f}s")
+        print(f"    memory_analysis: {mem}")
+        print(f"    cost_analysis: flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+    from benchmarks import hlo_analysis
+    text = compiled.as_text()
+    if hlo_cache is not None:
+        import gzip
+        hlo_cache.parent.mkdir(parents=True, exist_ok=True)
+        with gzip.open(hlo_cache, "wt") as f:
+            f.write(text)
+    hlo = hlo_analysis.analyze_hlo_text(text, axis_sizes=axis_sizes)
+    return {"label": label, "compile_s": round(compile_s, 1),
+            "memory": mem,
+            "xla_cost": {k: cost.get(k) for k in
+                         ("flops", "bytes accessed")},
+            "hlo": hlo}
+
+
+def run_cell(arch_name, shape_name, multi_pod, method, transport,
+             t_e, verbose=True, tag="baseline"):
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch_name)
+    ok, why = configs.shape_applicable(cfg, shape)
+    cell = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "method": method, "transport": transport,
+        "params": None, "skipped": not ok, "skip_reason": why,
+    }
+    if not ok:
+        print(f"  SKIP {arch_name} x {shape_name}: {why}")
+        return cell
+    topo = mesh_mod.make_topology(multi_pod=multi_pod)
+    axis_sizes = dict(topo.mesh.shape)
+    built = build.build_model(cfg, topo)
+    import math
+    n_params = sum(math.prod(a.shape)
+                   for a in jax.tree.leaves(built.abstract_params()))
+    cell["params"] = n_params
+    algo = hier.AlgoConfig(method=method, transport=transport, t_e=t_e)
+    phases = {}
+    mesh_tag = "multi" if multi_pod else "single"
+    hdir = REPORT_DIR / "hlo"
+    hname = lambda ph: hdir / (f"{tag}.{arch_name}.{shape_name}."
+                               f"{mesh_tag}.{ph}.hlo.gz")
+    if shape.kind == "train":
+        lowered = lower_train(built, topo, algo, shape, sync="never")
+        phases["local_step"] = analyze(lowered, "local_step", verbose,
+                                       axis_sizes, hname("local_step"))
+        lowered = lower_train(built, topo, algo, shape, sync="always")
+        phases["sync_step"] = analyze(lowered, "sync_step", verbose,
+                                      axis_sizes, hname("sync_step"))
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(built, topo, shape)
+        phases["prefill"] = analyze(lowered, "prefill", verbose, axis_sizes,
+                                    hname("prefill"))
+    else:
+        lowered = lower_decode(built, topo, shape)
+        phases["decode"] = analyze(lowered, "decode", verbose, axis_sizes,
+                                   hname("decode"))
+    cell["phases"] = phases
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--method", default="dc_hier_signsgd",
+                    choices=hier.ALL_METHODS)
+    ap.add_argument("--transport", default="ag_packed")
+    ap.add_argument("--t_e", type=int, default=15)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_tag = "multi" if multi else "single"
+                out = REPORT_DIR / (f"{args.tag}.{arch}.{shape}."
+                                    f"{mesh_tag}.json")
+                print(f"== {arch} x {shape} x {mesh_tag} "
+                      f"[{args.method}/{args.transport}] ==", flush=True)
+                t0 = time.time()
+                try:
+                    cell = run_cell(arch, shape, multi, args.method,
+                                    args.transport, args.t_e,
+                                    verbose=not args.quiet, tag=args.tag)
+                    cell["wall_s"] = round(time.time() - t0, 1)
+                    out.write_text(json.dumps(cell, indent=1))
+                    print(f"   OK ({cell['wall_s']}s) -> {out.name}",
+                          flush=True)
+                except Exception:
+                    n_fail += 1
+                    err = traceback.format_exc()
+                    out.with_suffix(".err").write_text(err)
+                    print(f"   FAIL ({time.time()-t0:.0f}s):\n{err}",
+                          flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls these.
+
+Mesh shapes (TPU v5e pods):
+  single-pod:  (16, 16)    axes ("data", "model")          = 256 chips
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model")   = 512 chips
+
+The paper's hierarchy binds to these axes: ``data`` = devices within an
+edge cluster (1-bit vote tier), ``pod`` = edge servers under the cloud
+(model-average tier).  On a single pod the cloud tier degenerates to Q=1
+(the pod axis is absent and the paper's delta is identically zero).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.topology import Topology
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_topology(*, multi_pod: bool = False) -> Topology:
+    return Topology(mesh=make_production_mesh(multi_pod=multi_pod),
+                    pod_axis="pod" if multi_pod else None)
+
+
+def make_host_topology(pods: int = 1, data: int = 1, model: int = 1
+                       ) -> Topology:
+    """Small host-device mesh for tests (requires forced device count)."""
+    import numpy as np
+    devs = np.array(jax.devices()[: pods * data * model])
+    if pods > 1:
+        mesh = jax.sharding.Mesh(devs.reshape(pods, data, model),
+                                 ("pod", "data", "model"))
+        return Topology(mesh=mesh, pod_axis="pod")
+    mesh = jax.sharding.Mesh(devs.reshape(data, model), ("data", "model"))
+    return Topology(mesh=mesh, pod_axis=None)

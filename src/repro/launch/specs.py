@@ -1,0 +1,125 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) per arch x shape.
+
+These are the dry-run stand-ins: weak-type-correct, shardable, and never
+allocated.  The same builders produce concrete-batch shapes for the real
+driver (launch/train.py) at reduced scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hier
+from repro.core.topology import Topology
+from repro.models.build import BuiltModel
+from repro.models.config import LMConfig, ShapeCfg
+
+PyTree = Any
+
+
+def _sds(shape, dtype, topo, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=topo.sharding(spec))
+
+
+def batch_axes(topo: Topology):
+    """Spec entry sharding a serve batch dim over every data-parallel axis."""
+    axes = tuple(a for a in (topo.pod_axis, topo.data_axis) if a)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def train_batch_abstract(cfg: LMConfig, shape: ShapeCfg, topo: Topology):
+    """{'train': {...[P, D, b_local, ...]}} abstract batch."""
+    pd = topo.pods * topo.devices_per_pod
+    assert shape.global_batch % pd == 0, (shape.global_batch, pd)
+    b = shape.global_batch // pd
+    sp = lambda *rest: topo.dev_spec(*rest)
+    batch = {"tokens": _sds((topo.pods, topo.devices_per_pod, b,
+                             shape.seq_len), jnp.int32, topo, sp(None, None))}
+    if cfg.family in ("encdec", "audio"):
+        batch["frames"] = _sds(
+            (topo.pods, topo.devices_per_pod, b, cfg.encoder_frames,
+             cfg.frontend_dim), jnp.float32, topo, sp(None, None, None))
+    if cfg.n_patches:
+        batch["patches"] = _sds(
+            (topo.pods, topo.devices_per_pod, b, cfg.n_patches, cfg.d_model),
+            jnp.float32, topo, sp(None, None, None))
+    return {"train": batch}
+
+
+def weights_abstract(topo: Topology):
+    ew = _sds((topo.pods,), jnp.float32, topo, P())
+    dw = _sds((topo.pods, topo.devices_per_pod), jnp.float32, topo, P())
+    mask = dw
+    return ew, dw, mask
+
+
+def train_state_abstract(built: BuiltModel, topo: Topology,
+                         algo: hier.AlgoConfig):
+    """Abstract TrainState with shardings applied."""
+    init_fn, _ = hier.make_hier_step(topo, algo, built.bundle)
+    params_abs = built.abstract_params()
+    state_abs = jax.eval_shape(init_fn, params_abs, jax.random.PRNGKey(0))
+    shardings = hier.state_shardings(topo, algo, built.bundle, state_abs)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        state_abs, shardings)
+
+
+def serve_param_shardings(built: BuiltModel, topo: Topology):
+    """Serve params: compute layout when weights are resident (fit per
+    chip in bf16); FSDP master layout (data-sharded, per-layer gathers)
+    otherwise."""
+    specs = (built.bundle.compute_specs
+             if built.serve_layout == "resident"
+             else built.bundle.master_specs)
+    return jax.tree.map(
+        lambda _, s: topo.sharding(P(*s)),
+        built.abstract_params(), specs)
+
+
+def serve_params_abstract(built: BuiltModel, topo: Topology,
+                          dtype=jnp.bfloat16):
+    shard = serve_param_shardings(built, topo)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, dtype if jnp.issubdtype(a.dtype, jnp.floating)
+            else a.dtype, sharding=s),
+        built.abstract_params(), shard)
+
+
+def prefill_batch_abstract(cfg: LMConfig, shape: ShapeCfg, topo: Topology):
+    ba = batch_axes(topo)
+    b = shape.global_batch
+    batch = {"tokens": _sds((b, shape.seq_len), jnp.int32, topo,
+                            P(ba if b > 1 else None, None))}
+    if cfg.family in ("encdec", "audio"):
+        batch["frames"] = _sds((b, cfg.encoder_frames, cfg.frontend_dim),
+                               jnp.float32, topo,
+                               P(ba if b > 1 else None, None, None))
+    if cfg.n_patches:
+        batch["patches"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                jnp.float32, topo,
+                                P(ba if b > 1 else None, None, None))
+    return batch
+
+
+def decode_args_abstract(built: BuiltModel, shape: ShapeCfg,
+                         topo: Topology):
+    """(cache_abs, tokens_abs) for decode_step at this shape."""
+    cfg = built.cfg
+    b = shape.global_batch
+    ba = batch_axes(topo) if b > 1 else None
+    len_axis = topo.data_axis if b == 1 else None   # long_500k layout
+    cache_abs = jax.eval_shape(
+        functools.partial(built.make_cache, b, shape.seq_len, jnp.bfloat16))
+    cspec = built.cache_specs(ba, len_axis)
+    cache_abs = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=topo.sharding(s)),
+        cache_abs, cspec)
+    tokens = _sds((b, 1), jnp.int32, topo, P(ba, None))
+    return cache_abs, tokens

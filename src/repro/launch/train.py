@@ -1,0 +1,167 @@
+"""End-to-end hierarchical training driver.
+
+Wires together: config -> model -> DC-HierSignSGD step -> synthetic data
+stream -> elastic membership -> async checkpointing -> failure recovery.
+Runs the production configs on a real mesh, and the reduced smoke configs
+on CPU (the integration tests and examples call ``run_training`` with a
+small Topology).
+
+CLI (reduced-scale CPU run):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3_1b --smoke \
+      --steps 30 --t_e 5 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import store
+from repro.checkpoint.async_ckpt import AsyncSaver
+from repro.core import hier
+from repro.core.topology import Topology, single_device_topology
+from repro.data import synthetic
+from repro.models import build
+from repro.runtime import elastic, failures
+
+
+@dataclasses.dataclass
+class RunCfg:
+    steps: int = 50
+    batch_per_device: int = 4
+    seq_len: int = 128
+    ckpt_dir: str | None = None
+    ckpt_every: int = 20
+    log_every: int = 5
+    hetero: float = 1.0
+    seed: int = 0
+
+
+def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
+                 fault_injector: failures.FaultInjector | None = None,
+                 on_metrics: Callable[[int, dict], None] | None = None):
+    """Returns (final_state, history).  Deterministic given seeds."""
+    built = build.build_model(cfg, topo)
+    init_fn, step_fn = hier.make_hier_step(topo, algo, built.bundle)
+    jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+    params = built.init_params(jax.random.PRNGKey(run.seed))
+    state = init_fn(params, jax.random.PRNGKey(run.seed + 1))
+
+    stream = synthetic.make_stream(synthetic.LMStreamCfg(
+        vocab=cfg.vocab, seq_len=run.seq_len,
+        batch_per_device=run.batch_per_device, pods=topo.pods,
+        devices_per_pod=topo.devices_per_pod, seed=run.seed,
+        hetero=run.hetero,
+        frames=cfg.encoder_frames if cfg.family in ("encdec", "audio")
+        else 0,
+        frontend_dim=cfg.frontend_dim, n_patches=cfg.n_patches,
+        d_model=cfg.d_model))
+
+    member = elastic.Membership(topo.pods, topo.devices_per_pod)
+    detector = failures.FailureDetector()
+    saver = AsyncSaver(run.ckpt_dir) if run.ckpt_dir else None
+
+    # resume if a checkpoint exists
+    start = 0
+    if run.ckpt_dir:
+        restored = store.restore_latest(run.ckpt_dir, state)
+        if restored is not None:
+            start, state = restored
+            print(f"[train] resumed from step {start}")
+
+    history = []
+    step = start
+    while step < run.steps:
+        if fault_injector is not None:
+            ev = fault_injector.at(step)
+            if ev:
+                kind, pod, dev = ev
+                if kind == "device":
+                    member.mark_failed(pod, dev)
+                elif kind == "pod":
+                    member.mark_failed(pod)
+                elif kind == "recover":
+                    member.heartbeat(pod, dev or 0, time.time())
+                    member.live[pod, :] = True
+        ew, dw, mask = member.weights()
+        batch = {"train": stream(step)}
+        t0 = time.time()
+        state, metrics = jstep(state, batch, jnp.asarray(ew),
+                               jnp.asarray(dw), jnp.asarray(mask))
+        loss = float(metrics["loss"])
+        detector.record_step(time.time() - t0)
+
+        if not detector.check_loss(loss):
+            if saver:
+                saver.wait()
+            restored = (store.restore_latest(run.ckpt_dir, state)
+                        if run.ckpt_dir else None)
+            if restored is None or not detector.may_restore():
+                raise RuntimeError(
+                    f"non-finite loss at step {step}, no checkpoint")
+            step, state = restored
+            print(f"[train] non-finite loss; restored step {step}")
+            continue
+
+        history.append({"step": step, "loss": loss,
+                        "live": float(np.mean(member.live))})
+        if on_metrics:
+            on_metrics(step, metrics)
+        if run.log_every and step % run.log_every == 0:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"mu {float(metrics['mu']):.2e} "
+                  f"live {member.live.mean():.2f}")
+        step += 1
+        if saver and step % run.ckpt_every == 0:
+            saver.submit(step, state)
+    if saver:
+        saver.submit(step, state)
+        saver.close()
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--t_e", type=int, default=5)
+    ap.add_argument("--method", default="dc_hier_signsgd",
+                    choices=hier.ALL_METHODS)
+    ap.add_argument("--mu", type=float, default=1e-3)
+    ap.add_argument("--rho", type=float, default=0.2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--multi_pod", action="store_true",
+                    help="use the production 2x16x16 mesh")
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if args.multi_pod:
+        from repro.launch import mesh as mesh_mod
+        topo = mesh_mod.make_topology(multi_pod=True)
+    else:
+        topo = single_device_topology()
+    algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
+                           t_e=args.t_e,
+                           compute_dtype=jnp.float32 if args.smoke
+                           else jnp.bfloat16)
+    run = RunCfg(steps=args.steps, batch_per_device=args.batch,
+                 seq_len=args.seq, ckpt_dir=args.ckpt)
+    _, history = run_training(cfg, topo, algo, run)
+    print(f"[train] done: loss {history[0]['loss']:.4f} -> "
+          f"{history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,380 @@
+"""Attention blocks: GQA (+ sliding window, qk-norm), MLA, cross-attention.
+
+Single-replica code ([b, t, d] activations).  Decode uses an explicit KV
+cache pytree; for ``long_500k`` the cache's *length* dim is sharded over
+``data`` (flash-decoding for free: GSPMD splits the softmax reductions
+across the cache shards).  MLA decode uses the absorbed formulation so the
+per-step cost scales with the 576-dim latent cache, not with H recomputed
+keys (DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import he_init, rope
+
+NEG_INF = -2.0**30
+
+
+def _heads_spec(n_heads: int, model_shards: int):
+    return "model" if (model_shards and n_heads % model_shards == 0) else None
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(rng, cfg):
+    d, hd, h, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 5)
+    p = {
+        "wq": he_init(ks[0], (d, h * hd)).reshape(d, h, hd),
+        "wk": he_init(ks[1], (d, hkv * hd)).reshape(d, hkv, hd),
+        "wv": he_init(ks[2], (d, hkv * hd)).reshape(d, hkv, hd),
+        "wo": he_init(ks[3], (h * hd, d), h * hd).reshape(h, hd, d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = layers.init_rms(ks[4], hd)
+        p["kn"] = layers.init_rms(ks[4], hd)
+    return p
+
+
+def gqa_specs(cfg, model_shards):
+    hs = _heads_spec(cfg.n_heads, model_shards)
+    hks = _heads_spec(cfg.n_kv_heads, model_shards)
+    s = {"wq": P(None, hs, None), "wk": P(None, hks, None),
+         "wv": P(None, hks, None), "wo": P(hs, None, None)}
+    if cfg.qk_norm:
+        s["qn"] = P(None)
+        s["kn"] = P(None)
+    return s
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+def _attend(q, k, v, mask):
+    """q: [b,tq,h,hd]; k,v: [b,tk,h,hd]; mask: [b?,tq,tk] bool or None."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(q.shape[-1])
+    if mask is not None:
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+Q_CHUNK = 1024  # query-block size for the exact chunked path
+
+
+def attend_causal(q, k, v, window=0, mask_extra=None, q_chunk=Q_CHUNK):
+    """Exact causal (optionally sliding-window) attention, q-block chunked.
+
+    Never materializes the full [t, t] score matrix: a lax.scan walks query
+    blocks; for window layers only the (window + q_chunk) keys a block can
+    see are sliced in, so local-attention FLOPs/bytes scale with the window
+    rather than the sequence (this is what makes the gemma3 long-context
+    cells sub-quadratic; DESIGN.md Sec. 4).
+    """
+    b, t, h, hd = q.shape
+    if t <= q_chunk or t % q_chunk != 0 or mask_extra is not None:
+        mask = causal_mask(t, t, 0, window)[None]
+        if mask_extra is not None:
+            mask = mask & mask_extra
+        return _attend(q, k, v, mask)
+
+    n_blocks = t // q_chunk
+    use_window = bool(window) and (window + q_chunk) <= t
+
+    def block(carry, i):
+        qs = i * q_chunk
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_chunk, axis=1)
+        if use_window:
+            ks = jnp.maximum(qs - window, 0)
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, window + q_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, window + q_chunk, 1)
+            kj = ks + jnp.arange(window + q_chunk)[None, :]
+        else:
+            kb, vb = k, v
+            kj = jnp.arange(t)[None, :]
+        qi = qs + jnp.arange(q_chunk)[:, None]
+        m = kj <= qi
+        if window:
+            m &= kj > qi - window
+        return carry, _attend(qb, kb, vb, m[None])
+
+    _, blocks = jax.lax.scan(block, (), jnp.arange(n_blocks))
+    # output head dim follows v (MLA: v_head_dim != qk head dim)
+    return jnp.moveaxis(blocks, 0, 1).reshape(b, t, h, v.shape[-1])
+
+
+def causal_mask(tq, tk, offset=0, window=0):
+    """[tq, tk] bool; query i attends key j iff j <= i+offset (& in window)."""
+    qi = jnp.arange(tq)[:, None] + offset
+    kj = jnp.arange(tk)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m
+
+
+def gqa_attn(p, x, positions, cfg, *, theta, window=0, mask_extra=None,
+             cache=None, pos=None, prefill=False, cache_spec=None,
+             topo=None, shard_heads=None):
+    """Returns (out [b,t,d], new_cache).
+
+    Modes: cache=None -> train (full causal, no cache);
+    prefill=True -> full causal over the fresh tokens + cache fill at
+    offset 0 (exact, since the cache is empty at prefill);
+    else decode -> write t tokens at offset ``pos``, attend over cache.
+    """
+    b, t, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qk_norm:
+        q = layers.rms_norm(p["qn"], q, cfg.norm_eps)
+        k = layers.rms_norm(p["kn"], k, cfg.norm_eps)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    if shard_heads is not None:
+        # pin the Megatron layout: q heads sharded over 'model', the
+        # sequence gathered at the attention boundary.  Without this,
+        # sequence-sharded residuals (SP) make XLA partition the softmax
+        # contraction over t and all-reduce f32 attention outputs per
+        # q-chunk per layer (EXPERIMENTS.md Sec. Perf, iteration 2).
+        q = shard_heads(q)
+        k = shard_heads(k)
+        v = shard_heads(v)
+
+    if cache is None:
+        out = attend_causal(q, _repeat_kv(k, h // hkv),
+                            _repeat_kv(v, h // hkv), window, mask_extra)
+        new_cache = None
+    elif prefill:
+        out = attend_causal(q, _repeat_kv(k, h // hkv),
+                            _repeat_kv(v, h // hkv), window, mask_extra)
+        if cache["k"].shape[1] == window:   # rolled window cache
+            ck = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)],
+                                 axis=1)[:, -window:]
+            cv = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)],
+                                 axis=1)[:, -window:]
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    elif window and cache["k"].shape[1] == window:
+        # rolled window cache (local layers at long context): slot W-1 is
+        # the newest token; roll left by t and append.
+        ck = jnp.concatenate(
+            [cache["k"][:, t:], k.astype(cache["k"].dtype)], axis=1)
+        cv = jnp.concatenate(
+            [cache["v"][:, t:], v.astype(cache["v"].dtype)], axis=1)
+        if cache_spec is not None and topo is not None:
+            ck = topo.constrain(ck, cache_spec)
+            cv = topo.constrain(cv, cache_spec)
+        slot = jnp.arange(window)[None, :]
+        valid = slot >= (window - 1 - pos)      # global pos >= 0
+        mask = jnp.broadcast_to(valid, (t, window))[None]
+        out = _attend(q, _repeat_kv(ck, h // hkv),
+                      _repeat_kv(cv, h // hkv), mask)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # decode: write (k, v) at offset ``pos``, attend over the cache.
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        if cache_spec is not None and topo is not None:
+            ck = topo.constrain(ck, cache_spec)
+            cv = topo.constrain(cv, cache_spec)
+        lk = ck.shape[1]
+        kj = jnp.arange(lk)[None, :]
+        valid = kj <= pos
+        if window:
+            valid &= kj > pos - window
+        mask = jnp.broadcast_to(valid, (t, lk))[None]
+        out = _attend(q, _repeat_kv(ck, h // hkv),
+                      _repeat_kv(cv, h // hkv), mask)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return out, new_cache
+
+
+def gqa_cache_init(cfg, b, max_len, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((b, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def gqa_cache_specs(cfg, model_shards, batch_axes, len_axis=None):
+    """batch_axes: spec entry for the batch dim; len_axis: 'data' shards the
+    cache length (long-context flash-decoding layout)."""
+    hks = _heads_spec(cfg.n_kv_heads, model_shards)
+    return {"k": P(batch_axes, len_axis, hks, None),
+            "v": P(batch_axes, len_axis, hks, None)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn(p, x, enc_kv, cfg):
+    """enc_kv: {"k","v": [b, frames, hkv, hd]} precomputed at prefill."""
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    out = _attend(q, _repeat_kv(enc_kv["k"].astype(q.dtype), h // hkv),
+                  _repeat_kv(enc_kv["v"].astype(q.dtype), h // hkv), None)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def init_cross(rng, cfg):
+    d, hd, h, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": he_init(ks[0], (d, h * hd)).reshape(d, h, hd),
+        "wk": he_init(ks[1], (d, hkv * hd)).reshape(d, hkv, hd),
+        "wv": he_init(ks[2], (d, hkv * hd)).reshape(d, hkv, hd),
+        "wo": he_init(ks[3], (h * hd, d), h * hd).reshape(h, hd, d),
+    }
+
+
+def cross_specs(cfg, model_shards):
+    return {k: v for k, v in gqa_specs(
+        dataclasses_replace_qknorm(cfg), model_shards).items()
+        if k in ("wq", "wk", "wv", "wo")}
+
+
+def dataclasses_replace_qknorm(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, qk_norm=False)
+
+
+def cross_kv(p, enc_out, cfg):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "wdq": he_init(ks[0], (d, m.q_lora_rank)),
+        "qn": layers.init_rms(ks[1], m.q_lora_rank),
+        "wuq": he_init(ks[1], (m.q_lora_rank, h * qk),
+                       m.q_lora_rank).reshape(m.q_lora_rank, h, qk),
+        "wdkv": he_init(ks[2], (d, m.kv_lora_rank)),
+        "kvn": layers.init_rms(ks[3], m.kv_lora_rank),
+        "wkr": he_init(ks[3], (d, m.qk_rope_head_dim)),
+        "wuk": he_init(ks[4], (m.kv_lora_rank, h * m.qk_nope_head_dim),
+                       m.kv_lora_rank).reshape(
+                           m.kv_lora_rank, h, m.qk_nope_head_dim),
+        "wuv": he_init(ks[5], (m.kv_lora_rank, h * m.v_head_dim),
+                       m.kv_lora_rank).reshape(
+                           m.kv_lora_rank, h, m.v_head_dim),
+        "wo": he_init(ks[6], (h * m.v_head_dim, d),
+                      h * m.v_head_dim).reshape(h, m.v_head_dim, d),
+    }
+
+
+def mla_specs(cfg, model_shards):
+    hs = _heads_spec(cfg.n_heads, model_shards)
+    return {
+        "wdq": P(None, None), "qn": P(None),
+        "wuq": P(None, hs, None),
+        "wdkv": P(None, None), "kvn": P(None), "wkr": P(None, None),
+        "wuk": P(None, hs, None), "wuv": P(None, hs, None),
+        "wo": P(hs, None, None),
+    }
+
+
+def mla_attn(p, x, positions, cfg, *, cache=None, pos=None, prefill=False,
+             cache_spec=None, topo=None, shard_heads=None):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    nope, rdim = m.qk_nope_head_dim, m.qk_rope_head_dim
+    # queries
+    ql = layers.rms_norm(p["qn"], x @ p["wdq"], cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", ql, p["wuq"])
+    if shard_heads is not None:
+        q = shard_heads(q)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    # latent kv
+    ckv = layers.rms_norm(p["kvn"], x @ p["wdkv"], cfg.norm_eps)  # [b,t,r]
+    k_rope = rope((x @ p["wkr"])[:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0]                         # [b,t,rdim]
+
+    if cache is None or prefill:
+        k_nope = jnp.einsum("btr,rhk->bthk", ckv, p["wuk"])
+        v = jnp.einsum("btr,rhk->bthk", ckv, p["wuv"])
+        if shard_heads is not None:
+            k_nope = shard_heads(k_nope)
+            v = shard_heads(v)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                      (b, t, h, rdim))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attend_causal(qf, k, v)
+        if prefill:
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache["kr"], k_rope.astype(cache["kr"].dtype), (0, 0, 0))
+            new_cache = {"ckv": cc, "kr": cr}
+        else:
+            new_cache = None
+    else:
+        # absorbed decode: score = q_nope . (W_uk c) + q_rope . k_rope
+        #                        = (q_nope W_uk^T) . c + q_rope . k_rope
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), (0, pos, 0))
+        if cache_spec is not None and topo is not None:
+            cc = topo.constrain(cc, cache_spec["ckv"])
+            cr = topo.constrain(cr, cache_spec["kr"])
+        q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, p["wuk"])    # [b,t,h,r]
+        scores = (jnp.einsum("bthr,bsr->bhts", q_abs, cc.astype(q_abs.dtype))
+                  + jnp.einsum("bthk,bsk->bhts", q_rope,
+                               cr.astype(q_rope.dtype))).astype(jnp.float32)
+        scores = scores / math.sqrt(nope + rdim)
+        lk = cc.shape[1]
+        valid = jnp.arange(lk)[None, :] <= pos
+        scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhts,bsr->bthr", w, cc.astype(x.dtype))
+        out = jnp.einsum("bthr,rhk->bthk", o_lat, p["wuv"])
+        new_cache = {"ckv": cc, "kr": cr}
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, new_cache
+
+
+def mla_cache_init(cfg, b, max_len, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((b, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((b, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_specs(cfg, model_shards, batch_axes, len_axis=None):
+    return {"ckv": P(batch_axes, len_axis, None),
+            "kr": P(batch_axes, len_axis, None)}

@@ -1,0 +1,309 @@
+"""Composable layer blocks: pre-norm residual wrappers around the mixers.
+
+Block protocol (single-replica view, engine handles P/D lifting):
+
+    init(rng)             -> params for ONE layer
+    apply(p, x, ctx)      -> (x, aux_loss, new_cache_slice)
+    specs                 -> PartitionSpec tree mirroring init (leaf dims)
+    cache_init(b, L, dt)  -> per-layer decode cache slice (or None)
+    cache_specs(batch_ax, len_ax) -> spec tree for the cache slice
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import layers, moe as moe_mod, ssm
+from repro.models.config import LMConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: LMConfig
+    mode: str = "train"               # train | prefill | decode
+    positions: jax.Array | None = None  # [t] global positions
+    pos: jax.Array | None = None        # scalar cache write offset
+    enc_out: jax.Array | None = None    # whisper encoder output [b, f, d]
+    shard_heads: Any = None             # callable pinning [.., h, hd] to
+                                        # head-sharded TP layout (or None)
+    shard_resid: Any = None             # callable pinning [.., t, d] to the
+                                        # sequence-sharded residual layout
+                                        # right after row-parallel
+                                        # projections (AR -> RS rewrite)
+
+
+@dataclasses.dataclass
+class BlockDef:
+    name: str
+    init: Callable
+    apply: Callable                    # (p, x, ctx, cache) -> (x, aux, cache')
+    specs: PyTree
+    cache_init: Callable | None = None
+    cache_specs: Callable | None = None
+
+
+def _with_norms(rng, d, inner: dict) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {"n1": layers.init_rms(k1, d), "n2": layers.init_rms(k2, d),
+            **inner}
+
+
+# ---------------------------------------------------------------------------
+# Dense transformer block (attn + MLP), local/global attention flavours
+# ---------------------------------------------------------------------------
+
+def dense_block(cfg: LMConfig, model_shards: int, *, window: int = 0,
+                theta: float | None = None, causal: bool = True,
+                cross: bool = False, d_ff: int | None = None,
+                name: str = "dense") -> BlockDef:
+    th = theta if theta is not None else cfg.rope_theta
+    ff = d_ff if d_ff is not None else cfg.d_ff
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        p = {"n1": layers.init_rms(ks[0], cfg.d_model),
+             "n2": layers.init_rms(ks[0], cfg.d_model),
+             "attn": attn.init_gqa(ks[1], cfg),
+             "mlp": layers.init_mlp(ks[2], cfg.d_model, ff, cfg.act)}
+        if cross:
+            p["nx"] = layers.init_rms(ks[0], cfg.d_model)
+            p["xattn"] = attn.init_cross(ks[3], cfg)
+        return p
+
+    specs = {"n1": P(None), "n2": P(None),
+             "attn": attn.gqa_specs(cfg, model_shards),
+             "mlp": layers.mlp_specs(cfg.act)}
+    if cross:
+        specs["nx"] = P(None)
+        specs["xattn"] = {k: attn.gqa_specs(cfg, model_shards)[k]
+                          for k in ("wq", "wk", "wv", "wo")}
+
+    def apply(p, x, ctx: Ctx, cache):
+        prefill = ctx.mode == "prefill"
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        self_cache = cache.get("self") if cache is not None else None
+        if causal:
+            a, new_self = attn.gqa_attn(
+                p["attn"], h, ctx.positions, cfg, theta=th, window=window,
+                cache=self_cache, pos=ctx.pos, prefill=prefill,
+                shard_heads=ctx.shard_heads)
+        else:  # bidirectional encoder self-attention
+            q = jnp.einsum("btd,dhk->bthk", h, p["attn"]["wq"])
+            k = jnp.einsum("btd,dhk->bthk", h, p["attn"]["wk"])
+            v = jnp.einsum("btd,dhk->bthk", h, p["attn"]["wv"])
+            rep = cfg.n_heads // cfg.n_kv_heads
+            o = attn._attend(q, attn._repeat_kv(k, rep),
+                             attn._repeat_kv(v, rep), None)
+            a = jnp.einsum("bthk,hkd->btd", o, p["attn"]["wo"])
+            new_self = None
+        if ctx.shard_resid is not None:
+            a = ctx.shard_resid(a)
+            x = ctx.shard_resid(x) + a
+        else:
+            x = x + a
+        new_cache = {} if cache is not None else None
+        if new_cache is not None and new_self is not None:
+            new_cache["self"] = new_self
+        if cross:
+            hx = layers.rms_norm(p["nx"], x, cfg.norm_eps)
+            if ctx.enc_out is not None:        # train/prefill: fresh enc kv
+                ekv = attn.cross_kv(p["xattn"], ctx.enc_out, cfg)
+            else:                               # decode: cached enc kv
+                ekv = {"k": cache["ek"], "v": cache["ev"]}
+            x = x + attn.cross_attn(p["xattn"], hx, ekv, cfg)
+            if new_cache is not None:
+                new_cache["ek"] = ekv["k"].astype(cache["ek"].dtype)
+                new_cache["ev"] = ekv["v"].astype(cache["ev"].dtype)
+        m_out = layers.mlp(p["mlp"], layers.rms_norm(p["n2"], x,
+                                                     cfg.norm_eps), cfg.act)
+        if ctx.shard_resid is not None:
+            m_out = ctx.shard_resid(m_out)
+        x = x + m_out
+        return x, jnp.zeros((), jnp.float32), new_cache
+
+    def cache_init(b, max_len, dtype=jnp.bfloat16):
+        L = min(max_len, window) if window else max_len
+        c = {"self": attn.gqa_cache_init(cfg, b, L, dtype)}
+        if cross:
+            c["ek"] = jnp.zeros((b, cfg.encoder_frames, cfg.n_kv_heads,
+                                 cfg.hd), dtype)
+            c["ev"] = jnp.zeros((b, cfg.encoder_frames, cfg.n_kv_heads,
+                                 cfg.hd), dtype)
+        return c
+
+    def cache_specs(batch_ax, len_ax):
+        la = None if window else len_ax
+        c = {"self": attn.gqa_cache_specs(cfg, model_shards, batch_ax, la)}
+        if cross:
+            hks = attn._heads_spec(cfg.n_kv_heads, model_shards)
+            c["ek"] = P(batch_ax, None, hks, None)
+            c["ev"] = P(batch_ax, None, hks, None)
+        return c
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# MoE block (attn or MLA + MoE ffn)
+# ---------------------------------------------------------------------------
+
+def moe_block(cfg: LMConfig, model_shards: int, *, use_mla: bool = False,
+              name: str = "moe") -> BlockDef:
+    def init(rng):
+        ks = jax.random.split(rng, 3)
+        mix = (attn.init_mla(ks[1], cfg) if use_mla
+               else attn.init_gqa(ks[1], cfg))
+        return _with_norms(ks[0], cfg.d_model,
+                           {"attn": mix, "moe": moe_mod.init_moe(ks[2], cfg)})
+
+    specs = {"n1": P(None), "n2": P(None),
+             "attn": (attn.mla_specs(cfg, model_shards) if use_mla
+                      else attn.gqa_specs(cfg, model_shards)),
+             "moe": moe_mod.moe_specs(cfg, model_shards)}
+
+    def apply(p, x, ctx: Ctx, cache):
+        prefill = ctx.mode == "prefill"
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        if use_mla:
+            a, new_cache = attn.mla_attn(p["attn"], h, ctx.positions, cfg,
+                                         cache=cache, pos=ctx.pos,
+                                         prefill=prefill,
+                                         shard_heads=ctx.shard_heads)
+        else:
+            a, new_cache = attn.gqa_attn(p["attn"], h, ctx.positions, cfg,
+                                         theta=cfg.rope_theta, cache=cache,
+                                         pos=ctx.pos, prefill=prefill,
+                                         shard_heads=ctx.shard_heads)
+        x = x + a
+        h2 = layers.rms_norm(p["n2"], x, cfg.norm_eps)
+        y, aux = moe_mod.moe_block(p["moe"], h2, cfg)
+        return x + y, aux, new_cache
+
+    def cache_init(b, max_len, dtype=jnp.bfloat16):
+        return (attn.mla_cache_init(cfg, b, max_len, dtype) if use_mla
+                else attn.gqa_cache_init(cfg, b, max_len, dtype))
+
+    def cache_specs(batch_ax, len_ax):
+        return (attn.mla_cache_specs(cfg, model_shards, batch_ax, len_ax)
+                if use_mla
+                else attn.gqa_cache_specs(cfg, model_shards, batch_ax,
+                                          len_ax))
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLA block (deepseek first_dense layers + MTP block)
+# ---------------------------------------------------------------------------
+
+def mla_dense_block(cfg: LMConfig, model_shards: int, d_ff: int,
+                    name: str = "dense") -> BlockDef:
+    def init(rng):
+        ks = jax.random.split(rng, 3)
+        return _with_norms(ks[0], cfg.d_model,
+                           {"attn": attn.init_mla(ks[1], cfg),
+                            "mlp": layers.init_mlp(ks[2], cfg.d_model,
+                                                   d_ff, cfg.act)})
+
+    specs = {"n1": P(None), "n2": P(None),
+             "attn": attn.mla_specs(cfg, model_shards),
+             "mlp": layers.mlp_specs(cfg.act)}
+
+    def apply(p, x, ctx: Ctx, cache):
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        a, new_cache = attn.mla_attn(p["attn"], h, ctx.positions, cfg,
+                                     cache=cache, pos=ctx.pos,
+                                     prefill=ctx.mode == "prefill",
+                                     shard_heads=ctx.shard_heads)
+        x = x + a
+        x = x + layers.mlp(p["mlp"], layers.rms_norm(p["n2"], x,
+                                                     cfg.norm_eps), cfg.act)
+        return x, jnp.zeros((), jnp.float32), new_cache
+
+    def cache_init(b, max_len, dtype=jnp.bfloat16):
+        return attn.mla_cache_init(cfg, b, max_len, dtype)
+
+    def cache_specs(batch_ax, len_ax):
+        return attn.mla_cache_specs(cfg, model_shards, batch_ax, len_ax)
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# SSM / recurrent blocks
+# ---------------------------------------------------------------------------
+
+def mamba_block(cfg: LMConfig, model_shards: int,
+                name: str = "mamba") -> BlockDef:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"n1": layers.init_rms(k1, cfg.d_model),
+                "mamba": ssm.init_mamba2(k2, cfg)}
+
+    specs = {"n1": P(None), "mamba": ssm.mamba2_specs(cfg, model_shards)}
+
+    def apply(p, x, ctx: Ctx, cache):
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        y, new_cache = ssm.mamba2_block(p["mamba"], h, cfg, state=cache)
+        return x + y, jnp.zeros((), jnp.float32), new_cache
+
+    def cache_init(b, max_len, dtype=jnp.float32):
+        return ssm.mamba2_state_init(cfg, b, dtype)
+
+    def cache_specs(batch_ax, len_ax):
+        return ssm.mamba2_state_specs(cfg, model_shards, batch_ax)
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)
+
+
+def mlstm_block(cfg: LMConfig, model_shards: int,
+                name: str = "mlstm") -> BlockDef:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"n1": layers.init_rms(k1, cfg.d_model),
+                "mlstm": ssm.init_mlstm(k2, cfg)}
+
+    specs = {"n1": P(None), "mlstm": ssm.mlstm_specs(cfg, model_shards)}
+
+    def apply(p, x, ctx: Ctx, cache):
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        y, new_cache = ssm.mlstm_block(p["mlstm"], h, cfg, state=cache)
+        return x + y, jnp.zeros((), jnp.float32), new_cache
+
+    def cache_init(b, max_len, dtype=jnp.float32):
+        return ssm.mlstm_state_init(cfg, b, dtype)
+
+    def cache_specs(batch_ax, len_ax):
+        return ssm.mlstm_state_specs(cfg, model_shards, batch_ax)
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)
+
+
+def slstm_block(cfg: LMConfig, model_shards: int,
+                name: str = "slstm") -> BlockDef:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"n1": layers.init_rms(k1, cfg.d_model),
+                "slstm": ssm.init_slstm(k2, cfg)}
+
+    specs = {"n1": P(None), "slstm": ssm.slstm_specs(cfg, model_shards)}
+
+    def apply(p, x, ctx: Ctx, cache):
+        h = layers.rms_norm(p["n1"], x, cfg.norm_eps)
+        y, new_cache = ssm.slstm_block(p["slstm"], h, cfg, state=cache)
+        return x + y, jnp.zeros((), jnp.float32), new_cache
+
+    def cache_init(b, max_len, dtype=jnp.float32):
+        return ssm.slstm_state_init(cfg, b, dtype)
+
+    def cache_specs(batch_ax, len_ax):
+        return ssm.slstm_state_specs(cfg, model_shards, batch_ax)
+
+    return BlockDef(name, init, apply, specs, cache_init, cache_specs)

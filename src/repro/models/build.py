@@ -1,0 +1,631 @@
+"""Build ArchDefs + train/serve entry points from an LMConfig.
+
+This is the public model API used by launch/, tests/ and examples/:
+
+    built = build_model(cfg, topo, algo)
+    built.init_params(rng)        -> single-replica params
+    built.bundle                  -> repro.core.hier.ModelBundle
+    built.make_cache(b, max_len)  -> decode cache
+    built.prefill / built.decode_step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hier
+from repro.core.topology import Topology
+from repro.models import attention as attn_mod
+from repro.models import blocks as B
+from repro.models import engine, layers
+from repro.models.blocks import Ctx
+from repro.models.config import LMConfig
+from repro.models.engine import ArchDef, FsdpPlan, ReplicatedPlan, Segment
+
+PyTree = Any
+
+# REPRO_DISABLE_OPT=1 turns off the beyond-paper perf changes (head/resid
+# layout pinning, serve-resident weights) for A/B roofline measurement.
+import os
+_DISABLE_OPT = os.environ.get("REPRO_DISABLE_OPT", "") == "1"
+
+
+# ---------------------------------------------------------------------------
+# schedules per family
+# ---------------------------------------------------------------------------
+
+def make_archdef(cfg: LMConfig, model_shards: int) -> ArchDef:
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        if cfg.local_global:
+            loc, glob = cfg.local_global
+            period = loc + glob
+            groups = cfg.n_layers // period
+            rem = cfg.n_layers - groups * period
+            blocks = {
+                "local": B.dense_block(cfg, model_shards, window=cfg.window,
+                                       theta=cfg.rope_theta, name="local"),
+                "global": B.dense_block(cfg, model_shards, theta=cfg.
+                                        rope_theta_global, name="global"),
+            }
+            segments = [Segment((("local", loc), ("global", glob)), groups)]
+            if rem:
+                segments.append(Segment((("local", rem),), 1))
+            return ArchDef(cfg, blocks, segments)
+        blocks = {"dense": B.dense_block(cfg, model_shards)}
+        return ArchDef(cfg, blocks,
+                       [Segment((("dense", 1),), cfg.n_layers)])
+
+    if f == "moe":
+        use_mla = cfg.mla is not None
+        blocks = {"moe": B.moe_block(cfg, model_shards, use_mla=use_mla)}
+        segments = []
+        n_moe = cfg.n_layers
+        if cfg.moe.first_dense:
+            if use_mla:
+                blocks["dense"] = B.mla_dense_block(
+                    cfg, model_shards, cfg.moe.dense_ff)
+            else:
+                blocks["dense"] = B.dense_block(
+                    cfg, model_shards, d_ff=cfg.moe.dense_ff)
+            segments.append(Segment((("dense", 1),), cfg.moe.first_dense))
+            n_moe -= cfg.moe.first_dense
+        segments.append(Segment((("moe", 1),), n_moe))
+        mtp = None
+        if cfg.mtp:
+            mtp = (B.mla_dense_block(cfg, model_shards, cfg.moe.dense_ff,
+                                     name="mtp") if use_mla else
+                   B.dense_block(cfg, model_shards, name="mtp"))
+        return ArchDef(cfg, blocks, segments, mtp_block=mtp)
+
+    if f == "hybrid":  # zamba2: mamba stacks + tied shared attention block
+        every = cfg.ssm.attn_every
+        groups = cfg.n_layers // every
+        rem = cfg.n_layers - groups * every
+        blocks = {
+            "mamba": B.mamba_block(cfg, model_shards),
+            "shared_attn": B.dense_block(cfg, model_shards,
+                                         name="shared_attn"),
+        }
+        segments = [Segment((("mamba", every), ("shared_attn", 1)), groups,
+                            tied=frozenset({"shared_attn"}))]
+        if rem:
+            segments.append(Segment((("mamba", rem),), 1))
+        return ArchDef(cfg, blocks, segments)
+
+    if f == "ssm":  # xlstm: m_per_s mLSTM + 1 sLSTM per group
+        m = cfg.xlstm.m_per_s
+        period = m + 1
+        groups = cfg.n_layers // period
+        rem = cfg.n_layers - groups * period
+        blocks = {"mlstm": B.mlstm_block(cfg, model_shards),
+                  "slstm": B.slstm_block(cfg, model_shards)}
+        segments = [Segment((("mlstm", m), ("slstm", 1)), groups)]
+        if rem:
+            segments.append(Segment((("mlstm", rem),), 1))
+        return ArchDef(cfg, blocks, segments)
+
+    if f in ("encdec", "audio"):  # whisper
+        enc_blocks = {"enc": B.dense_block(cfg, model_shards, causal=False,
+                                           name="enc")}
+        dec_blocks = {"dec": B.dense_block(cfg, model_shards, cross=True,
+                                           name="dec")}
+        return ArchDef(
+            cfg, dec_blocks, [Segment((("dec", 1),), cfg.n_layers)],
+            enc_blocks=enc_blocks,
+            enc_segments=[Segment((("enc", 1),), cfg.encoder_layers)])
+
+    raise ValueError(f"unknown family {f}")
+
+
+# ---------------------------------------------------------------------------
+# param init + specs
+# ---------------------------------------------------------------------------
+
+def init_params(arch: ArchDef, rng: jax.Array) -> PyTree:
+    cfg = arch.cfg
+    ks = iter(jax.random.split(rng, 16))
+    params: dict = {"embed": layers.init_embed(next(ks), cfg.vocab,
+                                               cfg.d_model)}
+    counts = engine.stack_counts(arch.segments)
+    params["stacks"] = {
+        name: engine._stack_init(arch.blocks[name], next(ks), n)
+        for name, n in counts.items()}
+    if arch.enc_segments:
+        ecounts = engine.stack_counts(arch.enc_segments)
+        params["enc_stacks"] = {
+            name: engine._stack_init(arch.enc_blocks[name], next(ks), n)
+            for name, n in ecounts.items()}
+        params["adapter"] = {
+            "w": layers.he_init(next(ks), (cfg.frontend_dim, cfg.d_model))}
+    head = {"norm": layers.init_rms(next(ks), cfg.d_model)}
+    if not cfg.tie_embed:
+        head["out"] = layers.he_init(next(ks), (cfg.d_model, cfg.vocab))
+    params["head"] = head
+    if arch.mtp_block is not None:
+        params["mtp"] = {
+            "proj": layers.he_init(next(ks), (2 * cfg.d_model, cfg.d_model)),
+            "n_x": layers.init_rms(next(ks), cfg.d_model),
+            "n_e": layers.init_rms(next(ks), cfg.d_model),
+            "block": arch.mtp_block.init(next(ks)),
+        }
+    return params
+
+
+def compute_specs(arch: ArchDef, model_shards: int = 0) -> PyTree:
+    cfg = arch.cfg
+    specs: dict = {"embed": layers.embed_specs(cfg.vocab, model_shards)}
+    specs["stacks"] = {}
+    counts = engine.stack_counts(arch.segments)
+    for name, n in counts.items():
+        bs = arch.blocks[name].specs
+        specs["stacks"][name] = engine._prepend(bs, None) if n else bs
+    if arch.enc_segments:
+        specs["enc_stacks"] = {
+            name: engine._prepend(arch.enc_blocks[name].specs, None)
+            for name in engine.stack_counts(arch.enc_segments)}
+        specs["adapter"] = {"w": P(None, None)}
+    head = {"norm": P(None)}
+    if not cfg.tie_embed:
+        ok = model_shards and cfg.vocab % model_shards == 0
+        head["out"] = P(None, "model" if ok else None)
+    specs["head"] = head
+    if arch.mtp_block is not None:
+        specs["mtp"] = {"proj": P(None, None), "n_x": P(None),
+                        "n_e": P(None), "block": arch.mtp_block.specs}
+    return specs
+
+
+def fsdpify_leaf(spec: P, shape: tuple, d_shards: int, m_shards: int,
+                 skip_lead: int = 0) -> P:
+    """Insert 'data' sharding into one suitable dim of a compute spec."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i in range(skip_lead, len(shape)):
+        if entries[i] is None and shape[i] % max(d_shards, 1) == 0 \
+                and shape[i] >= d_shards:
+            entries[i] = "data"
+            return P(*entries)
+    for i in range(skip_lead, len(shape)):
+        if entries[i] == "model" and shape[i] % (d_shards * m_shards) == 0:
+            entries[i] = ("model", "data")
+            return P(*entries)
+    return P(*entries)
+
+
+def build_master_specs(arch: ArchDef, cspecs: PyTree, shapes: PyTree,
+                       topo: Topology, fsdp: bool):
+    """Returns (full master specs, per-block per-LAYER master specs).
+
+    Full specs mirror the param tree (leaf dims only, no pod dim); layer
+    specs are what FsdpPlan hands to fsdp_lift after scan slicing strips
+    the stack dim.
+    """
+    if not fsdp:
+        per_block = {name: arch.blocks[name].specs for name in arch.blocks}
+        return cspecs, per_block
+    d, m = topo.devices_per_pod, topo.model_shards
+    is_p = lambda x: isinstance(x, P)
+
+    def fsdpify_tree(spec_tree, shape_tree, skip_lead=0):
+        return jax.tree.map(
+            lambda s, shp: fsdpify_leaf(s, shp.shape, d, m, skip_lead),
+            spec_tree, shape_tree, is_leaf=is_p)
+
+    full: dict = {}
+    per_block: dict = {}
+    counts = engine.stack_counts(arch.segments)
+    full["stacks"] = {}
+    for name, n in counts.items():
+        bd = arch.blocks[name]
+        if n:  # stacked: derive per-layer spec from per-layer shapes
+            layer_shapes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                shapes["stacks"][name])
+            layer_spec = fsdpify_tree(bd.specs, layer_shapes)
+            per_block[name] = layer_spec
+            full["stacks"][name] = engine._prepend(layer_spec, None)
+        else:  # tied: params are already per-layer
+            layer_spec = fsdpify_tree(bd.specs, shapes["stacks"][name])
+            per_block[name] = layer_spec
+            full["stacks"][name] = layer_spec
+    full["embed"] = fsdpify_tree(cspecs["embed"], shapes["embed"])
+    full["head"] = fsdpify_tree(cspecs["head"], shapes["head"])
+    if "adapter" in cspecs:
+        full["adapter"] = fsdpify_tree(cspecs["adapter"], shapes["adapter"])
+    if "enc_stacks" in cspecs:
+        full["enc_stacks"] = {}
+        for name in cspecs["enc_stacks"]:
+            bd = arch.enc_blocks[name]
+            layer_shapes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                shapes["enc_stacks"][name])
+            layer_spec = fsdpify_tree(bd.specs, layer_shapes)
+            per_block[name] = layer_spec
+            full["enc_stacks"][name] = engine._prepend(layer_spec, None)
+    if "mtp" in cspecs:
+        full["mtp"] = fsdpify_tree(cspecs["mtp"], shapes["mtp"])
+    return full, per_block
+
+
+def occurrence_counts(segments) -> dict[str, int]:
+    occ: dict[str, int] = {}
+    for seg in segments:
+        for bname, cnt in seg.layout:
+            occ[bname] = occ.get(bname, 0) + cnt * seg.repeats
+    return occ
+
+
+# ---------------------------------------------------------------------------
+# loss assembly (shared pieces)
+# ---------------------------------------------------------------------------
+
+def _targets_and_mask(tokens):
+    """Next-token LM targets with the final position masked out."""
+    targets = jnp.roll(tokens, -1, axis=-1)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[..., -1].set(0.0)
+    return targets, mask
+
+
+def _logits(cfg, head, embed_p, x):
+    x = layers.rms_norm(head["norm"], x, cfg.norm_eps)
+    if cfg.tie_embed:
+        return layers.unembed(embed_p["table"], x)
+    return x @ head["out"]
+
+
+def make_loss_single(arch: ArchDef):
+    cfg = arch.cfg
+    plan_remat = True
+
+    def loss(params, batch, rng):
+        plan = ReplicatedPlan(cfg, plan_remat)
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = layers.embed(params["embed"], tokens, cfg.embed_scale)
+        enc_out = None
+        aux_extra = jnp.zeros((), jnp.float32)
+        if arch.enc_segments:  # whisper: encode stub frames first
+            frames = batch["frames"].astype(x.dtype)
+            ex = frames @ params["adapter"]["w"].astype(x.dtype)
+            ectx = Ctx(cfg, "train",
+                       positions=jnp.arange(frames.shape[1], dtype=jnp.int32))
+            ex, eaux, _ = engine.run_segments(
+                plan, arch, arch.enc_segments, params["enc_stacks"], None,
+                ex, ectx)
+            enc_out = ex
+            aux_extra = aux_extra + eaux
+        n_patch = 0
+        if cfg.n_patches:  # vlm: prepend stub patch embeddings
+            patches = batch["patches"].astype(x.dtype)
+            n_patch = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        ctx = Ctx(cfg, "train", positions=positions, enc_out=enc_out)
+        x, aux, _ = engine.run_segments(
+            plan, arch, arch.segments, params["stacks"], None, x, ctx)
+        if n_patch:
+            x = x[:, n_patch:]
+        targets, mask = _targets_and_mask(tokens)
+        logits = _logits(cfg, params["head"], params["embed"], x)
+        total = layers.softmax_xent(logits, targets, mask) + aux + aux_extra
+        if arch.mtp_block is not None:  # deepseek MTP: predict t+2
+            e2 = layers.embed(params["embed"], jnp.roll(tokens, -1, axis=-1),
+                              cfg.embed_scale)
+            h = jnp.concatenate(
+                [layers.rms_norm(params["mtp"]["n_x"], x, cfg.norm_eps),
+                 layers.rms_norm(params["mtp"]["n_e"], e2, cfg.norm_eps)],
+                axis=-1) @ params["mtp"]["proj"].astype(x.dtype)
+            h, _, _ = plan.block(arch.mtp_block, params["mtp"]["block"],
+                                 None, h, ctx, None)
+            logits2 = _logits(cfg, params["head"], params["embed"], h)
+            targets2 = jnp.roll(tokens, -2, axis=-1)
+            mask2 = jnp.ones(tokens.shape, jnp.float32)
+            mask2 = mask2.at[..., -2:].set(0.0)
+            total = total + cfg.mtp_loss_weight * layers.softmax_xent(
+                logits2, targets2, mask2)
+        return total
+
+    return loss
+
+
+def _mk_shard_resid(topo: Topology):
+    """Pin [..., t, d] to the Megatron-SP residual layout (t over
+    'model') immediately after row-parallel projections, so SPMD lowers
+    the TP reduction as reduce-scatter instead of all-reduce + slice."""
+    m = topo.model_shards
+
+    def shard(x):
+        t = x.shape[-2]
+        if m <= 1 or t % m:
+            return x
+        spec = P(*([None] * (x.ndim - 2)), "model", None)
+        return topo.constrain(x, spec)
+
+    return shard
+
+
+def _mk_shard_heads(topo: Topology):
+    """Pin [..., h, hd] tensors to head-sharded TP layout (divisibility
+    guarded); works under vmap (constraint applies to the logical dims)."""
+    m = topo.model_shards
+
+    def shard(x):
+        h = x.shape[-2]
+        if m <= 1 or h % m:
+            return x
+        spec = P(*([None] * (x.ndim - 2)), "model", None)
+        return topo.constrain(x, spec)
+
+    return shard
+
+
+def make_loss_master(arch: ArchDef, topo: Topology, full_mspecs, per_block,
+                     cspecs):
+    cfg = arch.cfg
+    assert not arch.enc_segments, "enc-dec archs use the replicated regime"
+    pd = (topo.pods, topo.devices_per_pod)
+    vmap2 = lambda f: jax.vmap(jax.vmap(f))
+
+    def loss_master(params, delta, batch, rngs, lift):
+        act_spec = (None if _DISABLE_OPT else
+                    P(topo.pod_axis, topo.data_axis, None, "model", None))
+        plan = FsdpPlan(cfg, lift, per_block, cspecs, pd, True,
+                        topo=topo, act_spec=act_spec)
+        tokens = batch["tokens"]                       # [P, D, b, t]
+        emb_dev = lift(params["embed"], delta["embed"],
+                       full_mspecs["embed"], cspecs["embed"])
+        x = vmap2(lambda e, tk: layers.embed(e, tk, cfg.embed_scale))(
+            emb_dev, tokens)
+        n_patch = 0
+        if cfg.n_patches:
+            patches = batch["patches"].astype(x.dtype)  # [P,D,b,np,d]
+            n_patch = patches.shape[3]
+            x = jnp.concatenate([patches, x], axis=3)
+        positions = jnp.arange(x.shape[3], dtype=jnp.int32)
+        ctx = Ctx(cfg, "train", positions=positions,
+                  shard_heads=None if _DISABLE_OPT else
+                  _mk_shard_heads(topo),
+                  shard_resid=None if _DISABLE_OPT else
+                  _mk_shard_resid(topo))
+        x, aux, _ = engine.run_segments(
+            plan, arch, arch.segments, params["stacks"], delta["stacks"],
+            x, ctx)
+        if n_patch:
+            x = x[:, :, :, n_patch:]
+        head_dev = lift(params["head"], delta["head"],
+                        full_mspecs["head"], cspecs["head"])
+        targets, mask = _targets_and_mask(tokens)
+        losses = vmap2(
+            lambda h, e, xx, tg, mk: layers.softmax_xent(
+                _logits(cfg, h, e, xx), tg, mk))(
+            head_dev, emb_dev, x, targets, mask)       # [P, D]
+        losses = losses + aux
+        if arch.mtp_block is not None:
+            mtp_dev = lift(params["mtp"], delta["mtp"],
+                           full_mspecs["mtp"], cspecs["mtp"])
+            e2 = vmap2(lambda e, tk: layers.embed(e, tk, cfg.embed_scale))(
+                emb_dev, jnp.roll(tokens, -1, axis=-1))
+            h = vmap2(lambda mp, xx, ee: jnp.concatenate(
+                [layers.rms_norm(mp["n_x"], xx, cfg.norm_eps),
+                 layers.rms_norm(mp["n_e"], ee, cfg.norm_eps)],
+                axis=-1) @ mp["proj"].astype(xx.dtype))(mtp_dev, x, e2)
+            bd = arch.mtp_block
+            h, _ = vmap2(lambda w, xx: bd.apply(w, xx, ctx, None)[:2])(
+                mtp_dev["block"], h)
+            targets2 = jnp.roll(tokens, -2, axis=-1)
+            mask2 = jnp.ones(tokens.shape, jnp.float32)
+            mask2 = mask2.at[..., -2:].set(0.0)
+            l2 = vmap2(lambda hd, e, xx, tg, mk: layers.softmax_xent(
+                _logits(cfg, hd, e, xx), tg, mk))(
+                head_dev, emb_dev, h, targets2, mask2)
+            losses = losses + cfg.mtp_loss_weight * l2
+        return jnp.sum(losses), losses
+
+    return loss_master
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class ServeGatherPlan(ReplicatedPlan):
+    """Serve-time plan for FSDP-stored params: constrain each layer's
+    shards to the compute layout (a per-layer all-gather, no autodiff)."""
+
+    def __init__(self, cfg, topo, blocks, act_spec=None):
+        super().__init__(cfg, remat=False)
+        self.topo = topo
+        self.blocks = blocks
+        self.act_spec = act_spec
+
+    def act(self, x):
+        if self.topo is None or self.act_spec is None:
+            return x
+        seq_dim = len(self.act_spec) - 2
+        if x.shape[seq_dim] % max(self.topo.model_shards, 1):
+            return x
+        return self.topo.constrain(x, self.act_spec)
+
+    def block(self, bd, lp, ld, x, ctx, cache):
+        lp = jax.tree.map(
+            lambda a, s: self.topo.constrain(a, P(*s)), lp, bd.specs,
+            is_leaf=lambda v: v is None)
+        y, aux, nc = bd.apply(lp, x, ctx, cache)
+        return self.act(y), aux, nc
+
+
+def make_cache(arch: ArchDef, b: int, max_len: int, dtype=jnp.bfloat16):
+    occ = occurrence_counts(arch.segments)
+    stacks = {}
+    for name, n in occ.items():
+        bd = arch.blocks[name]
+        if bd.cache_init is None:
+            continue
+        slice0 = jax.eval_shape(lambda: bd.cache_init(b, max_len, dtype))
+        stacks[name] = jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), slice0)
+    return {"stacks": stacks, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(arch: ArchDef, batch_ax, len_axis=None):
+    occ = occurrence_counts(arch.segments)
+    stacks = {}
+    for name in occ:
+        bd = arch.blocks[name]
+        if bd.cache_specs is None:
+            continue
+        stacks[name] = engine._prepend(bd.cache_specs(batch_ax, len_axis),
+                                       None)
+    return {"stacks": stacks, "pos": P()}
+
+
+SERVE_RESIDENT_BUDGET = 12e9   # bf16 bytes/chip below which weights stay
+                               # resident in compute layout (no per-layer
+                               # gathers at decode)
+
+
+def serve_layout(cfg: LMConfig, topo: Topology, n_params: int) -> str:
+    """'resident' (compute layout) | 'gather' (FSDP layout + per-layer
+    all-gather).  Beyond-paper optimization, EXPERIMENTS.md Sec. Perf."""
+    if cfg.param_mode != "fsdp":
+        return "resident"
+    if _DISABLE_OPT:
+        return "gather"
+    per_chip = 2.0 * n_params / max(topo.model_shards, 1)
+    return "resident" if per_chip <= SERVE_RESIDENT_BUDGET else "gather"
+
+
+def make_serve_fns(arch: ArchDef, topo: Topology, layout: str = "gather"):
+    cfg = arch.cfg
+    fsdp = cfg.param_mode == "fsdp" and layout == "gather"
+
+    def mk_plan(batch: int = 0):
+        if fsdp:
+            ba = None
+            if batch > 1:
+                axes = tuple(a for a in (topo.pod_axis, topo.data_axis)
+                             if a)
+                ba = axes if len(axes) > 1 else axes[0]
+            act_spec = P(ba, "model", None)
+            return ServeGatherPlan(cfg, topo, arch.blocks,
+                                   act_spec=act_spec)
+        return ReplicatedPlan(cfg, remat=False)
+
+    def embed_in(params, tokens):
+        e = params["embed"]
+        if fsdp:
+            e = jax.tree.map(lambda a, s: topo.constrain(a, P(*s)),
+                             e, layers.embed_specs(cfg.vocab,
+                                                   topo.model_shards))
+        return layers.embed(e, tokens, cfg.embed_scale), e
+
+    def head_out(params, e, x):
+        h = params["head"]
+        if fsdp:
+            ok = cfg.vocab % max(topo.model_shards, 1) == 0
+            hs = {"norm": P(None)}
+            if not cfg.tie_embed:
+                hs["out"] = P(None, "model" if ok else None)
+            h = jax.tree.map(lambda a, s: topo.constrain(a, P(*s)), h, hs)
+        return _logits(cfg, h, e, x)
+
+    def prefill(params, batch, max_len):
+        """Process the full prompt; returns (last-token logits, cache)."""
+        plan = mk_plan(batch["tokens"].shape[0])
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x, e = embed_in(params, tokens)
+        enc_out = None
+        if arch.enc_segments:
+            frames = batch["frames"].astype(x.dtype)
+            ex = frames @ params["adapter"]["w"].astype(x.dtype)
+            ectx = Ctx(cfg, "train",
+                       positions=jnp.arange(frames.shape[1],
+                                            dtype=jnp.int32))
+            ex, _, _ = engine.run_segments(
+                plan, arch, arch.enc_segments, params["enc_stacks"], None,
+                ex, ectx)
+            enc_out = ex
+        n_patch = 0
+        if cfg.n_patches:
+            patches = batch["patches"].astype(x.dtype)
+            n_patch = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+        cache = make_cache(arch, b, max_len,
+                           jnp.bfloat16)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        ctx = Ctx(cfg, "prefill", positions=positions,
+                  pos=jnp.zeros((), jnp.int32), enc_out=enc_out,
+                  shard_heads=_mk_shard_heads(topo) if fsdp else None)
+        x, _, new_stacks = engine.run_segments(
+            plan, arch, arch.segments, params["stacks"], None, x, ctx,
+            caches=cache["stacks"])
+        logits = head_out(params, e, x[:, -1:])
+        return logits, {"stacks": new_stacks,
+                        "pos": jnp.full((), x.shape[1], jnp.int32)}
+
+    def decode_step(params, cache, tokens):
+        """One decode step: tokens [b, 1] -> (logits [b, 1, V], cache')."""
+        plan = mk_plan(tokens.shape[0])
+        pos = cache["pos"]
+        x, e = embed_in(params, tokens)
+        positions = pos + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        ctx = Ctx(cfg, "decode", positions=positions, pos=pos)
+        x, _, new_stacks = engine.run_segments(
+            plan, arch, arch.segments, params["stacks"], None, x, ctx,
+            caches=cache["stacks"])
+        logits = head_out(params, e, x)
+        return logits, {"stacks": new_stacks, "pos": pos + tokens.shape[1]}
+
+    return prefill, decode_step
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltModel:
+    cfg: LMConfig
+    arch: ArchDef
+    topo: Topology
+    bundle: hier.ModelBundle
+    init_params: Callable
+    abstract_params: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_cache: Callable
+    cache_specs: Callable
+    serve_layout: str = "resident"
+
+
+def build_model(cfg: LMConfig, topo: Topology) -> BuiltModel:
+    arch = make_archdef(cfg, topo.model_shards)
+    cspecs = compute_specs(arch, topo.model_shards)
+    init_fn = functools.partial(init_params, arch)
+    shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    fsdp = cfg.param_mode == "fsdp"
+    mspecs, per_block = build_master_specs(arch, cspecs, shapes, topo, fsdp)
+    bundle = hier.ModelBundle(
+        loss=None if fsdp else make_loss_single(arch),
+        compute_specs=cspecs,
+        master_specs=mspecs,
+        loss_master=(make_loss_master(arch, topo, mspecs, per_block, cspecs)
+                     if fsdp else None),
+        param_mode=cfg.param_mode)
+    import math
+    n_params = sum(math.prod(a.shape) for a in jax.tree.leaves(shapes))
+    slayout = serve_layout(cfg, topo, n_params)
+    prefill, decode_step = make_serve_fns(arch, topo, slayout)
+    return BuiltModel(
+        cfg=cfg, arch=arch, topo=topo, bundle=bundle,
+        init_params=init_fn, abstract_params=lambda: shapes,
+        prefill=prefill, decode_step=decode_step,
+        make_cache=functools.partial(make_cache, arch),
+        cache_specs=functools.partial(cache_specs, arch),
+        serve_layout=slayout)

@@ -1,0 +1,294 @@
+"""Model engine: schedule-driven forwards for train (both regimes) & serve.
+
+The engine owns the scan/vmap structure so that the SAME block code serves:
+
+  * ``loss_single``  -- one replica's loss (replicated regime; ``hier``
+    vmaps it over [P, D] and differentiates w.r.t. the device copies);
+  * ``loss_master``  -- FSDP regime; the engine scans layers at top level
+    and lifts each layer's master shard via the in-backward-vote
+    ``fsdp_lift`` (passed in by ``hier``), vmapping the block over [P, D];
+  * ``prefill`` / ``decode_step`` -- single-model serving with KV caches
+    (per-layer gather for FSDP-stored params; no autodiff).
+
+Layer schedules are lists of Segments; a Segment scans ``repeats`` times
+over its ``layout`` (e.g. gemma3: 5 local + 1 global per repeat).  Tied
+blocks (zamba2's shared attention) keep ONE param set applied at every
+occurrence -- their lifts happen outside the scan so tied gradients sum
+BEFORE the sign, as the paper's per-coordinate semantics require.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.blocks import BlockDef, Ctx
+from repro.models.config import LMConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    layout: tuple[tuple[str, int], ...]      # (block_name, count per repeat)
+    repeats: int
+    tied: frozenset = frozenset()            # block names with shared params
+
+
+@dataclasses.dataclass
+class ArchDef:
+    cfg: LMConfig
+    blocks: dict[str, BlockDef]
+    segments: list[Segment]
+    enc_blocks: dict[str, BlockDef] | None = None
+    enc_segments: list[Segment] | None = None
+    mtp_block: BlockDef | None = None
+
+
+def stack_counts(segments: list[Segment]) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for seg in segments:
+        for bname, cnt in seg.layout:
+            if bname in seg.tied:
+                counts.setdefault(bname, 0)
+            else:
+                counts[bname] = counts.get(bname, 0) + cnt * seg.repeats
+    return counts
+
+
+def _stack_init(bd: BlockDef, rng, n: int):
+    if n == 0:                                # tied: single param set
+        return bd.init(rng)
+    return jax.vmap(bd.init)(jax.random.split(rng, n))
+
+
+def _prepend(spec_tree, *axes):
+    return jax.tree.map(lambda s: P(*axes, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Plans: how a block application consumes params (plain vs lifted)
+# ---------------------------------------------------------------------------
+
+class ReplicatedPlan:
+    """Single-replica application; params are plain arrays."""
+
+    def __init__(self, cfg: LMConfig, remat: bool):
+        self.remat = remat and cfg.remat
+        self.aux0 = jnp.zeros((), jnp.float32)
+
+    def act(self, x):
+        return x
+
+    def block(self, bd: BlockDef, lp, ld, x, ctx, cache):
+        fn = bd.apply
+        if self.remat and ctx.mode == "train":
+            fn = jax.checkpoint(
+                lambda p_, x_: bd.apply(p_, x_, ctx, cache))
+            y, aux, nc = fn(lp, x)
+            return y, aux, nc
+        return fn(lp, x, ctx, cache)
+
+    def lift_once(self, subtree, dsub, mspecs, cspecs):
+        return subtree                        # params already usable
+
+
+class FsdpPlan:
+    """[P, D]-batched application; params lifted per layer via fsdp_lift."""
+
+    def __init__(self, cfg: LMConfig, lift, master_specs, compute_specs,
+                 pd: tuple[int, int], remat: bool, topo=None,
+                 act_spec=None):
+        self.cfg = cfg
+        self.lift = lift
+        self.master_specs = master_specs      # per-leaf, WITHOUT pod dim
+        self.compute_specs = compute_specs
+        self.aux0 = jnp.zeros(pd, jnp.float32)
+        self.remat = remat and cfg.remat
+        self.topo = topo
+        self.act_spec = act_spec              # inter-layer residual layout
+
+    def act(self, x):
+        """Megatron-SP-style residual sharding: store the inter-layer
+        activation with its sequence dim sharded over 'model' (the layer
+        boundary all-gather/reduce-scatter pair is inserted by GSPMD).
+        Cuts remat-residual memory by the TP degree (DESIGN.md Sec. 5)."""
+        if self.topo is None or self.act_spec is None:
+            return x
+        seq_dim = len(self.act_spec) - 2
+        if x.shape[seq_dim] % max(self.topo.model_shards, 1):
+            return x
+        return self.topo.constrain(x, self.act_spec)
+
+    def block(self, bd: BlockDef, lp_and_specs, ld, x, ctx, cache):
+        lp, mspec, cspec = lp_and_specs
+        assert cache is None, "fsdp regime is train-only"
+
+        def run(lp_, ld_, x_):
+            lp_dev = self.lift(lp_, ld_, mspec, cspec)
+            def one(w, xx):
+                y, aux, _ = bd.apply(w, xx, ctx, None)
+                return y, aux
+            y, aux = jax.vmap(jax.vmap(one))(lp_dev, x_)
+            return y, aux
+
+        if self.remat and ctx.mode == "train":
+            run = jax.checkpoint(run)
+        y, aux = run(lp, ld, x)
+        return self.act(y), aux, None
+
+    def lift_once(self, subtree, dsub, mspecs, cspecs):
+        return self.lift(subtree, dsub, mspecs, cspecs)
+
+
+# ---------------------------------------------------------------------------
+# Segment runner
+# ---------------------------------------------------------------------------
+
+def run_segments(plan, arch: ArchDef, segments, stacks, dstacks, x, ctx,
+                 caches=None):
+    """Apply all segments.  Returns (x, aux, new_caches)."""
+    fsdp = isinstance(plan, FsdpPlan)
+    cursors = {b: 0 for b in arch_all_blocks(arch, segments)}
+    new_caches = {} if caches is not None else None
+    blocks = {**arch.blocks, **(arch.enc_blocks or {})}
+
+    # pre-lift tied params once (grads over occurrences sum pre-sign)
+    tied_params = {}
+    for seg in segments:
+        for bname in seg.tied:
+            if bname not in tied_params:
+                bd = blocks[bname]
+                if fsdp:
+                    tied_params[bname] = (
+                        plan.lift_once(stacks[bname], dstacks[bname],
+                                       plan.master_specs[bname],
+                                       bd.specs),
+                        None, None)
+                else:
+                    tied_params[bname] = stacks[bname]
+
+    def slice_stack(a, c0, n_seg, repeats, cnt):
+        """Slice a stacked leaf for one segment's scan.
+
+        Replicated: [n, ...] -> [repeats, cnt, ...].
+        FSDP: masters carry a leading pod dim [P, n, ...] -> move the
+        layer axis out front: [repeats, cnt, P, ...].
+        """
+        if fsdp:
+            sl = jnp.moveaxis(a[:, c0:c0 + n_seg], 1, 0)
+            return sl.reshape((repeats, cnt) + sl.shape[1:])
+        sl = a[c0:c0 + n_seg]
+        return sl.reshape((repeats, cnt) + sl.shape[1:])
+
+    aux = plan.aux0
+    for seg in segments:
+        # slice this segment's params/caches per block
+        seg_p, seg_d, seg_c = {}, {}, {}
+        for bname, cnt in seg.layout:
+            n_seg = cnt * seg.repeats
+            if bname not in seg.tied:
+                c0 = cursors[bname]
+                seg_p[bname] = jax.tree.map(
+                    lambda a: slice_stack(a, c0, n_seg, seg.repeats, cnt),
+                    stacks[bname])
+                if dstacks is not None:
+                    seg_d[bname] = jax.tree.map(
+                        lambda a: slice_stack(a, c0, n_seg, seg.repeats,
+                                              cnt), dstacks[bname])
+                cursors[bname] = c0 + n_seg
+            if caches is not None:
+                ck = f"{bname}"
+                c0c = cursors.setdefault(ck + "#cache", 0)
+                seg_c[bname] = jax.tree.map(
+                    lambda a: a[c0c:c0c + n_seg].reshape(
+                        (seg.repeats, cnt) + a.shape[1:]), caches[bname])
+                cursors[ck + "#cache"] = c0c + n_seg
+
+        def body(carry, xs):
+            x_, aux_ = carry
+            ps, ds, cs = xs
+            emitted = {}
+            for bname, cnt in seg.layout:
+                bd = blocks[bname]
+                tied = bname in seg.tied
+
+                def apply_one(lp, ld, x__, cache_slice):
+                    if fsdp:
+                        lp_in = (tied_params[bname] if tied
+                                 else (lp, plan.master_specs[bname],
+                                       bd.specs))
+                        if tied:
+                            # already lifted: direct vmap apply
+                            lifted, _, _ = tied_params[bname]
+                            def one(w, xx):
+                                y, a_, _ = bd.apply(w, xx, ctx, None)
+                                return y, a_
+                            y, a_ = jax.vmap(jax.vmap(one))(lifted, x__)
+                            return y, a_, None
+                        return plan.block(bd, lp_in, ld, x__, ctx,
+                                          cache_slice)
+                    lp_use = tied_params[bname] if tied else lp
+                    return plan.block(bd, lp_use, None, x__, ctx,
+                                      cache_slice)
+
+                if cnt == 1:
+                    lp = None if tied else jax.tree.map(
+                        lambda a: a[0], ps.get(bname))
+                    ld = None if (tied or ds is None) else jax.tree.map(
+                        lambda a: a[0], ds.get(bname))
+                    csl = (jax.tree.map(lambda a: a[0], cs[bname])
+                           if cs is not None and bname in cs else None)
+                    x_, a_, nc = apply_one(lp, ld, x_, csl)
+                    aux_ = aux_ + a_
+                    if nc is not None:
+                        emitted[bname] = jax.tree.map(
+                            lambda v: v[None], nc)
+                else:
+                    def inner(c2, xs2):
+                        x2, a2 = c2
+                        lp2, ld2, cache2 = xs2
+                        y, a_, nc2 = apply_one(lp2, ld2, x2, cache2)
+                        return (y, a2 + a_), nc2
+
+                    xs2 = (None if tied else ps[bname],
+                           None if (tied or ds is None) else ds[bname],
+                           cs[bname] if (cs is not None and bname in cs)
+                           else None)
+                    (x_, aux_), ncs = jax.lax.scan(inner, (x_, aux_), xs2,
+                                                   length=cnt)
+                    if ncs is not None:
+                        emitted[bname] = ncs
+            return (x_, aux_), (emitted or None)
+
+        xs = (seg_p or None, seg_d or None, seg_c or None)
+        (x, aux), emitted = jax.lax.scan(body, (x, aux), xs,
+                                         length=seg.repeats)
+        if caches is not None and emitted:
+            for bname, cnt in seg.layout:
+                if bname in emitted:
+                    flat = jax.tree.map(
+                        lambda a: a.reshape((-1,) + a.shape[2:]),
+                        emitted[bname])
+                    new_caches.setdefault(bname, []).append(flat)
+
+    if new_caches is not None:
+        new_caches = {b: (jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *v) if len(v) > 1 else v[0])
+            for b, v in new_caches.items()}
+    return x, aux, new_caches
+
+
+def arch_all_blocks(arch: ArchDef, segments) -> list[str]:
+    names = []
+    for seg in segments:
+        for bname, _ in seg.layout:
+            if bname not in names:
+                names.append(bname)
+    return names

@@ -1,0 +1,129 @@
+"""Basic neural blocks (pure jnp; single-replica view; TP via specs).
+
+Every block follows the same protocol:
+
+    init_<block>(rng, cfg, ...) -> params (pytree of f32 arrays)
+    <block>(params, x, ...)     -> activations
+    specs mirror init and carry the TP PartitionSpec of each leaf's *leaf*
+    dims (the engine prepends pod/data dims as needed).
+
+Sharding helpers return None-specs for dims that do not divide the model
+axis, so small archs degrade to replicated compute instead of failing.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _norm_init(rng, shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def he_init(rng, shape, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(rng, shape, jnp.float32)
+            * (1.0 / math.sqrt(fan_in)))
+
+
+def rms_norm(g, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms(rng, d):
+    return jnp.zeros((d,), jnp.float32)   # stored as (g - 1), gemma-style
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., t, h, hd] (hd even); positions: [..., t] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # [...,t,1,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d, ff, act="swiglu"):
+    ks = jax.random.split(rng, 3)
+    p = {"up": he_init(ks[0], (d, ff)), "down": he_init(ks[1], (ff, d), ff)}
+    if act == "swiglu":
+        p["gate"] = he_init(ks[2], (d, ff))
+    return p
+
+
+def mlp_specs(act="swiglu"):
+    s = {"up": P(None, "model"), "down": P("model", None)}
+    if act == "swiglu":
+        s["gate"] = P(None, "model")
+    return s
+
+
+def mlp(p, x, act="swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(rng, vocab, d):
+    return {"table": jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_specs(vocab: int = 0, model_shards: int = 0):
+    """Vocab-sharded when divisible; replicated otherwise (whisper's
+    51865 does not divide the model axis)."""
+    ok = model_shards and vocab and vocab % model_shards == 0
+    return {"table": P("model" if ok else None, None)}
+
+
+def embed(p, tokens, scale=False):
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale:
+        x = x * math.sqrt(p["table"].shape[-1])
+    return x
+
+
+def unembed(table, x):
+    """x: [..., d] -> logits [..., V] (vocab-sharded)."""
+    return x @ table.T
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Mean next-token cross-entropy; logits [..., t, V], targets [..., t].
+
+    Vocab-parallel friendly: the gold logit is extracted with a one-hot
+    reduction (local on each vocab shard + psum) instead of
+    take_along_axis, which under GSPMD would all-gather the sharded
+    logits (Megatron-style vocab-parallel xent).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(nll * mask) / denom
+    return jnp.mean(nll)

@@ -1,0 +1,49 @@
+"""The paper's EMNIST-Digits model: one-hidden-layer fully-connected net
+(Sec. V-A), plus the pieces the reference simulator needs (grad_fn,
+accuracy).  Used by the Fig. 2-4 reproduction benchmarks and the system
+behaviour tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(rng, dim=784, hidden=64, classes=10):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) / jnp.sqrt(dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, classes)) / jnp.sqrt(hidden),
+        "b2": jnp.zeros((classes,)),
+    }
+
+
+def logits_fn(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(params, batch):
+    lg = logits_fn(params, batch["x"])
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+@jax.jit
+def grad_fn(params, batch, rng):
+    """ref_fed-compatible per-device stochastic gradient."""
+    del rng
+    return jax.grad(loss_fn)(params, {"x": jnp.asarray(batch["x"]),
+                                      "y": jnp.asarray(batch["y"])})
+
+
+@jax.jit
+def accuracy(params, batch):
+    lg = logits_fn(params, jnp.asarray(batch["x"]))
+    return jnp.mean((jnp.argmax(lg, -1) == jnp.asarray(batch["y"]))
+                    .astype(jnp.float32))
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts block (GShard-style capacity dispatch, EP over 'model').
+
+Baseline dispatch is the classic one-hot einsum (the standard JAX MoE
+lowering; its dispatch FLOPs are honestly charged to the roofline).  The
+``gather`` dispatch replaces the einsums with take/segment-sum index ops
+(bytes instead of FLOPs) -- a beyond-paper perf knob evaluated in
+EXPERIMENTS.md Sec. Perf.
+
+Expert weights are sharded over the ``model`` axis (expert parallelism);
+GSPMD inserts the token all-to-all at the dispatch/combine boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import he_init
+
+
+def _experts_spec(n_experts, model_shards):
+    return "model" if (model_shards and n_experts % model_shards == 0) else None
+
+
+def init_moe(rng, cfg):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    p = {
+        "router": he_init(ks[0], (d, e.n_experts)),
+        "w_gate": he_init(ks[1], (e.n_experts, d, e.d_expert)),
+        "w_up": he_init(ks[2], (e.n_experts, d, e.d_expert)),
+        "w_down": he_init(ks[3], (e.n_experts, e.d_expert, d), e.d_expert),
+    }
+    if e.n_shared:
+        p["shared"] = layers.init_mlp(ks[4], d, e.n_shared * e.d_expert)
+    if e.dense_residual_ff:
+        p["dense"] = layers.init_mlp(ks[5], d, e.dense_residual_ff)
+    return p
+
+
+def moe_specs(cfg, model_shards):
+    e = cfg.moe
+    es = _experts_spec(e.n_experts, model_shards)
+    s = {
+        "router": P(None, None),
+        "w_gate": P(es, None, None),
+        "w_up": P(es, None, None),
+        "w_down": P(es, None, None),
+    }
+    if e.n_shared:
+        s["shared"] = layers.mlp_specs("swiglu")
+    if e.dense_residual_ff:
+        s["dense"] = layers.mlp_specs("swiglu")
+    return s
+
+
+def _route(p, xg, e):
+    """xg: [G, S, d] -> (combine [G,S,E,C], dispatch [G,S,E,C], aux_loss)."""
+    G, S, _ = xg.shape
+    cap = max(1, int(S * e.top_k / e.n_experts * e.capacity_factor))
+    logits = (xg @ p["router"]).astype(jnp.float32)          # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, e.top_k)      # [G,S,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    # one-hot per chosen expert: [G,S,k,E]
+    sel = jax.nn.one_hot(gate_idx, e.n_experts, dtype=jnp.float32)
+    # position of each (token, choice) within its expert queue
+    pos_in_e = (jnp.cumsum(sel.reshape(G, S * e.top_k, e.n_experts), axis=1)
+                .reshape(G, S, e.top_k, e.n_experts) - 1.0)
+    keep = sel * (pos_in_e < cap)
+    pos = jnp.einsum("gske,gske->gsk", pos_in_e, keep)       # chosen slot
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)     # [G,S,k,C]
+    disp = jnp.einsum("gske,gskc->gsec", keep, pos_oh)       # [G,S,E,C]
+    comb = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, keep, pos_oh)
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))        # frac routed
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e.n_experts * jnp.sum(f_e * p_e) * e.aux_loss_coef
+    return comb, disp, aux, cap
+
+
+def moe_block(p, x, cfg):
+    """x: [b, t, d] -> ([b, t, d], aux_loss)."""
+    e = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    g = max(1, n // e.group_tokens)
+    xg = x.reshape(g, n // g, d)
+    comb, disp, aux, cap = _route(p, xg, e)
+    if e.dispatch == "einsum":
+        xe = jnp.einsum("gsd,gsec->gecd", xg, disp.astype(x.dtype))
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+        y = jnp.einsum("gecd,gsec->gsd", ye, comb.astype(x.dtype))
+    else:  # gather dispatch: indices instead of one-hot matmuls
+        # token index occupying each (e, c) slot (or S -> zero pad row)
+        S = xg.shape[1]
+        slot_tok = jnp.einsum("gsec,s->gec", disp,
+                              jnp.arange(S, dtype=jnp.float32))
+        occupied = jnp.sum(disp, axis=1) > 0                  # [G,E,C]
+        idx = jnp.where(occupied, slot_tok.astype(jnp.int32), S)
+        xg_pad = jnp.concatenate(
+            [xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+        xe = jnp.take_along_axis(
+            xg_pad, idx.reshape(g, -1)[..., None], axis=1)
+        xe = xe.reshape(g, e.n_experts, cap, d)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+        y = jnp.einsum("gecd,gsec->gsd", ye, comb.astype(x.dtype))
+    y = y.reshape(b, t, d)
+    if e.n_shared:
+        y = y + layers.mlp(p["shared"], x)
+    if e.dense_residual_ff:
+        y = y + layers.mlp(p["dense"], x)
+    return y, aux

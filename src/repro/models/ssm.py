@@ -1,0 +1,414 @@
+"""State-space & recurrent blocks: Mamba2 (zamba2) and mLSTM/sLSTM (xLSTM).
+
+Mamba2 uses the chunkwise SSD formulation (intra-chunk quadratic einsums +
+lax.scan over chunk states) for train/prefill and the O(1) recurrent state
+update for decode -- this is what makes ``long_500k`` runnable for the
+SSM/hybrid archs.  mLSTM uses the parallel (decay-matrix) form for
+train/prefill and the matrix-memory recurrence for decode; sLSTM is a
+strict lax.scan over time (its recurrence is not parallelizable).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import he_init
+
+
+def _heads_spec(n, shards):
+    return "model" if (shards and n % shards == 0) else None
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(rng, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    heads = d_in // 64                      # mamba2 convention: headdim 64
+    ks = jax.random.split(rng, 8)
+    return {
+        "in_x": he_init(ks[0], (d, d_in)),
+        "in_z": he_init(ks[1], (d, d_in)),
+        "in_b": he_init(ks[2], (d, s.n_groups * s.d_state)),
+        "in_c": he_init(ks[3], (d, s.n_groups * s.d_state)),
+        "in_dt": he_init(ks[4], (d, heads)),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "conv": he_init(ks[5], (s.d_conv, d_in), s.d_conv),
+        "norm": layers.init_rms(ks[6], d_in),
+        "out": he_init(ks[7], (d_in, d), d_in),
+    }
+
+
+def mamba2_specs(cfg, model_shards):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // 64
+    hs = _heads_spec(heads, model_shards)
+    ds = _heads_spec(d_in, model_shards)
+    return {
+        "in_x": P(None, ds), "in_z": P(None, ds),
+        "in_b": P(None, None), "in_c": P(None, None),
+        "in_dt": P(None, hs), "dt_bias": P(hs), "a_log": P(hs),
+        "d_skip": P(hs), "conv": P(None, ds), "norm": P(ds),
+        "out": P(ds, None),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x: [b,t,c]; w: [k,c] depthwise.  state: [b,k-1,c] for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(k - 1):] if k > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(k - 1):]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(p, x, cfg, *, state=None):
+    """x: [b,t,d].  state: {"ssm": [b,H,64,ds], "conv": [b,k-1,d_in]} or None.
+
+    Returns (y [b,t,d], new_state or None).
+    """
+    s = cfg.ssm
+    b, t, d = x.shape
+    d_in = s.expand * d
+    H = d_in // 64
+    ds = s.d_state
+
+    z = x @ p["in_z"]
+    xc = x @ p["in_x"]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xc, p["conv"], conv_state)
+    xh = xc.reshape(b, t, H, 64)
+    B = (x @ p["in_b"]).reshape(b, t, s.n_groups, ds)
+    C = (x @ p["in_c"]).reshape(b, t, s.n_groups, ds)
+    B = jnp.repeat(B, H // s.n_groups, axis=2)               # [b,t,H,ds]
+    C = jnp.repeat(C, H // s.n_groups, axis=2)
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                      # [b,t,H]
+    a = -jnp.exp(p["a_log"])                                  # [H] < 0
+    decay = dt * a                                            # log-decay
+
+    if state is None:
+        y, _ = _ssd_chunked(xh, B, C, dt, decay, s.chunk)
+        new_state = None
+    elif t > 1:
+        # prefill: chunked scan, keep the final SSM state for decode
+        y, final = _ssd_chunked(xh, B, C, dt, decay, s.chunk)
+        new_state = {"ssm": final, "conv": new_conv}
+    else:
+        # recurrent decode (t small, typically 1):
+        st = state["ssm"].astype(jnp.float32)                 # [b,H,64,ds]
+        ys = []
+        for i in range(t):
+            g = jnp.exp(decay[:, i])[..., None, None]         # [b,H,1,1]
+            upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, i],
+                             xh[:, i].astype(jnp.float32),
+                             B[:, i].astype(jnp.float32))
+            st = g * st + upd
+            ys.append(jnp.einsum("bhpn,bhn->bhp", st,
+                                 C[:, i].astype(jnp.float32)))
+        y = jnp.stack(ys, axis=1).astype(x.dtype)             # [b,t,H,64]
+        new_state = {"ssm": st, "conv": new_conv}
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, t, d_in) * jax.nn.silu(z)
+    y = layers.rms_norm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out"], new_state
+
+
+def _ssd_chunked(xh, B, C, dt, decay, chunk):
+    """Chunkwise SSD scan.  xh: [b,t,H,p], B/C: [b,t,H,n], dt/decay [b,t,H]."""
+    b, t, H, p = xh.shape
+    n = B.shape[-1]
+    c = min(chunk, t)
+    if t % c:
+        # ragged tail: zero-pad (dt=0 -> identity state transition, zero
+        # contribution), outputs sliced back below
+        pad = c - t % c
+        z = lambda a: jnp.concatenate(
+            [a, jnp.zeros((b, pad) + a.shape[2:], a.dtype)], axis=1)
+        xh, B, C, dt, decay = map(z, (xh, B, C, dt, decay))
+        y, final = _ssd_chunked(xh, B, C, dt, decay, chunk)
+        return y[:, :t], final
+    nc = t // c
+    r = lambda a: a.reshape((b, nc, c) + a.shape[2:])
+    xh, B, C, dt, decay = map(r, (xh, B, C, dt, decay))
+    xf = (xh * dt[..., None]).astype(jnp.float32)             # dt-weighted
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    seg = jnp.cumsum(decay, axis=2)                           # [b,nc,c,H]
+    # intra-chunk (quadratic within chunk):
+    rel = seg[:, :, :, None] - seg[:, :, None]                # [b,nc,i,j,H]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    gamma = jnp.where(mask[None, None, ..., None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bgihn,bgjhn->bgijh", Cf, Bf) * gamma
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", scores, xf)
+    # chunk summaries -> inter-chunk state scan
+    tail = seg[:, :, -1:, :] - seg                            # decay to end
+    s_chunk = jnp.einsum("bgjhn,bgjhp->bghnp",
+                         Bf * jnp.exp(tail)[..., None], xf)   # [b,nc,H,n,p]
+    g_chunk = jnp.exp(seg[:, :, -1])                          # [b,nc,H]
+
+    def scan_body(carry, inp):
+        s_c, g_c = inp
+        new = carry * g_c[..., None, None] + s_c
+        return new, carry                                      # emit prev
+
+    init = jnp.zeros((b, H, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_body, init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(g_chunk, 1, 0)))
+    prev = jnp.moveaxis(prev_states, 0, 1)                    # [b,nc,H,n,p]
+    y_inter = jnp.einsum("bgihn,bghnp->bgihp",
+                         Cf * jnp.exp(seg)[..., None], prev)
+    y = (y_intra + y_inter).reshape(b, t, H, p)
+    # final carry is the state *after* the last chunk, transposed to the
+    # decode layout [b, H, p, n]
+    return y.astype(xh.dtype), jnp.moveaxis(final, -1, -2)
+
+
+def mamba2_state_init(cfg, b, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // 64
+    return {"ssm": jnp.zeros((b, H, 64, s.d_state), dtype),
+            "conv": jnp.zeros((b, s.d_conv - 1, d_in), dtype)}
+
+
+def mamba2_state_specs(cfg, model_shards, batch_axes):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = d_in // 64
+    hs = _heads_spec(H, model_shards)
+    return {"ssm": P(batch_axes, hs, None, None),
+            "conv": P(batch_axes, None, _heads_spec(d_in, model_shards))}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (parallel + recurrent) and sLSTM (sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng, cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(x.proj_factor * d)
+    H = cfg.n_heads
+    hd = d_in // H
+    ks = jax.random.split(rng, 9)
+    return {
+        "up": he_init(ks[0], (d, 2 * d_in)),
+        "conv": he_init(ks[1], (x.conv_kernel, d_in), x.conv_kernel),
+        "wq": he_init(ks[2], (d_in, d_in)),
+        "wk": he_init(ks[3], (d_in, d_in)),
+        "wv": he_init(ks[4], (d_in, d_in)),
+        "wi": he_init(ks[5], (d_in, H)),
+        "wf": he_init(ks[6], (d_in, H)),
+        "fb": jnp.full((H,), 3.0, jnp.float32),   # forget bias (keep)
+        "norm": layers.init_rms(ks[7], d_in),
+        "down": he_init(ks[8], (d_in, d), d_in),
+    }
+
+
+def mlstm_specs(cfg, model_shards):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    ds = _heads_spec(d_in, model_shards)
+    hs = _heads_spec(cfg.n_heads, model_shards)
+    return {"up": P(None, None), "conv": P(None, ds),
+            "wq": P(None, ds), "wk": P(None, ds), "wv": P(None, ds),
+            "wi": P(None, hs), "wf": P(None, hs), "fb": P(hs),
+            "norm": P(ds), "down": P(ds, None)}
+
+
+def mlstm_block(p, x, cfg, *, state=None):
+    """x: [b,t,d] -> (y, new_state).  state: {"C":[b,H,hd,hd], "n":[b,H,hd],
+    "m":[b,H], "conv":[b,k-1,d_in]}."""
+    xc_cfg = cfg.xlstm
+    b, t, d = x.shape
+    d_in = int(xc_cfg.proj_factor * d)
+    H = cfg.n_heads
+    hd = d_in // H
+    up = x @ p["up"]
+    u, z = up[..., :d_in], up[..., d_in:]
+    conv_state = None if state is None else state["conv"]
+    uc, new_conv = _causal_conv(u, p["conv"], conv_state)
+    q = (uc @ p["wq"]).reshape(b, t, H, hd)
+    k = (uc @ p["wk"]).reshape(b, t, H, hd) / math.sqrt(hd)
+    v = (u @ p["wv"]).reshape(b, t, H, hd)
+    i_pre = (uc @ p["wi"]).astype(jnp.float32)                # [b,t,H]
+    f_pre = (uc @ p["wf"]).astype(jnp.float32) + p["fb"]
+
+    if state is None:
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_state = None
+    elif t > 1:
+        # prefill: parallel output + closed-form final (C, n, m)
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre)
+        logf = jax.nn.log_sigmoid(f_pre)
+        cf = jnp.cumsum(logf, axis=1)                          # [b,t,H]
+        w_log = cf[:, -1:] - cf + i_pre                        # [b,t,H]
+        m = jnp.max(w_log, axis=1)                             # [b,H]
+        w = jnp.exp(w_log - m[:, None])
+        C = jnp.einsum("bth,bthp,bthq->bhpq", w,
+                       k.astype(jnp.float32), v.astype(jnp.float32))
+        n = jnp.einsum("bth,bthp->bhp", w, k.astype(jnp.float32))
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    else:
+        C = state["C"].astype(jnp.float32)
+        n = state["n"].astype(jnp.float32)
+        m = state["m"].astype(jnp.float32)
+        ys = []
+        for s_ in range(t):
+            logf = jax.nn.log_sigmoid(f_pre[:, s_])
+            m_new = jnp.maximum(logf + m, i_pre[:, s_])
+            fg = jnp.exp(logf + m - m_new)[..., None, None]
+            ig = jnp.exp(i_pre[:, s_] - m_new)[..., None, None]
+            kv = jnp.einsum("bhp,bhq->bhpq", k[:, s_].astype(jnp.float32),
+                            v[:, s_].astype(jnp.float32))
+            C = fg * C + ig * kv
+            n = fg[..., 0] * n + ig[..., 0] * k[:, s_].astype(jnp.float32)
+            m = m_new
+            num = jnp.einsum("bhpq,bhp->bhq", C,
+                             q[:, s_].astype(jnp.float32))
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhp,bhp->bh", n,
+                                   q[:, s_].astype(jnp.float32))),
+                1.0)[..., None]
+            ys.append((num / den).astype(x.dtype))
+        y = jnp.stack(ys, axis=1)                              # [b,t,H,hd]
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    y = y.reshape(b, t, d_in)
+    y = layers.rms_norm(p["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["down"], new_state
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Parallel (decay-matrix) mLSTM: quadratic in t, used for train/prefill."""
+    b, t, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)                           # [b,t,H]
+    cf = jnp.cumsum(logf, axis=1)
+    # D[i,j] = exp(cf_i - cf_j + i_j) for j <= i (stabilized)
+    rel = cf[:, :, None] - cf[:, None] + i_pre[:, None]        # [b,i,j,H]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    rel = jnp.where(mask[None, ..., None], rel, -jnp.inf)
+    m = jnp.maximum(jnp.max(rel, axis=2, keepdims=True), 0.0)  # stabilizer
+    D = jnp.exp(rel - m)                                       # [b,i,j,H]
+    scores = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2)),
+                       jnp.exp(-m[:, :, 0]))                   # [b,i,H]
+    y = jnp.einsum("bijh,bjhd->bihd", scores, v.astype(jnp.float32))
+    return (y / norm[..., None]).astype(q.dtype)
+
+
+def mlstm_state_init(cfg, b, dtype=jnp.float32):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    hd = d_in // H
+    return {"C": jnp.zeros((b, H, hd, hd), dtype),
+            "n": jnp.zeros((b, H, hd), dtype),
+            "m": jnp.zeros((b, H), dtype),
+            "conv": jnp.zeros((b, x.conv_kernel - 1, d_in), dtype)}
+
+
+def mlstm_state_specs(cfg, model_shards, batch_axes):
+    H = cfg.n_heads
+    hs = _heads_spec(H, model_shards)
+    d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+    return {"C": P(batch_axes, hs, None, None),
+            "n": P(batch_axes, hs, None), "m": P(batch_axes, hs),
+            "conv": P(batch_axes, None, _heads_spec(d_in, model_shards))}
+
+
+def init_slstm(rng, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(rng, 7)
+    return {
+        "wx": he_init(ks[0], (d, 4 * d)),                      # i,f,z,o
+        "wr": he_init(ks[1], (H, hd, 4 * hd), hd),             # block recurrent
+        "fb": jnp.full((H,), 3.0, jnp.float32),
+        "norm": layers.init_rms(ks[2], d),
+        "up": he_init(ks[3], (d, int(4 * d / 3) * 2)),
+        "down": he_init(ks[4], (int(4 * d / 3), d), int(4 * d / 3)),
+    }
+
+
+def slstm_specs(cfg, model_shards):
+    H = cfg.n_heads
+    hs = _heads_spec(H, model_shards)
+    return {"wx": P(None, None), "wr": P(hs, None, None), "fb": P(hs),
+            "norm": P(None), "up": P(None, None), "down": P(None, None)}
+
+
+def slstm_block(p, x, cfg, *, state=None):
+    """Sequential sLSTM + gated FFN.  state: {"c","n","h":[b,H,hd],"m":[b,H]}."""
+    b, t, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xg = (x @ p["wx"]).reshape(b, t, H, 4 * hd).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, H, hd), jnp.float32)
+        h0 = jnp.zeros((b, H, hd), jnp.float32)
+        n0 = jnp.ones((b, H, hd), jnp.float32)
+        m0 = jnp.zeros((b, H), jnp.float32)
+    else:
+        c0, h0 = state["c"].astype(jnp.float32), state["h"].astype(jnp.float32)
+        n0, m0 = state["n"].astype(jnp.float32), state["m"].astype(jnp.float32)
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["wr"])           # [b,H,4hd]
+        g = xt + rec
+        ih, fh, zh, oh = jnp.split(g, 4, axis=-1)
+        i_pre = jnp.mean(ih, axis=-1)                          # scalar gates/head
+        f_pre = jnp.mean(fh, axis=-1) + p["fb"]
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + m, i_pre)
+        fg = jnp.exp(jax.nn.log_sigmoid(f_pre) + m - m_new)[..., None]
+        ig = jnp.exp(i_pre - m_new)[..., None]
+        z = jnp.tanh(zh)
+        o = jax.nn.sigmoid(oh)
+        c = fg * c + ig * z
+        n = fg * n + ig
+        h = o * (c / jnp.maximum(n, 1.0))
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (c0, n0, h0, m0), jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y, cfg.norm_eps)
+    # gated FFN
+    ff = int(4 * d / 3)
+    uv = y @ p["up"]
+    y = (jax.nn.silu(uv[..., :ff]) * uv[..., ff:]) @ p["down"]
+    new_state = None if state is None else {"c": c, "n": n, "h": h, "m": m}
+    return y, new_state
+
+
+def slstm_state_init(cfg, b, dtype=jnp.float32):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {"c": z(b, H, hd), "n": jnp.ones((b, H, hd), dtype),
+            "h": z(b, H, hd), "m": z(b, H)}
+
+
+def slstm_state_specs(cfg, model_shards, batch_axes):
+    hs = _heads_spec(cfg.n_heads, model_shards)
+    return {"c": P(batch_axes, hs, None), "n": P(batch_axes, hs, None),
+            "h": P(batch_axes, hs, None), "m": P(batch_axes, hs)}

@@ -1,0 +1,84 @@
+"""Elastic membership & straggler handling for the hierarchical mesh.
+
+The paper's aggregation rules are natively elastic, and this module turns
+that into runtime policy:
+
+  * Cloud tier: w = sum_q (D_q/N) v_q -- the weights are *runtime inputs*
+    to the compiled step, so pods joining/leaving between global rounds
+    only require reweighting (no recompilation).  A lost pod's weight is
+    renormalized over the survivors (``edge_weights``).
+  * Edge tier: the majority vote takes a per-device ``vote mask``; a
+    straggler or failed device simply abstains (Theorem 3's MAP argument
+    holds for the reduced voter count).  ``quorum`` decides whether
+    enough votes arrived to apply the step at all.
+
+``Membership`` tracks liveness from heartbeats (simulated in tests by
+fault injection) and produces the (edge_weights, dev_weights, mask)
+triple every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Membership:
+    pods: int
+    devices_per_pod: int
+    data_sizes: np.ndarray | None = None      # [P, D] |D_qk| (None = equal)
+    quorum: float = 0.5                       # min live-vote fraction/edge
+    heartbeat_timeout: float = 3.0
+
+    def __post_init__(self):
+        if self.data_sizes is None:
+            self.data_sizes = np.ones((self.pods, self.devices_per_pod))
+        self.live = np.ones((self.pods, self.devices_per_pod), bool)
+        self.last_seen = np.zeros((self.pods, self.devices_per_pod))
+
+    # -- liveness -----------------------------------------------------------
+    def heartbeat(self, pod: int, dev: int, now: float):
+        self.last_seen[pod, dev] = now
+        self.live[pod, dev] = True
+
+    def mark_failed(self, pod: int, dev: int | None = None):
+        if dev is None:
+            self.live[pod, :] = False
+        else:
+            self.live[pod, dev] = False
+
+    def sweep(self, now: float):
+        self.live &= (now - self.last_seen) <= self.heartbeat_timeout
+
+    # -- weights ------------------------------------------------------------
+    def pod_live(self) -> np.ndarray:
+        """[P] -- a pod participates if it meets the vote quorum."""
+        frac = self.live.mean(axis=1)
+        return frac >= self.quorum
+
+    def weights(self):
+        """(edge_weights [P], dev_weights [P, D], vote_mask [P, D]).
+
+        Failed devices lose their vote AND their anchor weight; failed
+        pods lose their cloud-aggregation weight (renormalized).  All are
+        plain float arrays fed to the already-compiled step.
+        """
+        mask = self.live.astype(np.float32)
+        pod_ok = self.pod_live().astype(np.float32)
+        if (pod_ok * mask.sum(axis=1)).sum() == 0:
+            # fail-open: if no pod meets quorum the only alternative to
+            # zeroing the model is to keep every voter counted; real
+            # deployments alert here but must not destroy state.
+            mask = np.ones_like(mask)
+            pod_ok = np.ones_like(pod_ok)
+        mask = mask * pod_ok[:, None]        # sub-quorum pod: all votes out
+        d_eff = self.data_sizes * mask
+        dq = d_eff.sum(axis=1)
+        dev_w = np.where(dq[:, None] > 0, d_eff / np.maximum(
+            dq[:, None], 1e-9), 0.0)
+        pod_sizes = dq * pod_ok
+        n = pod_sizes.sum()
+        edge_w = pod_sizes / max(n, 1e-9)
+        return (edge_w.astype(np.float32), dev_w.astype(np.float32),
+                (mask * pod_ok[:, None]).astype(np.float32))

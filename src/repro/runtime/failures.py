@@ -1,0 +1,73 @@
+"""Failure detection + recovery policy for the training driver.
+
+Detection signals:
+  * non-finite loss (desync / data corruption / numeric blow-up),
+  * step-time outliers (straggler escalation: after ``patience``
+    consecutive slow steps a device is demoted to abstention via the
+    vote mask; the paper's majority vote makes this loss-free),
+  * injected faults (tests / chaos engineering hooks).
+
+Recovery: restore the newest intact checkpoint and replay.  Because the
+data pipeline is cursor-addressable (batch = f(seed, step)), replay is
+deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+
+@dataclasses.dataclass
+class FailurePolicy:
+    straggler_factor: float = 3.0    # x median step time
+    patience: int = 3
+    max_restores: int = 5
+
+
+class FailureDetector:
+    def __init__(self, policy: FailurePolicy | None = None):
+        self.policy = policy or FailurePolicy()
+        self.step_times: list[float] = []
+        self.slow_counts: dict[tuple[int, int], int] = {}
+        self.restores = 0
+
+    def check_loss(self, loss: float) -> bool:
+        """True -> healthy; False -> restore required."""
+        return math.isfinite(loss)
+
+    def record_step(self, dt: float):
+        self.step_times.append(dt)
+        if len(self.step_times) > 256:
+            self.step_times.pop(0)
+
+    def median_step(self) -> float:
+        if not self.step_times:
+            return 0.0
+        s = sorted(self.step_times)
+        return s[len(s) // 2]
+
+    def device_slow(self, pod: int, dev: int, dt: float) -> bool:
+        """Per-device straggler accounting; True -> demote to abstention."""
+        med = self.median_step()
+        key = (pod, dev)
+        if med and dt > self.policy.straggler_factor * med:
+            self.slow_counts[key] = self.slow_counts.get(key, 0) + 1
+        else:
+            self.slow_counts[key] = 0
+        return self.slow_counts[key] >= self.policy.patience
+
+    def may_restore(self) -> bool:
+        self.restores += 1
+        return self.restores <= self.policy.max_restores
+
+
+class FaultInjector:
+    """Deterministic chaos hooks for tests/examples."""
+
+    def __init__(self, schedule: dict[int, tuple[str, int, int | None]]):
+        # schedule: step -> ("device"|"pod"|"nan", pod, dev)
+        self.schedule = schedule
+
+    def at(self, step: int):
+        return self.schedule.get(step)

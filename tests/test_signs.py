@@ -1,0 +1,84 @@
+"""Unit + property tests for the sign-compression primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import signs
+
+
+def test_sgn_zero_is_plus_one():
+    assert int(signs.sgn(jnp.zeros(()))) == 1
+    x = jnp.array([-2.0, -0.0, 0.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(signs.sgn(x)), [-1, 1, 1, 1])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=200))
+def test_pack_unpack_roundtrip(bits):
+    s = jnp.asarray([1 if b else -1 for b in bits], jnp.int8)
+    words = signs.pack_signs(s)
+    out = signs.unpack_signs(words, len(bits))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s))
+    assert words.shape[-1] == signs.packed_size(len(bits))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 70), st.integers(0, 2**31 - 1))
+def test_vote_packed_equals_dense(k, n, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.choice([-1, 1], size=(k, n)).astype(np.int8)
+    dense = signs.majority_vote(jnp.asarray(s), axis=0)
+    words = signs.pack_signs(jnp.asarray(s))
+    packed = signs.majority_vote_packed(words, n)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(packed))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 40), st.integers(0, 2**31 - 1))
+def test_vote_mask_equals_subset(k, n, seed):
+    """Masked vote == vote over the unmasked subset (abstention)."""
+    rng = np.random.default_rng(seed)
+    s = rng.choice([-1, 1], size=(k, n)).astype(np.int8)
+    mask = rng.integers(0, 2, size=k).astype(np.int32)
+    if mask.sum() == 0:
+        mask[0] = 1
+    v_mask = signs.majority_vote(jnp.asarray(s), jnp.asarray(mask)[:, None],
+                                 axis=0)
+    v_sub = signs.majority_vote(jnp.asarray(s[mask == 1]), axis=0)
+    np.testing.assert_array_equal(np.asarray(v_mask), np.asarray(v_sub))
+
+
+def test_vote_tie_positive():
+    s = jnp.asarray([[1], [-1]], jnp.int8)
+    assert int(signs.majority_vote(s, axis=0)[0]) == 1
+    words = signs.pack_signs(s)
+    assert int(signs.majority_vote_packed(words, 1)[0]) == 1
+
+
+def test_ternary_unbiased_and_support():
+    # small dim => keep probabilities (and the estimator SNR) high enough
+    # that 256 draws pin the mean: per-coord std ~ norm*sqrt(p)/16.
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    qs = jnp.stack([signs.ternary_quantize(x, jax.random.PRNGKey(i))
+                    for i in range(256)])
+    # unbiasedness: mean over draws approaches x
+    err = jnp.abs(jnp.mean(qs, 0) - x).mean() / jnp.abs(x).mean()
+    assert float(err) < 0.5
+    # support: values are {0, +-||x||}
+    norm = float(jnp.linalg.norm(x))
+    vals = np.asarray(jnp.unique(jnp.abs(qs)))
+    for v in vals:
+        assert min(abs(v), abs(v - norm)) < 1e-3 * max(norm, 1.0), vals
+
+
+def test_uplink_bits_table_ii():
+    d, te = 1000, 15
+    assert signs.uplink_bits("hier_sgd", d, te) == 32 * te * d
+    assert signs.uplink_bits("hier_signsgd", d, te) == te * d
+    assert signs.uplink_bits("dc_hier_signsgd", d, te) == te * d + 32 * d
+    assert signs.uplink_bits("hier_local_qsgd", d, te) > te * d
+    # the paper's headline: sign methods are ~32x cheaper than FP32
+    assert signs.uplink_bits("hier_sgd", d, te) / signs.uplink_bits(
+        "hier_signsgd", d, te) == 32

@@ -1,0 +1,68 @@
+"""Vote transports must be bit-identical and correct at P=D=1 (single dev).
+
+The multi-device equivalence (8 host CPUs, 2x2x2 mesh) runs in a
+subprocess -- see test_distributed.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import signs, votes
+from repro.core.topology import single_device_topology
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return single_device_topology()
+
+
+@pytest.mark.parametrize("leaf_shape", [(64,), (3, 64), (5, 7, 32)])
+def test_transports_identical(topo, leaf_shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5) + leaf_shape)
+    s = signs.sgn(x)
+    v1 = votes.vote_ar_int8(topo, s, None)
+    v2 = votes.vote_ag_packed(topo, s, None, P(*([None] * len(leaf_shape))))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    # oracle per pod
+    for p in range(2):
+        ref = signs.majority_vote(s[p].reshape(5, -1), axis=0)
+        np.testing.assert_array_equal(
+            np.asarray(v1[p]).reshape(-1), np.asarray(ref))
+
+
+def test_transports_mask(topo):
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 128))
+    s = signs.sgn(x)
+    mask = jnp.asarray([[1, 1, 0, 1, 0, 1]], jnp.float32) > 0
+    v1 = votes.vote_ar_int8(topo, s, mask)
+    v2 = votes.vote_ag_packed(topo, s, mask, P(None))
+    ref = signs.majority_vote(s[0][np.asarray(mask[0])], axis=0)
+    np.testing.assert_array_equal(np.asarray(v1[0]), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(v2[0]), np.asarray(ref))
+
+
+def test_packed_dispatch_fallback(topo):
+    """Leaves with minor dim % 32 != 0 fall back to int8 (same result)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 33))
+    s = signs.sgn(x)
+    out = votes.majority_vote_dev(topo, s, None, "ag_packed", P(None))
+    ref = signs.majority_vote(s[0], axis=0)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref))
+
+
+def test_pod_weighted_average(topo):
+    v = jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 3.0)])
+    w = jnp.asarray([0.25, 0.75])
+    out = votes.pod_weighted_average(topo, v, w)
+    np.testing.assert_allclose(np.asarray(out), 2.5)
+    assert out.shape == v.shape  # broadcast back to every pod
+
+
+def test_weighted_mean_dev(topo):
+    g = jnp.arange(12, dtype=jnp.float32).reshape(1, 3, 4)
+    w = jnp.asarray([[0.5, 0.25, 0.25]])
+    out = votes.weighted_mean_dev(topo, g, w)
+    ref = 0.5 * g[0, 0] + 0.25 * g[0, 1] + 0.25 * g[0, 2]
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref))
