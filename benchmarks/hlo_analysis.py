@@ -122,8 +122,12 @@ def _parse_call(rest: str):
         ops.append(cur.strip())
     names = []
     for o in ops:
-        m = re.match(r"%?([\w.\-]+)", o.strip())
-        names.append(m.group(1) if m else o.strip())
+        o = o.strip()
+        # operands appear either as bare refs ("%fusion.5" / "fusion.5") or
+        # fully typed ("f32[8,1024]{1,0} %p.19"): prefer the trailing %name
+        m = (re.search(r"%([\w.\-]+)\s*$", o)
+             or re.match(r"%?([\w.\-]+)", o))
+        names.append(m.group(1) if m else o)
     return opcode, names, attrs
 
 

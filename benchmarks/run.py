@@ -1,7 +1,10 @@
 """Benchmark entry point: one function per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV and mirrors it to
-reports/bench_results.csv.
+reports/bench_results.csv plus machine-readable
+reports/bench_results.json (so future PRs can diff perf).
+(The transport sweep lives in benchmarks/bench_transports.py and emits
+BENCH_transports.json.)
 
   table2    device->edge uplink bits per round  (paper Table II)
   fig2      4-method accuracy, IID & non-IID    (paper Fig. 2)
@@ -14,6 +17,7 @@ Flags: ``--only fig2`` to run a subset; ``--fast`` shrinks seeds/rounds.
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 
@@ -26,8 +30,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
 
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
-                           / "src"))
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root))
+    sys.path.insert(0, str(root / "src"))
     from benchmarks import paper_figs, roofline
 
     rows = []
@@ -58,6 +63,10 @@ def main() -> None:
     rep = pathlib.Path(__file__).resolve().parents[1] / "reports"
     rep.mkdir(exist_ok=True)
     (rep / "bench_results.csv").write_text(csv + "\n")
+    (rep / "bench_results.json").write_text(json.dumps({
+        "rows": [{"name": name, "us_per_call": us, "derived": derived}
+                 for name, us, derived in rows],
+    }, indent=2) + "\n")
 
 
 if __name__ == "__main__":

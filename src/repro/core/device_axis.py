@@ -65,6 +65,9 @@ class LiftCfg:
     """Static configuration for the FSDP lift (closed over, not traced)."""
     topo: Topology
     transport: str = "ag_packed"     # ag_packed | ar_int8 | wmean
+                                     # ("fused" degrades to ag_packed here:
+                                     # the lift votes per layer, so the
+                                     # whole-tree flat buffer never forms)
     rho: float = 0.2
     compute_dtype: Any = jnp.bfloat16
 

@@ -1,0 +1,200 @@
+"""Flat-buffer gradient bucketization: one contiguous view of a pytree.
+
+The sign->pack->vote->update sweep is elementwise and coordinate-order
+agnostic, so running it per-leaf under ``jax.tree.map`` only buys N small
+dispatches, N ragged pads, and N tiny collectives.  This module precomputes
+a **static leaf layout** for any float pytree so the hot path can operate on
+ONE contiguous ``[..., n_pad]`` buffer (or its 1-bit packed twin) instead:
+
+  * every leaf is assigned a coordinate range ``[offset, offset + size)``
+    with ``offset % 32 == 0`` (leaf tails padded to the 32-bit pack word),
+    so the float and packed-word domains share the same layout:
+    leaf i's words are exactly ``[offset/32, (offset + padded)/32)``;
+  * the total is padded to the 32*128 TPU tile (one packed word per lane),
+    so 2D views handed to the Pallas kernels need no further padding;
+  * dtype promotion rule: the buffer dtype is ``jnp.promote_types`` over
+    all leaf dtypes (float leaves only) -- promotion is widening, so
+    ``unflatten_tree(flatten_tree(t))`` restores every leaf bit-exactly.
+
+``flatten_tree``/``unflatten_tree`` are cheap reshape/slice views around a
+single concatenate (unflatten is pure views); ``pack_tree`` fuses the DC
+correction ``u + rho*delta`` and the sign into the per-leaf pack and
+concatenates at the *word* level, so the full-precision buffer is never
+materialized on the fallback path (the wire payload is 1/32 the tally).
+
+Padding convention: float padding is 0 and ``sgn(0) = +1``, bit-identical
+to ``signs.pack_signs``'s all-ones tail bits -- so
+``pack_tree(layout, t) == pack_signs(sgn(flatten_tree(layout, t)))``
+holds bitwise (tested in tests/test_flatbuf.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import signs
+
+PyTree = Any
+
+PACK = signs.PACK_WIDTH          # 32 sign bits per uint32 word
+LANES = 128                      # TPU lane count
+TILE = PACK * LANES              # 4096 coords = 128 packed words
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Static placement of one leaf inside the flat buffer."""
+    shape: tuple[int, ...]       # leaf dims (batch dims excluded)
+    dtype: Any                   # original leaf dtype (restored on unflatten)
+    size: int                    # prod(shape)
+    padded: int                  # size padded to a PACK multiple
+    offset: int                  # coordinate offset; offset % PACK == 0
+
+    @property
+    def word_offset(self) -> int:
+        return self.offset // PACK
+
+    @property
+    def words(self) -> int:
+        return self.padded // PACK
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static layout of a pytree as one tile-aligned flat buffer."""
+    treedef: Any
+    slots: tuple[LeafSlot, ...]
+    n: int                       # real coordinates (sum of slot sizes)
+    n_pad: int                   # buffer length; n_pad % TILE == 0
+    dtype: Any                   # promoted float dtype of the flat buffer
+
+    @property
+    def n_words(self) -> int:
+        return self.n_pad // PACK
+
+
+def make_layout(tree: PyTree, batch_dims: int = 0,
+                tile: int = TILE) -> FlatLayout:
+    """Compute the static layout of ``tree`` (shapes/dtypes only).
+
+    batch_dims: number of leading dims shared by every leaf (e.g. 2 for
+    ``[P, D, *leaf]`` per-device gradients) that stay un-flattened.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot lay out an empty pytree")
+    slots = []
+    offset = 0
+    dtype = None
+    kinds = set()
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            kinds.add("float")
+        elif jnp.issubdtype(leaf.dtype, jnp.signedinteger):
+            kinds.add("int")
+        else:
+            raise ValueError(
+                "flatbuf only buckets float / signed-int leaves, got "
+                f"{leaf.dtype}")
+    if len(kinds) > 1:
+        # jnp.promote_types(int32, bfloat16) == bfloat16 -- NOT widening,
+        # so a mixed buffer could corrupt int values; keep trees
+        # dtype-kind homogeneous (sign trees are all-int, grads all-float)
+        raise ValueError("flatbuf trees must not mix int and float leaves")
+    for leaf in leaves:
+        shape = tuple(leaf.shape[batch_dims:])
+        size = int(functools.reduce(lambda a, b: a * b, shape, 1))
+        padded = _ceil_to(max(size, 1), PACK)
+        slots.append(LeafSlot(shape=shape, dtype=leaf.dtype, size=size,
+                              padded=padded, offset=offset))
+        offset += padded
+        dtype = (leaf.dtype if dtype is None
+                 else jnp.promote_types(dtype, leaf.dtype))
+    n = sum(s.size for s in slots)
+    return FlatLayout(treedef=treedef, slots=tuple(slots), n=n,
+                      n_pad=_ceil_to(offset, tile), dtype=jnp.dtype(dtype))
+
+
+def _flat_leaf(slot: LeafSlot, leaf: jax.Array, batch_dims: int):
+    batch = leaf.shape[:batch_dims]
+    flat = leaf.reshape(batch + (slot.size,))
+    if slot.padded != slot.size:
+        flat = jnp.pad(flat, [(0, 0)] * batch_dims
+                       + [(0, slot.padded - slot.size)])
+    return flat
+
+
+def flatten_tree(layout: FlatLayout, tree: PyTree, batch_dims: int = 0,
+                 dtype: Any = None) -> jax.Array:
+    """tree -> ``[*batch, n_pad]`` buffer in the (promoted) buffer dtype."""
+    dtype = layout.dtype if dtype is None else dtype
+    leaves = layout.treedef.flatten_up_to(tree)
+    parts = [_flat_leaf(s, leaf.astype(dtype), batch_dims)
+             for s, leaf in zip(layout.slots, leaves)]
+    buf = jnp.concatenate(parts, axis=-1)
+    tail = layout.n_pad - buf.shape[-1]
+    if tail:
+        buf = jnp.pad(buf, [(0, 0)] * batch_dims + [(0, tail)])
+    return buf
+
+
+def unflatten_tree(layout: FlatLayout, buf: jax.Array, batch_dims: int = 0,
+                   cast: bool = True) -> PyTree:
+    """``[*batch, n_pad]`` buffer -> pytree of slice views.
+
+    cast=True restores each leaf's original dtype (exact for widening
+    promotions); cast=False keeps ``buf.dtype`` (e.g. int8 vote bits).
+    """
+    batch = buf.shape[:batch_dims]
+    leaves = []
+    for s in layout.slots:
+        leaf = buf[..., s.offset:s.offset + s.size].reshape(batch + s.shape)
+        leaves.append(leaf.astype(s.dtype) if cast else leaf)
+    return layout.treedef.unflatten(leaves)
+
+
+def _with_mid_axes(x: jax.Array, batch_dims: int, target_batch: int):
+    """[*b, n] -> [*b, 1...1, n] broadcastable against target_batch dims."""
+    for _ in range(target_batch - batch_dims):
+        x = x[..., None, :]
+    return x
+
+
+def pack_tree(layout: FlatLayout, tree: PyTree, batch_dims: int = 0,
+              delta: PyTree | None = None, rho: float = 0.0,
+              delta_batch_dims: int = 0) -> jax.Array:
+    """Fused (u + rho*delta) -> sign -> 1-bit pack, concatenated per word.
+
+    Returns ``[*batch, n_pad/32]`` uint32.  The correction is added in each
+    leaf's own dtype -- exactly ``u + rho * delta.astype(u.dtype)``, the
+    same arithmetic the per-leaf tree path uses -- so votes stay
+    bit-identical to the ``ag_packed`` transport.  Word concatenation means
+    the full-precision flat buffer never exists: only the 1-bit payload is
+    contiguous.  Tail words are all-ones (+1 signs), matching
+    ``pack_signs`` padding.
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    dl_leaves = (layout.treedef.flatten_up_to(delta)
+                 if delta is not None else [None] * len(leaves))
+    parts = []
+    for slot, leaf, dl in zip(layout.slots, leaves, dl_leaves):
+        u = leaf.reshape(leaf.shape[:batch_dims] + (slot.size,))
+        if dl is not None and rho:
+            dlf = dl.reshape(dl.shape[:delta_batch_dims] + (slot.size,))
+            dlf = _with_mid_axes(dlf, delta_batch_dims, batch_dims)
+            u = u + rho * dlf.astype(u.dtype)
+        parts.append(signs.pack_signs(signs.sgn(u)))      # pads to +1 bits
+    words = jnp.concatenate(parts, axis=-1)
+    tail = layout.n_words - words.shape[-1]
+    if tail:
+        words = jnp.pad(words, [(0, 0)] * batch_dims + [(0, tail)],
+                        constant_values=jnp.uint32(0xFFFFFFFF))
+    return words

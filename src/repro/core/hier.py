@@ -17,6 +17,10 @@ At a round boundary (step % T_E == 0) a prologue first runs
 
 Then the local step: per-device grads -> (+ rho*delta, + EF residual) ->
 sign -> majority vote over the ``data`` axis -> v_q <- v_q - mu * vote.
+With ``transport="fused"`` the sign/vote chain runs over ONE contiguous
+flat buffer (``core.flatbuf`` layout, DC correction fused pre-sign,
+Pallas kernels on TPU) instead of per-leaf tree maps -- bit-identical
+votes, one gather (see the transport matrix in ``core.votes``).
 
 Methods: hier_signsgd | dc_hier_signsgd | hier_sgd | hier_local_qsgd,
 plus beyond-paper options (error feedback, sign-momentum) in the
@@ -54,7 +58,8 @@ class AlgoConfig:
     mu_sgd: float = 0.1               # full-precision baseline step size
     t_e: int = 15                     # local steps per global round
     rho: float = 0.2                  # correction strength (DC)
-    transport: str = "ag_packed"      # ag_packed (faithful) | ar_int8 (optimized)
+    transport: str = "ag_packed"      # ag_packed (faithful) | ar_int8
+                                      # | fused (flat-buffer, Pallas-backed)
     anchor_staleness: int = 1         # 1 = paper's pipelined delta, 0 = fresh
     error_feedback: bool = False      # beyond-paper (replicated regime only)
     momentum: float = 0.0             # beyond-paper signum-style momentum
@@ -62,6 +67,12 @@ class AlgoConfig:
     master_dtype: Any = jnp.float32
     delta_dtype: Any = jnp.bfloat16
     decay: bool = False               # mu_t = mu / sqrt(round + 1)
+
+    def __post_init__(self):
+        if self.method not in ALL_METHODS:
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.transport not in votes.SIGN_TRANSPORTS:
+            raise ValueError(f"unknown transport {self.transport!r}")
 
     @property
     def is_sign(self) -> bool:
@@ -228,11 +239,24 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             if algo.error_feedback:
                 u_dev = jax.tree.map(
                     lambda u, e: u.astype(jnp.float32) + e, u_dev, state.ef)
-            if algo.is_dc:
+            mask = maskf > 0.5
+            # the fused flat-buffer transport folds the DC correction
+            # pre-sign into its single device-side sweep (Alg. 2's
+            # sgn(g + rho*delta), same arithmetic => bit-identical); the
+            # EF update needs the explicit per-leaf signs, so EF runs
+            # the tree path up to the vote.
+            fold_dc = (algo.transport == "fused" and algo.is_dc
+                       and not algo.error_feedback)
+            if algo.is_dc and not fold_dc:
                 d_dev = _bcast_pd(topo, delta, bundle.compute_specs, None)
                 u_dev = jax.tree.map(
                     lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                     u_dev, d_dev)
+            if algo.transport == "fused" and not algo.error_feedback:
+                direction = votes.fused_sign_vote(
+                    topo, u_dev, delta if fold_dc else None,
+                    algo.rho if fold_dc else 0.0, mask)
+                return direction, new_ef, new_mom, losses
             s_dev = jax.tree.map(signs.sgn, u_dev)
             if algo.error_feedback:
                 # e' = u - scale * s, scale = per-device mean |u|
@@ -242,11 +266,14 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                                      keepdims=True)
                     return (u - scale * s.astype(u.dtype)).astype(jnp.float32)
                 new_ef = jax.tree.map(ef_upd, u_dev, s_dev)
-            mask = maskf > 0.5
-            direction = jax.tree.map(
-                lambda s, cs: votes.majority_vote_dev(
-                    topo, s, mask, algo.transport, cs),
-                s_dev, bundle.compute_specs)
+            if algo.transport == "fused":
+                direction = votes.fused_sign_vote(topo, s_dev, None, 0.0,
+                                                  mask)
+            else:
+                direction = jax.tree.map(
+                    lambda s, cs: votes.majority_vote_dev(
+                        topo, s, mask, algo.transport, cs),
+                    s_dev, bundle.compute_specs)
         return direction, new_ef, new_mom, losses
 
     # ---------------- the step ------------------------------------------

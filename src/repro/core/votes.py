@@ -3,22 +3,51 @@
 Input: per-device quantities laid out ``[P, D, *leaf]`` (P pods = edges,
 D data slices = devices).  Output: per-pod vote ``[P, *leaf]``.
 
-Two wire formats (DESIGN.md Sec. 2 "Vote transport"):
+Transport matrix (DESIGN.md Sec. 2 "Vote transport"):
+
+============  ==============  ===========================  =================
+transport     wire format     HBM passes per local step    fallback rules
+============  ==============  ===========================  =================
+``ag_packed`` 1 bit/coord,    per leaf: read g (f32) ->    leaf minor dim
+              per leaf        write words (1/256 of g),    % 32 != 0 ->
+                              gather, unpack+vote fusion   ``ar_int8``
+``ar_int8``   8 bits/coord    read signs, int tally        tally upcasts to
+                              all-reduce, sgn              int16 when
+                                                           D > 127 voters
+``fused``     1 bit/coord,    ONE flat word buffer for     FSDP regime and
+              one contiguous  the whole model: per-leaf    per-leaf callers
+              word buffer     fused (g + rho*delta) ->     -> ``ag_packed``;
+              (flatbuf        sign -> pack, word-level     off-TPU / multi-
+              layout)         concat (1/32 of the tally),  device mesh ->
+                              ONE data-axis gather, ONE    pure-jnp path
+                              popcount vote + update       (bit-identical)
+``mean`` /    32 bits/coord   full-precision weighted      --
+``wmean``                     averaging (HierSGD)
+============  ==============  ===========================  =================
 
 ``ag_packed``  (paper-faithful) -- each device contributes a bit-packed sign
     row (1 bit/coordinate, exactly the paper's uplink payload); the packed
     rows are all-gathered along ``data`` and every chip computes the same
     popcount vote -- this *is* the paper's "edge broadcasts the vote back",
-    with zero additional downlink.  Leaves whose minor dim is not a multiple
-    of 32 fall back to ``ar_int8`` (negligible bytes; documented).
+    with zero additional downlink.
 
 ``ar_int8``  (beyond-paper optimized) -- the vote sgn(sum_k sgn g_k) is
     computed distributively via an int8 all-reduce of the sign tally
-    (|sum| <= D <= 127 fits int8).  8 bits/coordinate on the wire but a
-    single reduction phase, and under FSDP the tally reduce-scatters
-    straight onto the owning shard.  Bit-identical votes (tested).
+    (|sum| <= D <= 127 fits int8; larger D upcasts the tally to int16).
+    8 bits/coordinate on the wire but a single reduction phase, and under
+    FSDP the tally reduce-scatters straight onto the owning shard.
 
-``mean`` / ``wmean`` -- full-precision weighted averaging (HierSGD baseline).
+``fused``  (beyond-paper, flat-buffer) -- the whole model is bucketized by
+    ``core.flatbuf`` into one 32*128-tile-aligned coordinate space; devices
+    emit a single contiguous packed uplink row per step with the DC
+    correction fused pre-sign (Alg. 2's device-side step), ONE gather moves
+    it, and ONE fused popcount-vote produces the per-pod direction.  On a
+    single-device TPU mesh the local compute runs the Pallas kernels
+    (``kernels.sign_pack`` / ``kernels.vote_update``); everywhere else a
+    pure-jnp path with identical arithmetic runs (GSPMD partitions it), so
+    all three sign transports are bit-identical (ties -> +1) by
+    construction.  Requires the replicated regime; model-axis-sharded
+    leaves are gathered implicitly (prefer ``ag_packed`` under heavy TP).
 
 All functions are pure jnp + sharding constraints: they lower to data-axis
 collectives under GSPMD and degenerate to local arithmetic at P=D=1 (which
@@ -30,10 +59,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import signs
+from repro.core import flatbuf, signs
 from repro.core.topology import Topology
+from repro.kernels import ops as kops
 
 PACK = signs.PACK_WIDTH
+
+SIGN_TRANSPORTS = ("ag_packed", "ar_int8", "fused")
 
 
 def _mask_bcast(mask: jax.Array | None, ndim_leaf: int):
@@ -45,17 +77,18 @@ def _mask_bcast(mask: jax.Array | None, ndim_leaf: int):
 
 def vote_ar_int8(topo: Topology, s_dev: jax.Array,
                  mask: jax.Array | None) -> jax.Array:
-    """sgn(sum_k s_k) via an int8 tally reduction over the device axis."""
-    tally = s_dev.astype(jnp.int8)
+    """sgn(sum_k s_k) via an integer tally reduction over the device axis.
+
+    The tally rides the wire in int8 while |tally| <= D <= 127 fits; more
+    voters silently wrapped before, so D > 127 now upcasts to int16
+    (regression-tested).
+    """
+    acc = jnp.int8 if s_dev.shape[1] <= 127 else jnp.int16
+    tally = s_dev.astype(acc)
     m = _mask_bcast(mask, s_dev.ndim - 2)
-    n_eff = None
     if m is not None:
-        tally = tally * m.astype(jnp.int8)
-        n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)        # [P]
-        n_eff = n_eff.reshape((-1,) + (1,) * (s_dev.ndim - 2))
-    tally = jnp.sum(tally, axis=1, dtype=jnp.int8)             # [P, *leaf]
-    if n_eff is None:
-        return signs.sgn(tally.astype(jnp.int32))
+        tally = tally * m.astype(acc)
+    tally = jnp.sum(tally, axis=1, dtype=acc)                  # [P, *leaf]
     # with abstentions the tie rule is 2*pos >= n_eff  <=>  tally >= 0
     return signs.sgn(tally.astype(jnp.int32))
 
@@ -91,11 +124,118 @@ def vote_ag_packed(topo: Topology, s_dev: jax.Array,
     return vote.reshape(s_dev.shape[:1] + s_dev.shape[2:])     # [P, *leaf]
 
 
+# ---------------------------------------------------------------------------
+# Fused flat-buffer transport
+# ---------------------------------------------------------------------------
+
+_UNROLL_VOTERS = 64     # static unroll bound for the popcount accumulation
+
+
+def _popcount_vote_words(words: jax.Array, mask: jax.Array | None,
+                         n_dev: int) -> jax.Array:
+    """[P, D, W] packed words (+ [P, D] mask) -> [P, W*32] int8 vote.
+
+    For small static D the voter axis is unrolled into an add chain of
+    per-voter unpacks, so the [P, D, W, 32] bit tensor (an 8x HBM blow-up
+    of the wire payload) never materializes -- XLA fuses the chain into
+    one sweep whose operand is the packed words themselves.  Large D
+    falls back to the reduction form.
+    """
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    d = words.shape[1]
+
+    def bits_of(w_d):                                          # [P,W] words
+        return ((w_d[..., None] >> shifts) & jnp.uint32(1)
+                ).astype(jnp.int32)                            # [P,W,32]
+
+    if d <= _UNROLL_VOTERS:
+        pos = None
+        for k in range(d):
+            b = bits_of(words[:, k])
+            if mask is not None:
+                b = b * mask[:, k].astype(jnp.int32)[:, None, None]
+            pos = b if pos is None else pos + b
+    else:
+        bits = (words[..., None] >> shifts) & jnp.uint32(1)    # [P,D,W,32]
+        bits = bits.astype(jnp.int8)
+        if mask is not None:
+            m = mask.astype(jnp.int8)[:, :, None, None]
+            pos = jnp.sum(bits * m, axis=1, dtype=jnp.int32)
+        else:
+            pos = jnp.sum(bits, axis=1, dtype=jnp.int32)       # [P,W,32]
+    if mask is not None:
+        n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)[:, None, None]
+    else:
+        n_eff = n_dev
+    vote = jnp.where(2 * pos >= n_eff, jnp.int8(1), jnp.int8(-1))
+    return vote.reshape(vote.shape[0], -1)                     # [P, W*32]
+
+
+def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
+                    mask: jax.Array | None = None):
+    """Whole-model fused sign transport: pytree in, vote pytree out.
+
+    u_dev: pytree of [P, D, *leaf] pre-sign directions (gradients after
+    momentum/EF); delta: optional pytree of [P, *leaf] DC corrections,
+    fused pre-sign as ``u + rho * delta`` exactly like the per-leaf path.
+    Returns the per-pod vote pytree ([P, *leaf] int8), bit-identical to
+    ``ag_packed``/``ar_int8`` applied leaf-wise (ties -> +1).
+
+    Chain: per-leaf fused sign+pack into ONE contiguous word buffer
+    (``flatbuf`` layout; the f32 flat buffer is never materialized on the
+    jnp path), one data-axis gather of the packed words, one popcount
+    vote.  On a single-device TPU mesh the local sweeps instead run the
+    Pallas kernels over the flat f32 view (``kernels.ops``).
+    """
+    layout = flatbuf.make_layout(u_dev, batch_dims=2)
+    leaves = layout.treedef.flatten_up_to(u_dev)
+    n_dev = leaves[0].shape[1]
+    mode = kops.fused_kernel_mode(topo.mesh.size)
+
+    if mode in ("pallas", "interpret"):
+        # the sign_pack kernel adds rho*delta in f32; folding it there is
+        # exact only when the reference per-leaf arithmetic is f32 too.
+        # Mixed/low-precision trees pre-add in each leaf's own dtype
+        # (identical to the tree path) to keep the transports
+        # bit-identical at ULP sign boundaries.
+        fold_in_kernel = (
+            delta is not None and rho
+            and all(s.dtype == jnp.float32 for s in layout.slots))
+        if delta is not None and rho and not fold_in_kernel:
+            u_dev = jax.tree.map(
+                lambda u, dl: u + rho * dl[:, None].astype(u.dtype),
+                u_dev, delta)
+        u_buf = flatbuf.flatten_tree(layout, u_dev, batch_dims=2)
+        if not jnp.issubdtype(u_buf.dtype, jnp.floating):
+            # EF hands pre-signed int8 trees in; the kernels take float
+            # blocks (int8 VMEM tiling differs), and +-1 casts exactly.
+            u_buf = u_buf.astype(jnp.float32)
+        d_buf = (flatbuf.flatten_tree(layout, delta, batch_dims=1,
+                                      dtype=u_buf.dtype)
+                 if fold_in_kernel else None)
+        vote = kops.fused_sign_vote_flat(
+            u_buf, d_buf, rho, mask, interpret=(mode == "interpret"))
+    else:
+        words = flatbuf.pack_tree(layout, u_dev, batch_dims=2,
+                                  delta=delta, rho=rho, delta_batch_dims=1)
+        # the device->edge uplink: all-gather the 1-bit payload over 'data'
+        words = topo.constrain(words, P(topo.pod_axis, topo.data_axis, None))
+        words = topo.constrain(words, P(topo.pod_axis, None, None))
+        vote = _popcount_vote_words(words, mask, n_dev)
+    vote = topo.constrain(vote, P(topo.pod_axis, None))
+    return flatbuf.unflatten_tree(layout, vote, batch_dims=1, cast=False)
+
+
 def majority_vote_dev(topo: Topology, s_dev: jax.Array,
                       mask: jax.Array | None, transport: str,
                       leaf_spec: P) -> jax.Array:
-    """Vote [P, D, *leaf] -> [P, *leaf]; dispatch on transport + leaf shape."""
-    if transport == "ag_packed" and s_dev.shape[-1] % PACK == 0:
+    """Vote [P, D, *leaf] -> [P, *leaf]; dispatch on transport + leaf shape.
+
+    Per-leaf callers (FSDP lift) route ``fused`` to ``ag_packed`` -- the
+    flat-buffer chain only pays off when the whole tree is bucketized.
+    """
+    if (transport in ("ag_packed", "fused")
+            and s_dev.shape[-1] % PACK == 0):
         return vote_ag_packed(topo, s_dev, mask, leaf_spec)
     return vote_ar_int8(topo, s_dev, mask)
 

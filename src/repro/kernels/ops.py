@@ -1,13 +1,26 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Handles arbitrary pytree/shape inputs (flatten -> pad -> 2D view ->
-kernel -> unpad), and falls back to the jnp reference implementation when
-Pallas is unavailable (CPU distributed paths use the reference; the
-kernels are the TPU target, validated in interpret mode).
+kernel -> unpad) and **backend-detects** instead of hardcoding a mode:
+
+  * on TPU (``jax.default_backend() == "tpu"``) the compiled Pallas
+    kernels run by default (``interpret=False``);
+  * elsewhere the pure-jnp reference runs by default (interpret-mode
+    Pallas is available on request for validation -- it is far slower
+    than the reference, so it is never the silent default).
+
+Pass ``use_pallas=``/``interpret=`` explicitly to override (the kernel
+tests force ``use_pallas=True, interpret=True`` on CPU).
+
+2D views are layout-cached: the (rows, pad) arithmetic for a given
+(n, block) is computed once per process, and inputs whose flat size is
+already block-aligned (everything produced by ``core.flatbuf``) are pure
+reshape views -- no concatenate, no pad.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,23 +31,89 @@ from repro.kernels import vote_update as _vu
 PACK = 32
 
 
+# ---------------------------------------------------------------------------
+# Backend detection
+# ---------------------------------------------------------------------------
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: bool | None, interpret: bool | None):
+    """None -> backend defaults: compiled Pallas on TPU, jnp ref elsewhere."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if interpret is None:
+        interpret = not on_tpu()
+    return use_pallas, interpret
+
+
+def fused_kernel_mode(mesh_size: int) -> str:
+    """How the fused flat-buffer transport should run its local compute.
+
+    Returns ``"pallas"`` (compiled), ``"interpret"`` or ``"jnp"``.  The
+    Pallas kernels are single-device programs, so they only engage when
+    the mesh has one device (single-chip runs / per-host simulation);
+    multi-device GSPMD meshes always take the pure-jnp path, whose
+    collectives partition correctly.  ``REPRO_FUSED_PALLAS`` overrides:
+    ``off`` forces jnp, ``interpret`` forces interpret-mode Pallas
+    (used by tests to exercise the kernel route on CPU).
+    """
+    env = os.environ.get("REPRO_FUSED_PALLAS", "auto").lower()
+    if env in ("0", "off", "jnp"):
+        return "jnp"
+    if env == "interpret":
+        return "interpret"
+    if mesh_size == 1 and on_tpu():
+        return "pallas"
+    return "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Layout-cached 2D views
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pad_layout(n: int, block_r: int, block_c: int):
+    """Static (rows, pad) so that rows % block_r == 0, rows*block_c >= n."""
+    rows = -(-n // block_c)
+    rows = -(-rows // block_r) * block_r
+    return rows, rows * block_c - n
+
+
 def _to_2d(x: jax.Array, block_r: int, block_c: int):
-    """Flatten + zero-pad to an [R, C] view divisible by the block."""
+    """Flatten to an [R, C] view divisible by the block.
+
+    Block-aligned inputs (flatbuf buffers) reshape in place; ragged tails
+    get one zero-pad (sgn(0) = +1: bit-identical to the old ones-padding).
+    """
     flat = x.reshape(-1)
     n = flat.shape[0]
-    per_row = block_c
-    rows = -(-n // per_row)
-    rows = -(-rows // block_r) * block_r
-    pad = rows * per_row - n
-    flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
-    return flat.reshape(rows, per_row), n
+    rows, pad = _pad_layout(n, block_r, block_c)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, block_c), n
 
+
+@functools.lru_cache(maxsize=None)
+def _row_block(rows: int, block_r: int) -> int:
+    """Largest power-of-two divisor of ``rows`` that is <= block_r."""
+    b = 1
+    while b < block_r and rows % (2 * b) == 0:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# N-d kernel wrappers
+# ---------------------------------------------------------------------------
 
 def sign_pack_nd(g: jax.Array, delta: jax.Array | None = None,
-                 rho: float = 0.0, *, use_pallas: bool = True,
-                 interpret: bool = True,
+                 rho: float = 0.0, *, use_pallas: bool | None = None,
+                 interpret: bool | None = None,
                  block_r: int = _sp.BLOCK_R, block_c: int = _sp.BLOCK_C):
     """Any-shape g (+delta) -> (packed [n_words] uint32, n_coords)."""
+    use_pallas, interpret = _resolve(use_pallas, interpret)
     g2, n = _to_2d(g, block_r, block_c)
     d2 = None
     if delta is not None:
@@ -49,10 +128,12 @@ def sign_pack_nd(g: jax.Array, delta: jax.Array | None = None,
 
 def vote_update_nd(packed_rows: jax.Array, v: jax.Array,
                    mask: jax.Array | None = None, *, mu: float,
-                   use_pallas: bool = True, interpret: bool = True,
+                   use_pallas: bool | None = None,
+                   interpret: bool | None = None,
                    block_r: int = _vu.BLOCK_R, block_c: int = _vu.BLOCK_C):
     """packed_rows: [K, n_words] (from sign_pack_nd on each device);
     v: any-shape model tensor.  Returns updated v."""
+    use_pallas, interpret = _resolve(use_pallas, interpret)
     k = packed_rows.shape[0]
     v2, n = _to_2d(v, block_r, block_c)
     r, c = v2.shape
@@ -66,17 +147,60 @@ def vote_update_nd(packed_rows: jax.Array, v: jax.Array,
 
 
 def ternary_quant_nd(x: jax.Array, rng: jax.Array, *,
-                     use_pallas: bool = True, interpret: bool = True,
+                     use_pallas: bool | None = None,
+                     interpret: bool | None = None,
                      block_r: int = _tq.BLOCK_R, block_c: int = _tq.BLOCK_C):
     """Any-shape unbiased ternary quantization (baseline compressor)."""
+    use_pallas, interpret = _resolve(use_pallas, interpret)
     x2, n = _to_2d(x, block_r, block_c)
-    # zero the padding so it cannot influence the norm
-    flat = x2.reshape(-1).at[n:].set(0.0).reshape(x2.shape)
-    norm = jnp.linalg.norm(flat.astype(jnp.float32))
+    # _to_2d zero-pads, so the padding cannot influence the norm
+    norm = jnp.linalg.norm(x2.astype(jnp.float32))
     u = jax.random.uniform(rng, x2.shape, jnp.float32)
     if use_pallas:
-        out = _tq.ternary_quant(flat, u, norm, block_r=block_r,
+        out = _tq.ternary_quant(x2, u, norm, block_r=block_r,
                                 block_c=block_c, interpret=interpret)
     else:
-        out = ref.ternary_quant_ref(flat, u, norm)
+        out = ref.ternary_quant_ref(x2, u, norm)
     return out.reshape(-1)[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Fused flat-buffer transport (local compute of core.votes "fused")
+# ---------------------------------------------------------------------------
+
+def fused_sign_vote_flat(u_buf: jax.Array, d_buf: jax.Array | None,
+                         rho: float, mask: jax.Array | None, *,
+                         interpret: bool) -> jax.Array:
+    """Pallas route of the fused transport on a local flat buffer.
+
+    u_buf: [P, D, n_pad] float (n_pad % 4096 == 0, from core.flatbuf);
+    d_buf: [P, n_pad] correction or None (the caller only folds the DC
+    correction here for all-f32 trees -- the kernel adds in f32, which is
+    exact iff the reference arithmetic is f32 too); mask: [P, D] voter
+    mask or None.  Returns the per-pod vote [P, n_pad] int8 via one
+    ``sign_pack`` sweep over all P*D rows (delta re-read per voter
+    through its BlockSpec, never broadcast-copied) and one
+    ``vote_update`` read-modify-write per pod (v = 0, mu = -1 turns the
+    fused update into a pure vote).
+    """
+    p, d, n = u_buf.shape
+    block_c = _sp.BLOCK_C
+    rows = n // block_c
+    assert n % block_c == 0, (n, block_c)
+    g2 = u_buf.reshape(p * d * rows, block_c)
+    br = _row_block(rows, _sp.BLOCK_R)
+    d2 = None
+    if d_buf is not None and rho:
+        d2 = d_buf.astype(u_buf.dtype).reshape(p * rows, block_c)
+    packed = _sp.sign_pack(g2, d2, rho, block_r=br, block_c=block_c,
+                           interpret=interpret, slab_rows=rows)
+    packed = packed.reshape(p, d, rows, block_c // PACK)
+    zeros = jnp.zeros((rows, block_c), jnp.float32)
+    brv = _row_block(rows, _vu.BLOCK_R)
+    out = []
+    for q in range(p):                     # P is small and static
+        m_q = mask[q] if mask is not None else None
+        out.append(_vu.vote_update(packed[q], zeros, m_q, mu=-1.0,
+                                   block_r=brv, block_c=block_c,
+                                   interpret=interpret))
+    return jnp.stack(out).astype(jnp.int8).reshape(p, n)

@@ -37,11 +37,19 @@ def _sign_pack_kernel(g_ref, d_ref, o_ref, *, rho: float):
 
 @functools.partial(jax.jit,
                    static_argnames=("rho", "block_r", "block_c",
-                                    "interpret"))
+                                    "interpret", "slab_rows"))
 def sign_pack(g: jax.Array, delta: jax.Array | None = None,
               rho: float = 0.0, *, block_r: int = BLOCK_R,
-              block_c: int = BLOCK_C, interpret: bool = False) -> jax.Array:
+              block_c: int = BLOCK_C, interpret: bool = False,
+              slab_rows: int | None = None) -> jax.Array:
     """g, delta: [R, C] float (R % block_r == 0, C % block_c == 0).
+
+    slab_rows: when g stacks R/slab_rows voter slabs that all share the
+    same correction (the flat-buffer transport: g rows are ordered
+    (pod, device, slab_row) while delta rows are (pod, slab_row)), pass
+    the per-slab row count and a delta of shape [R/replicas, C]; the
+    delta block is then re-read per voter via the BlockSpec index map --
+    no [P, D, n] broadcast copy of the correction ever exists in HBM.
 
     Returns packed uint32 [R, C/32].
     """
@@ -53,8 +61,15 @@ def sign_pack(g: jax.Array, delta: jax.Array | None = None,
     in_specs = [pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))]
     args = [g]
     if delta is not None:
-        in_specs.append(pl.BlockSpec((block_r, block_c),
-                                     lambda i, j: (i, j)))
+        if slab_rows is None or delta.shape[0] == r:
+            dmap = lambda i, j: (i, j)
+        else:
+            assert slab_rows % block_r == 0, (slab_rows, block_r)
+            assert r % delta.shape[0] == 0, (r, delta.shape)
+            rb = slab_rows // block_r          # row blocks per voter slab
+            reps = r // delta.shape[0]         # voters sharing each slab
+            dmap = lambda i, j: ((i // (reps * rb)) * rb + i % rb, j)
+        in_specs.append(pl.BlockSpec((block_r, block_c), dmap))
         args.append(delta)
         kernel = functools.partial(_sign_pack_kernel, rho=rho)
     else:

@@ -24,7 +24,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import store
 from repro.checkpoint.async_ckpt import AsyncSaver
-from repro.core import hier
+from repro.core import hier, votes
 from repro.core.topology import Topology, single_device_topology
 from repro.data import synthetic
 from repro.models import build
@@ -136,6 +136,8 @@ def main():
     ap.add_argument("--t_e", type=int, default=5)
     ap.add_argument("--method", default="dc_hier_signsgd",
                     choices=hier.ALL_METHODS)
+    ap.add_argument("--transport", default="ag_packed",
+                    choices=votes.SIGN_TRANSPORTS)
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--rho", type=float, default=0.2)
     ap.add_argument("--batch", type=int, default=4)
@@ -153,7 +155,7 @@ def main():
     else:
         topo = single_device_topology()
     algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
-                           t_e=args.t_e,
+                           t_e=args.t_e, transport=args.transport,
                            compute_dtype=jnp.float32 if args.smoke
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,

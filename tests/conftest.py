@@ -1,0 +1,97 @@
+"""Shared test configuration.
+
+Provides a minimal deterministic fallback for ``hypothesis`` when the real
+package is not installed (hermetic CI images bake in only jax + pytest).
+The stub implements exactly the subset the suite uses -- ``given``,
+``settings`` and the ``integers`` / ``lists`` strategies -- drawing a fixed
+number of pseudo-random examples from a per-test seeded numpy generator
+(boundary values first), so property tests still execute and remain
+reproducible.  When ``hypothesis`` IS importable, it is used unchanged.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+
+def _install_hypothesis_stub() -> None:
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw, boundary=()):
+            self._draw = draw
+            self._boundary = tuple(boundary)
+
+        def example_for(self, rng, index):
+            if index < len(self._boundary):
+                return self._boundary[index]
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundary=(min_value, max_value),
+        )
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example_for(rng, len(elements._boundary) + i)
+                    for i in range(size)]
+
+        small = [elements.example_for(np.random.default_rng(0), i)
+                 for i in range(max(min_size, 1))]
+        return _Strategy(draw, boundary=(small,) if min_size <= len(small)
+                         else ())
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def given(*strategies):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    args = [s.example_for(rng, i) for s in strategies]
+                    try:
+                        fn(*args)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"{fn.__name__}(*{args!r})") from e
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__qualname__ = fn.__qualname__
+            return runner
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.lists = lists
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__stub__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on the environment
+    _install_hypothesis_stub()

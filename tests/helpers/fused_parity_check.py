@@ -1,0 +1,89 @@
+"""Scratch: 8-host-device bitwise parity of the fused flat-buffer transport.
+
+Same trajectory (seeds, batches, straggler masks) must produce bitwise
+identical edge models for transport in {ag_packed, ar_int8, fused} --
+the transports differ only in wire format, never in votes (ties -> +1).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import hier
+from repro.core.topology import Topology
+
+Pn, Dn, Mn = 2, 2, 2
+mesh = Mesh(np.array(jax.devices()).reshape(Pn, Dn, Mn),
+            ("pod", "data", "model"))
+topo = Topology(mesh=mesh, pod_axis="pod")
+
+
+def loss_fn(params, batch, rng):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+kw = jax.random.PRNGKey(0)
+# mixed leaf shapes: model-sharded matrix, odd-minor bias (33 % 32 != 0)
+w0 = {"w": jax.random.normal(kw, (16, 64)) * 0.3,
+      "b": jnp.zeros((33,)),
+      "w2": jax.random.normal(jax.random.fold_in(kw, 1), (64, 33)) * 0.3}
+
+
+def loss2(params, batch, rng):
+    h = batch["x"] @ params["w"]
+    pred = h @ params["w2"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+specs = {"w": P(None, "model"), "b": P(None), "w2": P("model", None)}
+
+T_E, ROUNDS, B = 3, 3, 8
+rb = jax.random.PRNGKey(7)
+xs = jax.random.normal(rb, (ROUNDS * T_E, Pn, Dn, B, 16))
+w_true = jax.random.normal(jax.random.PRNGKey(9), (Pn, 16, 33))
+ys = jnp.einsum("spdbi,pio->spdbo", xs, w_true)
+
+full_mask = jnp.ones((Pn, Dn))
+straggler = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+
+
+def run(method, transport, mask, error_feedback=False):
+    algo = hier.AlgoConfig(method=method, mu=5e-3, t_e=T_E, rho=1.0,
+                           transport=transport,
+                           error_feedback=error_feedback,
+                           compute_dtype=jnp.float32,
+                           master_dtype=jnp.float32,
+                           delta_dtype=jnp.float32)
+    bundle = hier.ModelBundle(loss=loss2, compute_specs=specs,
+                              master_specs=specs)
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = init_fn(w0, jax.random.PRNGKey(1))
+    ew = jnp.full((Pn,), 1.0 / Pn)
+    dw = jnp.full((Pn, Dn), 1.0 / Dn)
+    jstep = jax.jit(step)
+    for s in range(ROUNDS * T_E):
+        batch = {"train": {"x": xs[s], "y": ys[s]},
+                 "anchor": {"x": xs[s - s % T_E], "y": ys[s - s % T_E]}}
+        state, _ = jstep(state, batch, ew, dw, mask)
+    return {k: np.asarray(v) for k, v in state.params.items()}
+
+
+cases = [(m, mk, ef)
+         for m in ("hier_signsgd", "dc_hier_signsgd")
+         for mk, ef in ((full_mask, False), (straggler, False))]
+cases.append(("dc_hier_signsgd", full_mask, True))       # EF path
+
+for method, mask, ef in cases:
+    ref = run(method, "ag_packed", mask, ef)
+    for transport in ("ar_int8", "fused"):
+        got = run(method, transport, mask, ef)
+        for k in ref:
+            same = np.array_equal(ref[k], got[k])
+            tag = (f"{method}/{transport}/mask={int(mask.sum())}"
+                   f"/ef={int(ef)}/{k}")
+            assert same, (tag, np.max(np.abs(ref[k] - got[k])))
+    print(f"{method:16s} mask={int(mask.sum())} ef={int(ef)} parity OK")
+
+print("fused transport parity OK")

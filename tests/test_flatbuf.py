@@ -1,0 +1,105 @@
+"""Flat-buffer bucketization: layout invariants + roundtrip properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flatbuf, signs
+
+
+def _tree_from_sizes(sizes, batch=(), dtype=jnp.float32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i, n in enumerate(sizes):
+        shape = batch + ((n,) if n % 2 else (max(n // 2, 1), 2))
+        tree[f"leaf{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i), shape, dtype)
+    return tree
+
+
+def test_layout_invariants():
+    tree = _tree_from_sizes([33, 64, 7, 4096, 1], batch=(2, 3))
+    lay = flatbuf.make_layout(tree, batch_dims=2)
+    assert lay.n == 33 + 64 + 7 + 4096 + 1
+    assert lay.n_pad % flatbuf.TILE == 0
+    assert lay.n_pad >= lay.n
+    offset = 0
+    for slot in lay.slots:
+        assert slot.offset == offset            # contiguous placement
+        assert slot.offset % flatbuf.PACK == 0  # word-aligned
+        assert slot.padded % flatbuf.PACK == 0
+        assert slot.padded >= slot.size
+        assert slot.word_offset * flatbuf.PACK == slot.offset
+        offset += slot.padded
+    assert lay.n_words * flatbuf.PACK == lay.n_pad
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=6),
+       st.integers(0, 2))
+def test_roundtrip_property(sizes, batch_dims):
+    batch = (2, 3)[:batch_dims]
+    tree = _tree_from_sizes(sizes, batch=batch)
+    lay = flatbuf.make_layout(tree, batch_dims=batch_dims)
+    buf = flatbuf.flatten_tree(lay, tree, batch_dims=batch_dims)
+    assert buf.shape == batch + (lay.n_pad,)
+    back = flatbuf.unflatten_tree(lay, buf, batch_dims=batch_dims)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+        assert back[k].dtype == tree[k].dtype
+
+
+def test_dtype_promotion_roundtrip_exact():
+    """bf16 -> f32 promotion is widening: roundtrip is bit-exact."""
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (5, 33),
+                                   jnp.bfloat16),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (64,),
+                                   jnp.float32)}
+    lay = flatbuf.make_layout(tree)
+    assert lay.dtype == jnp.float32
+    back = flatbuf.unflatten_tree(lay, flatbuf.flatten_tree(lay, tree))
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=5),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_tree_equals_pack_of_flat(sizes, seed):
+    """Word-level concat == pack of the float flat buffer, bitwise."""
+    tree = _tree_from_sizes(sizes, batch=(2, 3), seed=seed % 1000)
+    lay = flatbuf.make_layout(tree, batch_dims=2)
+    words = flatbuf.pack_tree(lay, tree, batch_dims=2)
+    buf = flatbuf.flatten_tree(lay, tree, batch_dims=2)
+    expect = signs.pack_signs(signs.sgn(buf))
+    assert words.shape == (2, 3, lay.n_words)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+
+
+def test_pack_tree_fuses_dc_correction():
+    tree = _tree_from_sizes([100, 33], batch=(2, 4), seed=5)
+    delta = {k: jax.random.normal(jax.random.PRNGKey(9),
+                                  (2,) + v.shape[2:], v.dtype)
+             for k, v in tree.items()}
+    lay = flatbuf.make_layout(tree, batch_dims=2)
+    words = flatbuf.pack_tree(lay, tree, batch_dims=2, delta=delta,
+                              rho=0.7, delta_batch_dims=1)
+    corrected = jax.tree.map(
+        lambda u, dl: u + 0.7 * dl[:, None].astype(u.dtype), tree, delta)
+    expect = flatbuf.pack_tree(lay, corrected, batch_dims=2)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+
+
+def test_rejects_unsupported_leaves():
+    with pytest.raises(ValueError):
+        flatbuf.make_layout({"u": jnp.zeros((4,), jnp.uint32)})
+    with pytest.raises(ValueError):
+        flatbuf.make_layout({})
+    with pytest.raises(ValueError):  # non-widening promotion (int+bf16)
+        flatbuf.make_layout({"i": jnp.zeros((4,), jnp.int32),
+                             "f": jnp.zeros((4,), jnp.bfloat16)})
+    flatbuf.make_layout({"s": jnp.zeros((4,), jnp.int8)})  # all-int OK

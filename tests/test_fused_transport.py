@@ -1,0 +1,179 @@
+"""Fused flat-buffer transport: bit-identity with the per-leaf transports
+at the votes level and inside full ``make_hier_step`` train steps.
+
+The multi-device (8 host CPUs) trajectory parity runs in a subprocess --
+see helpers/fused_parity_check.py.
+"""
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hier, signs, votes
+from repro.core.topology import single_device_topology
+
+HELPERS = pathlib.Path(__file__).parent / "helpers"
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return single_device_topology()
+
+
+def _tree(seed=0, pd=(2, 5), dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, pd + (3, 33), dtype),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   pd + (64,), dtype),
+            "v": jax.random.normal(jax.random.fold_in(key, 2),
+                                   pd + (7, 32), dtype)}
+
+
+SPECS = {"w": P(None, None), "b": P(None), "v": P(None, None)}
+
+
+@pytest.mark.parametrize("use_mask", [False, True])
+def test_fused_vote_identical_to_per_leaf(topo, use_mask):
+    tree = _tree()
+    mask = None
+    if use_mask:
+        mask = jnp.asarray([[1, 1, 0, 1, 0], [1, 0, 0, 1, 1]],
+                           jnp.float32) > 0.5
+    vf = votes.fused_sign_vote(topo, tree, None, 0.0, mask)
+    for k, leaf in tree.items():
+        s = signs.sgn(leaf)
+        v_ag = votes.majority_vote_dev(topo, s, mask, "ag_packed", SPECS[k])
+        v_ar = votes.vote_ar_int8(topo, s, mask)
+        assert vf[k].shape == leaf.shape[:1] + leaf.shape[2:]
+        np.testing.assert_array_equal(np.asarray(vf[k]), np.asarray(v_ag))
+        np.testing.assert_array_equal(np.asarray(vf[k]), np.asarray(v_ar))
+
+
+def test_fused_vote_dc_folding(topo):
+    """sgn(u + rho*delta) fused pre-sign == per-leaf corrected vote."""
+    tree = _tree(seed=3)
+    delta = {k: jax.random.normal(jax.random.PRNGKey(9),
+                                  (2,) + v.shape[2:], v.dtype)
+             for k, v in tree.items()}
+    mask = jnp.asarray([[1, 1, 1, 0, 1], [1, 1, 1, 1, 1]]) > 0
+    vf = votes.fused_sign_vote(topo, tree, delta, 0.3, mask)
+    for k, leaf in tree.items():
+        u = leaf + 0.3 * delta[k][:, None].astype(leaf.dtype)
+        v_ag = votes.majority_vote_dev(topo, signs.sgn(u), mask,
+                                       "ag_packed", SPECS[k])
+        np.testing.assert_array_equal(np.asarray(vf[k]), np.asarray(v_ag))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_pallas_interpret_route_matches_jnp(topo, monkeypatch, dtype):
+    """REPRO_FUSED_PALLAS=interpret drives the real kernels (interpret
+    mode on CPU) through the same chain -- must match the jnp path
+    bitwise, including bf16 trees (DC pre-added in leaf dtype: the
+    kernel's f32 fold is only used for all-f32 trees)."""
+    tree = _tree(seed=4, pd=(1, 4), dtype=dtype)
+    delta = {k: jax.random.normal(jax.random.PRNGKey(8),
+                                  (1,) + v.shape[2:], v.dtype)
+             for k, v in tree.items()}
+    mask = jnp.asarray([[1.0, 0.0, 1.0, 1.0]]) > 0.5
+    v_jnp = votes.fused_sign_vote(topo, tree, delta, 0.5, mask)
+    monkeypatch.setenv("REPRO_FUSED_PALLAS", "interpret")
+    v_krn = votes.fused_sign_vote(topo, tree, delta, 0.5, mask)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(v_jnp[k]),
+                                      np.asarray(v_krn[k]))
+
+
+def test_fused_pallas_delta_slab_mapping(topo, monkeypatch):
+    """Multi-tile buffer (rows not a power of two) with DC folded in the
+    kernel: the per-voter delta re-read via the BlockSpec index map must
+    match the jnp path for every (pod, device) slab."""
+    key = jax.random.PRNGKey(11)
+    # ~6 tiles of 4096 coords -> rows=6, row block 2, 3 blocks per slab
+    tree = {"m": jax.random.normal(key, (2, 3, 24000)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (2, 3, 500))}
+    delta = {k: jax.random.normal(jax.random.fold_in(key, 2),
+                                  (2,) + v.shape[2:], v.dtype)
+             for k, v in tree.items()}
+    v_jnp = votes.fused_sign_vote(topo, tree, delta, 0.4, None)
+    monkeypatch.setenv("REPRO_FUSED_PALLAS", "interpret")
+    v_krn = votes.fused_sign_vote(topo, tree, delta, 0.4, None)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(v_jnp[k]),
+                                      np.asarray(v_krn[k]))
+
+
+def test_per_leaf_fused_dispatch_falls_back(topo):
+    """Per-leaf callers (FSDP lift) route 'fused' through ag_packed /
+    ar_int8 -- identical votes either way."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 33))
+    s = signs.sgn(x)
+    out = votes.majority_vote_dev(topo, s, None, "fused", P(None))
+    ref = signs.majority_vote(s[0], axis=0)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref))
+
+
+def test_algo_config_validates_transport():
+    with pytest.raises(ValueError):
+        hier.AlgoConfig(transport="bogus")
+    with pytest.raises(ValueError):
+        hier.AlgoConfig(method="bogus")
+    hier.AlgoConfig(transport="fused")          # accepted
+
+
+def _run_steps(topo, transport, method, steps=6, **algo_kw):
+    def loss_fn(params, batch, rng):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    w0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 33)) * 0.3,
+          "b": jnp.zeros((33,))}
+    specs = {"w": P(None, None), "b": P(None)}
+    xs = jax.random.normal(jax.random.PRNGKey(7), (6, 1, 1, 8, 16))
+    ys = jnp.einsum("spdbi,io->spdbo", xs,
+                    jax.random.normal(jax.random.PRNGKey(9), (16, 33)))
+    algo = hier.AlgoConfig(method=method, mu=5e-3, t_e=3, rho=1.0,
+                           transport=transport,
+                           compute_dtype=jnp.float32,
+                           master_dtype=jnp.float32,
+                           delta_dtype=jnp.float32, **algo_kw)
+    bundle = hier.ModelBundle(loss=loss_fn, compute_specs=specs,
+                              master_specs=specs)
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = init_fn(w0, jax.random.PRNGKey(1))
+    jstep = jax.jit(step)
+    ew, dw, mask = jnp.ones((1,)), jnp.ones((1, 1)), jnp.ones((1, 1))
+    for t in range(steps):
+        state, _ = jstep(state, {"train": {"x": xs[t], "y": ys[t]}},
+                         ew, dw, mask)
+    return jax.tree.map(np.asarray, state.params)
+
+
+@pytest.mark.parametrize("method", ["hier_signsgd", "dc_hier_signsgd"])
+@pytest.mark.parametrize("extra", [{}, {"error_feedback": True},
+                                   {"momentum": 0.9}])
+def test_train_step_parity_single_device(topo, method, extra):
+    ref = _run_steps(topo, "ag_packed", method, **extra)
+    got = _run_steps(topo, "fused", method, **extra)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k])
+
+
+@pytest.mark.slow
+def test_train_step_parity_multidevice():
+    """8-CPU mesh: ag_packed / ar_int8 / fused produce bitwise-identical
+    trajectories (DC + plain, straggler masks, EF)."""
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    r = subprocess.run(
+        [sys.executable, str(HELPERS / "fused_parity_check.py")],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, (
+        f"fused_parity_check failed:\nSTDOUT:\n{r.stdout[-4000:]}\n"
+        f"STDERR:\n{r.stderr[-4000:]}")
+    assert "fused transport parity OK" in r.stdout

@@ -25,6 +25,8 @@ def test_transports_identical(topo, leaf_shape):
     v1 = votes.vote_ar_int8(topo, s, None)
     v2 = votes.vote_ag_packed(topo, s, None, P(*([None] * len(leaf_shape))))
     np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    v3 = votes.fused_sign_vote(topo, {"leaf": s.astype(jnp.float32)})["leaf"]
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v3))
     # oracle per pod
     for p in range(2):
         ref = signs.majority_vote(s[p].reshape(5, -1), axis=0)
@@ -38,9 +40,49 @@ def test_transports_mask(topo):
     mask = jnp.asarray([[1, 1, 0, 1, 0, 1]], jnp.float32) > 0
     v1 = votes.vote_ar_int8(topo, s, mask)
     v2 = votes.vote_ag_packed(topo, s, mask, P(None))
+    v3 = votes.fused_sign_vote(topo, {"leaf": s.astype(jnp.float32)},
+                               mask=mask)["leaf"]
     ref = signs.majority_vote(s[0][np.asarray(mask[0])], axis=0)
     np.testing.assert_array_equal(np.asarray(v1[0]), np.asarray(ref))
     np.testing.assert_array_equal(np.asarray(v2[0]), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(v3[0]), np.asarray(ref))
+
+
+def test_ar_int8_upcasts_beyond_127_voters(topo):
+    """Regression: D > 127 used to wrap the int8 tally (129 unanimous +1
+    voters summed to -127 -> vote -1)."""
+    s = jnp.ones((1, 129, 64), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(votes.vote_ar_int8(topo, s, None)), 1)
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.choice([-1, 1], size=(2, 200, 33)), jnp.int8)
+    ref = np.stack([np.asarray(signs.majority_vote(s[p], axis=0))
+                    for p in range(2)])
+    np.testing.assert_array_equal(
+        np.asarray(votes.vote_ar_int8(topo, s, None)), ref)
+    # masked: only 100 of 200 voters count, tally still exact
+    mask = jnp.asarray(rng.integers(0, 2, (2, 200)), jnp.float32) > 0.5
+    got = votes.vote_ar_int8(topo, s, mask)
+    for p in range(2):
+        ref_p = signs.majority_vote(s[p][np.asarray(mask[p])], axis=0)
+        np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(ref_p))
+
+
+def test_fused_vote_many_voters(topo):
+    """D > 64 takes _popcount_vote_words's reduction branch (the voter
+    unroll is capped) -- results must still match the oracle and the
+    int-tally transport, masked and unmasked."""
+    rng = np.random.default_rng(7)
+    s = jnp.asarray(rng.choice([-1, 1], size=(2, 130, 96)), jnp.int8)
+    tree = {"leaf": s.astype(jnp.float32)}
+    got = votes.fused_sign_vote(topo, tree)["leaf"]
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(votes.vote_ar_int8(topo, s, None)))
+    mask = jnp.asarray(rng.integers(0, 2, (2, 130)), jnp.float32) > 0.5
+    got = votes.fused_sign_vote(topo, tree, mask=mask)["leaf"]
+    for p in range(2):
+        ref_p = signs.majority_vote(s[p][np.asarray(mask[p])], axis=0)
+        np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(ref_p))
 
 
 def test_packed_dispatch_fallback(topo):
