@@ -31,10 +31,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from benchmarks import hlo_analysis
-from repro.core import signs, votes
+from repro.core import flatbuf, signs, votes
 from repro.core.topology import single_device_topology
 
 MU, RHO = 1e-3, 0.2
+
+TRANSPORTS = ("ag_packed", "ar_int8", "fused", "fused_flat")
 
 
 def model_shapes(n_target: int) -> list[tuple[int, ...]]:
@@ -63,12 +65,23 @@ def make_inputs(n_target: int, pods: int, devs: int, seed: int = 0):
     return g_dev, delta, params
 
 
-def make_step(topo, transport: str):
+def make_step(topo, transport: str, layout=None):
     """One DC local step: direction via ``transport`` + sign-descent update.
 
     Mirrors ``core.hier.local_direction`` exactly (per-leaf delta
     broadcast + add for the per-leaf transports; correction folded into
-    the flat sweep for ``fused``)."""
+    the flat sweep for ``fused``).  ``fused_flat`` is the
+    ``state_layout="flat"`` hot path: params/delta are already flat
+    buffers and the update is ONE whole-model ``vote_update``
+    read-modify-write (``votes.fused_sign_vote_update``)."""
+
+    if transport == "fused_flat":
+        def step_flat(g_dev, delta_buf, params_buf):
+            return votes.fused_sign_vote_update(
+                topo, layout, g_dev, delta_buf, RHO, None, params_buf,
+                jnp.float32(MU), mu_static=MU)
+
+        return step_flat
 
     def step(g_dev, delta, params):
         if transport == "fused":
@@ -92,7 +105,14 @@ def make_step(topo, transport: str):
 def bench_one(topo, transport, n_target, pods, devs, iters):
     g_dev, delta, params = make_inputs(n_target, pods, devs)
     n_real = sum(int(x[0, 0].size) for x in jax.tree.leaves(g_dev))
-    step = jax.jit(make_step(topo, transport))
+    layout = None
+    if transport == "fused_flat":
+        layout = flatbuf.make_layout(g_dev, batch_dims=2)
+        delta = flatbuf.flatten_tree(layout, delta, batch_dims=1,
+                                     dtype=jnp.float32)
+        params = flatbuf.flatten_tree(layout, params, batch_dims=1,
+                                      dtype=jnp.float32)
+    step = jax.jit(make_step(topo, transport, layout))
     lowered = step.lower(g_dev, delta, params)
     compiled = lowered.compile()
     hlo = compiled.as_text()
@@ -141,21 +161,26 @@ def main() -> None:
     for n in sizes:
         for pods, devs in devices:
             cell = {}
-            for transport in ("ag_packed", "ar_int8", "fused"):
+            for transport in TRANSPORTS:
                 r = bench_one(topo, transport, n, pods, devs, args.iters)
                 rows.append(r)
                 cell[transport] = r
                 print(f"{r['transport']},{r['n_params']},{r['pods']},"
                       f"{r['devices_per_pod']},{r['us_per_step']:.1f},"
                       f"{r['hbm_bytes']:.0f},{r['hbm_bytes_out']:.0f}")
-            # acceptance: fused <= per-leaf ag_packed in HBM bytes per step
+            # acceptance: fused <= per-leaf ag_packed in HBM bytes per
+            # step, and the flat-state path no worse than fused
             checks.append({
                 "n_params": cell["fused"]["n_params"],
                 "pods": pods, "devices_per_pod": devs,
                 "fused_hbm_bytes": cell["fused"]["hbm_bytes"],
+                "fused_flat_hbm_bytes": cell["fused_flat"]["hbm_bytes"],
                 "ag_packed_hbm_bytes": cell["ag_packed"]["hbm_bytes"],
                 "fused_le_ag_packed": (cell["fused"]["hbm_bytes"]
                                        <= cell["ag_packed"]["hbm_bytes"]),
+                "fused_flat_le_ag_packed": (
+                    cell["fused_flat"]["hbm_bytes"]
+                    <= cell["ag_packed"]["hbm_bytes"]),
             })
     report = {
         "meta": {
@@ -171,6 +196,8 @@ def main() -> None:
         "hbm_check": checks,
         "all_fused_le_ag_packed": all(c["fused_le_ag_packed"]
                                       for c in checks),
+        "all_fused_flat_le_ag_packed": all(c["fused_flat_le_ag_packed"]
+                                           for c in checks),
     }
     out_path = pathlib.Path(args.out)
     out_path.write_text(json.dumps(report, indent=2) + "\n")

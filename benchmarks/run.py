@@ -12,7 +12,11 @@ BENCH_transports.json.)
   fig4      rho sensitivity at T_E=15           (paper Fig. 4)
   roofline  3-term roofline per dry-run cell    (deliverable g)
 
-Flags: ``--only fig2`` to run a subset; ``--fast`` shrinks seeds/rounds.
+Flags: ``--only fig2`` to run a subset; ``--fast`` is the CI profile --
+fig2/3/4 are priced by the dry-run cost model (benchmarks/cost_model.py,
+Thm 1/2 constants + analytic round cost) instead of real CPU training,
+so the whole sweep completes in seconds while emitting the same row
+names and JSON schema (cost-model rows are tagged ``src=cost_model``).
 """
 from __future__ import annotations
 
@@ -28,27 +32,30 @@ def main() -> None:
                     choices=["all", "table2", "fig2", "fig3", "fig4",
                              "roofline"])
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for bench_results.{csv,json} "
+                         "(default: <repo>/reports)")
     args = ap.parse_args()
 
     root = pathlib.Path(__file__).resolve().parents[1]
     sys.path.insert(0, str(root))
     sys.path.insert(0, str(root / "src"))
-    from benchmarks import paper_figs, roofline
+    from benchmarks import cost_model, paper_figs, roofline
 
     rows = []
     want = lambda k: args.only in ("all", k)
     if want("table2"):
         rows += paper_figs.table2_uplink_cost()
     if want("fig2"):
-        rows += paper_figs.fig2_accuracy(
-            seeds=(0,) if args.fast else (0, 1))
+        rows += (cost_model.fig2_rows(paper_figs.METHODS) if args.fast
+                 else paper_figs.fig2_accuracy(seeds=(0, 1)))
     if want("fig3"):
-        rows += paper_figs.fig3_te_sweep(
-            te_values=(5, 15) if args.fast else (5, 15, 30))
+        rows += (cost_model.fig3_rows(te_values=(5, 15)) if args.fast
+                 else paper_figs.fig3_te_sweep(te_values=(5, 15, 30)))
     if want("fig4"):
-        rows += paper_figs.fig4_rho_sweep(
-            rhos=(0.0, 0.2, 1.0) if args.fast else
-            (0.0, 0.1, 0.2, 0.5, 1.0))
+        rows += (cost_model.fig4_rows(rhos=(0.0, 0.2, 1.0)) if args.fast
+                 else paper_figs.fig4_rho_sweep(
+                     rhos=(0.0, 0.1, 0.2, 0.5, 1.0)))
     if want("roofline"):
         try:
             rows += roofline.roofline_rows()
@@ -60,8 +67,9 @@ def main() -> None:
         out.append(f"{name},{us:.1f},{derived}")
     csv = "\n".join(out)
     print(csv)
-    rep = pathlib.Path(__file__).resolve().parents[1] / "reports"
-    rep.mkdir(exist_ok=True)
+    rep = (pathlib.Path(args.out_dir) if args.out_dir
+           else pathlib.Path(__file__).resolve().parents[1] / "reports")
+    rep.mkdir(parents=True, exist_ok=True)
     (rep / "bench_results.csv").write_text(csv + "\n")
     (rep / "bench_results.json").write_text(json.dumps({
         "rows": [{"name": name, "us_per_call": us, "derived": derived}

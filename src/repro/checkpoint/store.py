@@ -12,6 +12,17 @@ corrupt an existing checkpoint.  ``restore_latest`` verifies CRCs and
 falls back to the previous checkpoint if the newest is damaged --
 together with the driver's retry loop this is the node-failure story
 (DESIGN.md Sec. 7).
+
+Flat state (``core.flatbuf.FlatState``, used by ``state_layout="flat"``):
+a FlatState node is saved as its single buffer array plus a
+``manifest["flat_state"]`` entry recording the FlatLayout (slot table,
+n/n_pad, buffer dtype).  Restore converts both ways: a flat checkpoint
+loads into a tree-state ``like`` (the buffer is sliced per slot) and a
+tree checkpoint loads into a flat-state ``like`` (the leaves are
+assembled into the buffer at their slot offsets) -- in both directions
+only the real coordinates transfer; tile/tail padding is don't-care.
+The slot table is validated against the ``like`` layout, so silent
+structure drift raises instead of corrupting.
 """
 from __future__ import annotations
 
@@ -26,6 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flatbuf
+
 PyTree = Any
 SEP = "/"
 
@@ -37,19 +50,88 @@ def _is_prng_key(x) -> bool:
         return False
 
 
+def _is_flat(x) -> bool:
+    return isinstance(x, flatbuf.FlatState)
+
+
+def _key_of(path) -> str:
+    return SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _leaf_keys(layout: flatbuf.FlatLayout) -> list[str]:
+    """Per-slot leaf path keys (relative to the FlatState node), in slot
+    order -- the names the leaves would have been saved under in tree
+    form, so conversion can match by KEY, not position."""
+    skeleton = layout.treedef.unflatten(list(range(len(layout.slots))))
+    flat, _ = jax.tree_util.tree_flatten_with_path(skeleton)
+    keys = [None] * len(layout.slots)
+    for path, idx in flat:
+        keys[idx] = _key_of(path)
+    return keys
+
+
+def _layout_meta(fs: flatbuf.FlatState) -> dict:
+    """JSON-able FlatLayout record stored in the manifest."""
+    lay = fs.layout
+    return {
+        "n": lay.n,
+        "n_pad": lay.n_pad,
+        "dtype": str(np.dtype(lay.dtype)) if np.dtype(lay.dtype).kind != "V"
+        else "bfloat16",
+        "batch_dims": fs.batch_dims,
+        "slots": [{"key": key, "shape": list(s.shape),
+                   "dtype": str(np.dtype(s.dtype))
+                   if np.dtype(s.dtype).kind != "V" else "bfloat16",
+                   "size": s.size, "padded": s.padded, "offset": s.offset}
+                  for key, s in zip(_leaf_keys(lay), lay.slots)],
+    }
+
+
+def _check_slots(meta: dict, like_fs: flatbuf.FlatState, where: str):
+    """The saved slot table (keys included) must match the target."""
+    layout = like_fs.layout
+    ours = [(k, list(s.shape), s.size, s.padded, s.offset)
+            for k, s in zip(_leaf_keys(layout), layout.slots)]
+    theirs = [(s["key"], list(s["shape"]), s["size"], s["padded"],
+               s["offset"]) for s in meta["slots"]]
+    if (ours != theirs or meta["n_pad"] != layout.n_pad
+            or meta["batch_dims"] != like_fs.batch_dims):
+        raise IOError(
+            f"flat-state layout mismatch at {where!r}: checkpoint has "
+            f"{len(theirs)} slots / n_pad={meta['n_pad']} / "
+            f"batch_dims={meta['batch_dims']}, target expects "
+            f"{len(ours)} slots / n_pad={layout.n_pad} / "
+            f"batch_dims={like_fs.batch_dims}")
+
+
+def _check_batch(arr_shape, like_fs: flatbuf.FlatState, where: str):
+    """The saved buffer's leading (batch) dims must match the target's."""
+    want = tuple(like_fs.buf.shape[:like_fs.batch_dims])
+    got = tuple(arr_shape[:like_fs.batch_dims])
+    if got != want:
+        raise IOError(
+            f"flat-state layout mismatch at {where!r}: checkpoint batch "
+            f"shape {got}, target expects {want}")
+
+
 def _flatten(tree: PyTree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
+    """Storable dict: FlatState -> its buffer array (+ flat_state meta)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_flat)
+    out, flat_meta = {}, {}
     for path, leaf in flat:
-        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _key_of(path)
+        if _is_flat(leaf):
+            flat_meta[key] = _layout_meta(leaf)
+            leaf = leaf.buf
         if _is_prng_key(leaf):
             leaf = jax.random.key_data(leaf)   # typed key -> uint32 payload
         arr = np.asarray(leaf)
         if arr.dtype.kind == "V":              # bfloat16: no numpy dtype --
             arr = np.asarray(jnp.asarray(leaf).astype(jnp.float32))
         out[key] = arr                         # restore casts back
-    return out, treedef
+    return out, flat_meta
 
 
 def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
@@ -61,7 +143,7 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
-    arrays, _ = _flatten(tree)
+    arrays, flat_meta = _flatten(tree)
     npz_path = tmp / "arrays.npz"
     np.savez(npz_path, **arrays)
     crc = zlib.crc32(npz_path.read_bytes())
@@ -71,6 +153,8 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: PyTree,
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in arrays.items()},
     }
+    if flat_meta:
+        manifest["flat_state"] = flat_meta
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     if final.exists():
         shutil.rmtree(final)
@@ -105,25 +189,115 @@ def _verify(path: pathlib.Path) -> bool:
         return False
 
 
+def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
+    """Tree checkpoint -> flat run: pack saved leaves into the buffer.
+
+    Leaves are matched BY KEY (``<key>/<leaf path>`` as the tree save
+    wrote them), so a renamed or restructured leaf raises instead of
+    silently landing in another slot's coordinates.
+    """
+    lay = like_fs.layout
+    bd = like_fs.batch_dims
+    batch = None
+    np_dtype = (np.float32 if np.dtype(lay.dtype).kind == "V"
+                else np.dtype(lay.dtype))
+    parts = []
+    for rel, slot in zip(_leaf_keys(lay), lay.slots):
+        k = key + SEP + rel
+        if k not in data:
+            raise IOError(
+                f"checkpoint is missing leaf {k!r} for flat-state "
+                f"target {key!r}")
+        arr = data[k]
+        if tuple(arr.shape[bd:]) != slot.shape:
+            raise IOError(
+                f"flat-state leaf {k!r} has shape {arr.shape}, slot "
+                f"expects {slot.shape} after {bd} batch dims")
+        _check_batch(arr.shape, like_fs, k)
+        if batch is None:
+            batch = arr.shape[:bd]
+        parts.append((slot, arr.reshape(batch + (slot.size,))))
+    buf = np.zeros(batch + (lay.n_pad,), np_dtype)
+    for slot, arr in parts:
+        buf[..., slot.offset:slot.offset + slot.size] = arr
+    return buf
+
+
+def _slice_flat(data, manifest: dict, like_keyed) -> dict:
+    """Flat checkpoint -> tree run: slice saved buffers into leaf arrays.
+
+    like_keyed: {key: leaf} of the target.  Saved flat buffers whose key
+    is NOT a FlatState in the target are expanded under the slot keys
+    the manifest recorded; the restore loop then matches the target's
+    leaves by key, so renames/reorders fail loudly ("missing leaf")
+    instead of shifting coordinates.
+    """
+    expanded = {}
+    flat_meta = manifest.get("flat_state", {})
+    for q, meta in flat_meta.items():
+        if _is_flat(like_keyed.get(q)):
+            continue
+        buf = data[q]
+        bd = meta["batch_dims"]
+        batch = buf.shape[:bd]
+        for slot in meta["slots"]:
+            k = q + SEP + slot["key"]
+            shape = batch + tuple(slot["shape"])
+            leaf = like_keyed.get(k)
+            if leaf is not None and tuple(
+                    getattr(leaf, "shape", shape)) != shape:
+                raise IOError(
+                    f"flat-state slot for {k!r} has shape {shape}, "
+                    f"target leaf expects {getattr(leaf, 'shape', None)}")
+            off, size = slot["offset"], slot["size"]
+            expanded[k] = buf[..., off:off + size].reshape(shape)
+    return expanded
+
+
 def restore(ckpt_dir: str | pathlib.Path, step: int,
             like: PyTree) -> PyTree:
-    """Restore into the structure (and shardings) of ``like``."""
+    """Restore into the structure (and shardings) of ``like``.
+
+    ``like`` may mix tree- and flat-state (``flatbuf.FlatState``) nodes
+    freely with respect to how the checkpoint was saved: flat <-> tree
+    conversion happens here, validated against the manifest's FlatLayout
+    metadata.
+    """
     path = pathlib.Path(ckpt_dir) / f"step_{step:010d}"
     if not _verify(path):
         raise IOError(f"checkpoint {path} failed integrity check")
     data = np.load(path / "arrays.npz")
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for p, leaf in flat:
-        key = SEP.join(str(getattr(x, "key", getattr(x, "idx", x)))
-                       for x in p)
-        arr = data[key]
+    manifest = json.loads((path / "manifest.json").read_text())
+    flat_meta = manifest.get("flat_state", {})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        like, is_leaf=_is_flat)
+    keyed = [(_key_of(p), leaf) for p, leaf in flat]
+    expanded = _slice_flat(data, manifest, dict(keyed))
+
+    def put(arr, leaf):
         if _is_prng_key(leaf):
-            arr = jax.random.wrap_key_data(jnp.asarray(arr))
-        elif hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
-            arr = jax.device_put(jnp.asarray(arr).astype(leaf.dtype),
-                                 leaf.sharding)
-        leaves.append(arr)
+            return jax.random.wrap_key_data(jnp.asarray(arr))
+        if hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
+            return jax.device_put(jnp.asarray(arr).astype(leaf.dtype),
+                                  leaf.sharding)
+        return arr
+
+    leaves = []
+    for key, leaf in keyed:
+        if _is_flat(leaf):
+            if key in flat_meta:              # flat -> flat
+                _check_slots(flat_meta[key], leaf, key)
+                arr = data[key]
+                _check_batch(arr.shape, leaf, key)
+            else:                             # tree ckpt -> flat run
+                arr = _assemble_flat(data, key, leaf)
+            leaves.append(leaf.replace(put(arr, leaf.buf)))
+        elif key in data and key not in flat_meta:
+            leaves.append(put(data[key], leaf))
+        elif key in expanded:                 # flat ckpt -> tree run
+            leaves.append(put(expanded[key], leaf))
+        else:
+            raise IOError(f"checkpoint is missing leaf {key!r}")
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -26,6 +26,35 @@ Padding convention: float padding is 0 and ``sgn(0) = +1``, bit-identical
 to ``signs.pack_signs``'s all-ones tail bits -- so
 ``pack_tree(layout, t) == pack_signs(sgn(flatten_tree(layout, t)))``
 holds bitwise (tested in tests/test_flatbuf.py).
+
+State layouts
+-------------
+PR 1 used the flat buffer only as a *transient* inside the fused
+transport; with ``AlgoConfig(state_layout="flat")`` (``core.hier``) the
+buffer becomes the *persistent* master state.  :class:`FlatState` wraps
+one ``[*batch, n_pad]`` buffer together with its static
+:class:`FlatLayout` as a single pytree node (the layout rides in the
+treedef aux data, so jit/eval_shape/checkpoint traversals see exactly
+one array leaf).  Under ``state_layout="flat"``:
+
+  * ``TrainState.params`` / ``delta`` / ``delta_next`` are
+    ``FlatState([P, n_pad])`` buffers (master / delta dtype), and the
+    replicated-regime EF / momentum buffers are ``FlatState([P, D,
+    n_pad])`` -- the whole-model update and the pre-sign correction
+    ``u + rho*delta`` are single elementwise sweeps instead of per-leaf
+    tree maps;
+  * leaf views are materialized only at the loss-function boundary and
+    at checkpoint/eval edges via :meth:`FlatState.tree`
+    (``unflatten_tree`` is pure slice/reshape views);
+  * coordinates beyond each leaf's ``size`` (tail + tile padding) are
+    *don't-care*: the fused vote/update kernel sweeps them along with
+    the real coordinates (their gradient is 0 -> vote +1, so they
+    drift), but no view ever reads them and ``checkpoint.store``
+    round-trips only the real coordinates.
+
+The layout of a given tree is deterministic (flatten order x the rules
+above), so two runs -- or a tree-state checkpoint and a flat-state run
+-- always agree on where every leaf lives.
 """
 from __future__ import annotations
 
@@ -79,6 +108,67 @@ class FlatLayout:
     @property
     def n_words(self) -> int:
         return self.n_pad // PACK
+
+
+@jax.tree_util.register_pytree_node_class
+class FlatState:
+    """One flat buffer + its static :class:`FlatLayout`, as a pytree node.
+
+    The buffer is the single array leaf; ``(layout, batch_dims)`` ride in
+    the treedef aux data, so the layout is available statically wherever
+    the state travels (train step, eval_shape, checkpoint store) and two
+    ``FlatState``s with the same layout are structure-compatible under
+    ``jax.tree`` transforms, ``lax.cond`` and donation.
+    """
+
+    __slots__ = ("buf", "layout", "batch_dims")
+
+    def __init__(self, buf, layout: FlatLayout, batch_dims: int = 1):
+        self.buf = buf
+        self.layout = layout
+        self.batch_dims = batch_dims
+
+    def tree(self, cast: bool = True) -> PyTree:
+        """Materialize the leaf views (slice/reshape, no copy)."""
+        return unflatten_tree(self.layout, self.buf,
+                              batch_dims=self.batch_dims, cast=cast)
+
+    def replace(self, buf) -> "FlatState":
+        return FlatState(buf, self.layout, self.batch_dims)
+
+    def tree_flatten(self):
+        return (self.buf,), (self.layout, self.batch_dims)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        layout, batch_dims = aux
+        return cls(children[0], layout, batch_dims)
+
+    def __repr__(self):
+        return (f"FlatState(buf={getattr(self.buf, 'shape', self.buf)!r}, "
+                f"n={self.layout.n}, n_pad={self.layout.n_pad}, "
+                f"batch_dims={self.batch_dims})")
+
+
+def from_tree(tree: PyTree, batch_dims: int = 0,
+              dtype: Any = None) -> FlatState:
+    """Lay out and flatten ``tree`` into a :class:`FlatState` in one call."""
+    layout = make_layout(tree, batch_dims=batch_dims)
+    buf = flatten_tree(layout, tree, batch_dims=batch_dims, dtype=dtype)
+    return FlatState(buf, layout, batch_dims)
+
+
+def with_dtype(layout: FlatLayout, dtype: Any) -> FlatLayout:
+    """The same coordinate layout, re-labeled for a buffer of ``dtype``.
+
+    Auxiliary flat-state buffers (DC delta, EF residual, momentum) share
+    the master's slot geometry but store a different dtype; their slots
+    must say so, or ``FlatState.tree()`` / checkpoint metadata would
+    report the master dtype for them.
+    """
+    dtype = jnp.dtype(dtype)
+    slots = tuple(dataclasses.replace(s, dtype=dtype) for s in layout.slots)
+    return dataclasses.replace(layout, slots=slots, dtype=dtype)
 
 
 def make_layout(tree: PyTree, batch_dims: int = 0,
@@ -187,6 +277,13 @@ def pack_tree(layout: FlatLayout, tree: PyTree, batch_dims: int = 0,
     parts = []
     for slot, leaf, dl in zip(layout.slots, leaves, dl_leaves):
         u = leaf.reshape(leaf.shape[:batch_dims] + (slot.size,))
+        if slot.size == 0:
+            # pack_signs pads to ceil(size/32) words == 0 for empty
+            # leaves, but the slot still occupies `words` all-padding
+            # words (+1 signs) so later offsets stay aligned.
+            parts.append(jnp.full(leaf.shape[:batch_dims] + (slot.words,),
+                                  0xFFFFFFFF, jnp.uint32))
+            continue
         if dl is not None and rho:
             dlf = dl.reshape(dl.shape[:delta_batch_dims] + (slot.size,))
             dlf = _with_mid_axes(dlf, delta_batch_dims, batch_dims)

@@ -31,6 +31,14 @@ Regimes:
     supports every method + EF + momentum.
   * fsdp: the vote happens inside backprop via ``fsdp_lift`` and autodiff
     returns per-pod directions directly (sign methods + hier_sgd).
+
+State layouts (``AlgoConfig.state_layout``): ``tree`` keeps the master
+params as a pytree and applies updates per leaf; ``flat`` stores the
+master (and delta / EF / momentum) AS the ``core.flatbuf`` buffer for the
+entire run, materializing leaf views only at the loss boundary -- the
+whole-model update is then one elementwise sweep, and under
+``transport="fused"`` a single ``vote_update`` read-modify-write.  Both
+layouts are bit-identical in trajectory (tests/test_parity_matrix.py).
 """
 from __future__ import annotations
 
@@ -41,7 +49,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import device_axis, signs, votes
+from repro.core import device_axis, flatbuf, signs, votes
 from repro.core.device_axis import LiftCfg
 from repro.core.topology import Topology
 
@@ -60,6 +68,9 @@ class AlgoConfig:
     rho: float = 0.2                  # correction strength (DC)
     transport: str = "ag_packed"      # ag_packed (faithful) | ar_int8
                                       # | fused (flat-buffer, Pallas-backed)
+    state_layout: str = "tree"        # tree (pytree master) | flat (master
+                                      # lives AS the core.flatbuf buffer;
+                                      # replicated regime only)
     anchor_staleness: int = 1         # 1 = paper's pipelined delta, 0 = fresh
     error_feedback: bool = False      # beyond-paper (replicated regime only)
     momentum: float = 0.0             # beyond-paper signum-style momentum
@@ -73,6 +84,8 @@ class AlgoConfig:
             raise ValueError(f"unknown method {self.method!r}")
         if self.transport not in votes.SIGN_TRANSPORTS:
             raise ValueError(f"unknown transport {self.transport!r}")
+        if self.state_layout not in ("tree", "flat"):
+            raise ValueError(f"unknown state_layout {self.state_layout!r}")
 
     @property
     def is_sign(self) -> bool:
@@ -84,9 +97,14 @@ class AlgoConfig:
 
 
 class TrainState(NamedTuple):
+    """Training state.  With ``state_layout="flat"`` the params / delta /
+    ef / mom entries are ``flatbuf.FlatState`` buffers ([P, n_pad] and
+    [P, D, n_pad]) instead of pytrees; delta / ef / mom are ``None``
+    whenever the method / options do not use them (DC correction only for
+    ``dc_hier_signsgd`` or the FSDP regime's lift plumbing)."""
     step: jax.Array                   # global step counter (t * T_E + tau)
     params: PyTree                    # [P, ...] per-pod edge models v_q
-    delta: PyTree                     # [P, ...] active correction c - c_q
+    delta: PyTree | None              # [P, ...] active correction c - c_q
     delta_next: PyTree | None         # staged delta (anchor_staleness=1)
     ef: PyTree | None                 # [P, D, ...] error-feedback residual
     mom: PyTree | None                # [P, D, ...] sign-momentum buffer
@@ -118,12 +136,6 @@ def _bcast_pd(topo: Topology, tree: PyTree, specs: PyTree, dtype) -> PyTree:
     return device_axis.broadcast_devices(topo, tree, specs, dtype)
 
 
-def _tree_cast(tree, dtype):
-    return jax.tree.map(
-        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
-        else x, tree)
-
-
 def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                    sync: str = "cond"):
     """Build (init_fn, train_step).
@@ -142,6 +154,16 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     """
     t_e = algo.t_e
     fsdp = bundle.param_mode == "fsdp"
+    flat = algo.state_layout == "flat"
+    if flat and fsdp:
+        raise ValueError(
+            "state_layout='flat' requires the replicated regime (the FSDP "
+            "lift votes per layer shard, so the whole-model buffer never "
+            "forms)")
+    # DC correction state only exists where it is read: the DC method's
+    # pre-sign correction, or the FSDP lift plumbing (which threads delta
+    # through the loss for every method).
+    needs_delta = fsdp or algo.is_dc
     vmap2 = lambda f: jax.vmap(jax.vmap(f))
 
     # ---------------- gradient machinery -------------------------------
@@ -175,6 +197,37 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         return jax.tree.map(
             lambda v: votes.pod_weighted_average(topo, v, edge_w), tree)
 
+    # shared per-leaf pieces of the local step -- used verbatim by BOTH
+    # state layouts, so the bit-identical-trajectory contract between
+    # them is maintained in one place
+    def quantize_dev(g_dev, rngs):
+        """Per-leaf unbiased ternary quantization (leaf-indexed rngs)."""
+        leaves, treedef = jax.tree.flatten(g_dev)
+        qleaves = []
+        for i, g in enumerate(leaves):
+            rr_pd = jax.vmap(jax.vmap(
+                lambda k: jax.random.fold_in(k, i)))(rngs)
+            qleaves.append(jax.vmap(jax.vmap(signs.ternary_quantize))(
+                g.astype(jnp.float32), rr_pd))
+        return treedef.unflatten(qleaves)
+
+    def ef_residual(u_dev, s_dev):
+        """e' = u - scale * s, scale = per-device mean |u| per leaf."""
+        def ef_upd(u, s):
+            scale = jnp.mean(jnp.abs(u), axis=tuple(range(2, u.ndim)),
+                             keepdims=True)
+            return (u - scale * s.astype(u.dtype)).astype(jnp.float32)
+        return jax.tree.map(ef_upd, u_dev, s_dev)
+
+    def vote_direction(s_dev, mask):
+        """Per-pod vote of a pre-signed tree via the configured transport."""
+        if algo.transport == "fused":
+            return votes.fused_sign_vote(topo, s_dev, None, 0.0, mask)
+        return jax.tree.map(
+            lambda s, cs: votes.majority_vote_dev(
+                topo, s, mask, algo.transport, cs),
+            s_dev, bundle.compute_specs)
+
     # ---------------- anchor (DC) pass ----------------------------------
     def compute_delta(params, delta_shaped, batch, rngs, edge_w, dev_w,
                       maskf):
@@ -184,6 +237,20 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             c_q, _ = pod_direction_fsdp(params, delta_shaped, batch,
                                         rngs, maskf, dev_w.astype(jnp.float32),
                                         "wmean", 0.0)
+        elif flat:
+            # the anchor stays flat: one weighted-mean + one pod
+            # all-reduce over the whole-model buffer, and the delta the
+            # local steps consume is the buffer itself (the pre-sign
+            # correction u + rho*delta is one fused elementwise op).
+            g_dev, _ = per_device_grads(master_views(params), batch, rngs)
+            g_buf = flatbuf.flatten_tree(params.layout,
+                                         gather_leafdims(g_dev, 2),
+                                         batch_dims=2, dtype=jnp.float32)
+            c_q = votes.weighted_mean_dev(topo, g_buf, dev_w)
+            c = votes.pod_weighted_average(topo, c_q, edge_w)
+            delta = (c - c_q).astype(algo.delta_dtype)
+            return constrain_master(flatbuf.FlatState(
+                delta, flatbuf.with_dtype(params.layout, algo.delta_dtype)))
         else:
             g_dev, _ = per_device_grads(params, batch, rngs)
             c_q = jax.tree.map(
@@ -195,9 +262,33 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         return constrain_master(delta)
 
     def constrain_master(tree):
+        if flat:   # FlatState leaves: [P, n_pad] buffers
+            return jax.tree.map(
+                lambda x: topo.constrain(x, topo.pod_spec(None)), tree)
         return jax.tree.map(
             lambda x, s: topo.constrain(x, topo.pod_spec(*s)),
             tree, bundle.master_specs)
+
+    def master_views(fs):
+        """Flat state -> leaf views, re-constrained to the per-leaf master
+        layout so the loss compiles to the SAME partitioned compute as the
+        tree layout (keeps flat bit-identical to tree under TP sharding)."""
+        return jax.tree.map(
+            lambda x, s: topo.constrain(x, topo.pod_spec(*s)),
+            fs.tree(), bundle.master_specs)
+
+    def gather_leafdims(tree, lead):
+        """Replicate every leaf's non-leading dims before a flat-buffer
+        concat.  The buffer's coordinate space is unsharded, so
+        TP-sharded leaves are gathered implicitly on the flat path (the
+        documented ``fused`` caveat; per-shard buckets are a ROADMAP
+        item) -- and uniform operand shardings keep XLA's concat
+        partitioner out of the mixed minor-/major-dim-sharded case it
+        miscompiles."""
+        spec = topo.dev_spec if lead == 2 else topo.pod_spec
+        return jax.tree.map(
+            lambda x: topo.constrain(x, spec(*([None] * (x.ndim - lead)))),
+            tree)
 
     # ---------------- local step direction ------------------------------
     def local_direction(state, params, delta, batch, rngs, dev_w, maskf):
@@ -218,16 +309,9 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 lambda g: votes.weighted_mean_dev(
                     topo, g.astype(jnp.float32), dev_w), g_dev)
         elif algo.method == "hier_local_qsgd":
-            leaves, treedef = jax.tree.flatten(g_dev)
-            qleaves = []
-            for i, g in enumerate(leaves):
-                rr_pd = jax.vmap(jax.vmap(
-                    lambda k: jax.random.fold_in(k, i)))(rngs)
-                qleaves.append(jax.vmap(jax.vmap(signs.ternary_quantize))(
-                    g.astype(jnp.float32), rr_pd))
-            q_dev = treedef.unflatten(qleaves)
             direction = jax.tree.map(
-                lambda g: votes.weighted_mean_dev(topo, g, dev_w), q_dev)
+                lambda g: votes.weighted_mean_dev(topo, g, dev_w),
+                quantize_dev(g_dev, rngs))
         else:  # sign methods
             u_dev = g_dev
             if algo.momentum > 0.0:
@@ -259,22 +343,95 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 return direction, new_ef, new_mom, losses
             s_dev = jax.tree.map(signs.sgn, u_dev)
             if algo.error_feedback:
-                # e' = u - scale * s, scale = per-device mean |u|
-                def ef_upd(u, s):
-                    scale = jnp.mean(jnp.abs(u),
-                                     axis=tuple(range(2, u.ndim)),
-                                     keepdims=True)
-                    return (u - scale * s.astype(u.dtype)).astype(jnp.float32)
-                new_ef = jax.tree.map(ef_upd, u_dev, s_dev)
-            if algo.transport == "fused":
-                direction = votes.fused_sign_vote(topo, s_dev, None, 0.0,
-                                                  mask)
-            else:
-                direction = jax.tree.map(
-                    lambda s, cs: votes.majority_vote_dev(
-                        topo, s, mask, algo.transport, cs),
-                    s_dev, bundle.compute_specs)
+                new_ef = ef_residual(u_dev, s_dev)
+            direction = vote_direction(s_dev, mask)
         return direction, new_ef, new_mom, losses
+
+    # ---------------- flat-state local step -----------------------------
+    def local_step_flat(state, params, delta, batch, rngs, dev_w, maskf,
+                        mu):
+        """state_layout='flat': whole-buffer update, no per-leaf loops.
+
+        params/delta are ``flatbuf.FlatState``; returns the *updated*
+        params (the fused transport applies v <- v - mu*vote inside its
+        single ``vote_update`` read-modify-write; every other direction
+        is flattened once and applied as one elementwise sweep).
+        Per-coordinate arithmetic matches the tree path exactly, so the
+        trajectory is bit-identical leaf-for-leaf.
+        """
+        layout = params.layout
+        g_dev, losses = per_device_grads(master_views(params), batch, rngs)
+        new_ef, new_mom = state.ef, state.mom
+
+        def descend(direction_tree):
+            dir_buf = flatbuf.flatten_tree(layout,
+                                           gather_leafdims(direction_tree, 1),
+                                           batch_dims=1,
+                                           dtype=params.buf.dtype)
+            return params.replace(params.buf - mu * dir_buf)
+
+        if algo.method == "hier_sgd":
+            g_buf = flatbuf.flatten_tree(layout, gather_leafdims(g_dev, 2),
+                                         batch_dims=2, dtype=jnp.float32)
+            dir_buf = votes.weighted_mean_dev(topo, g_buf, dev_w)
+            new_params = params.replace(
+                params.buf - mu * dir_buf.astype(params.buf.dtype))
+            return new_params, new_ef, new_mom, losses
+        if algo.method == "hier_local_qsgd":
+            # quantize per leaf BEFORE gathering (identical fold_in
+            # indices AND identical norm-reduction sharding to the tree
+            # path), then one whole-buffer weighted mean + update
+            q_buf = flatbuf.flatten_tree(
+                layout, gather_leafdims(quantize_dev(g_dev, rngs), 2),
+                batch_dims=2, dtype=jnp.float32)
+            dir_buf = votes.weighted_mean_dev(topo, q_buf, dev_w)
+            new_params = params.replace(
+                params.buf - mu * dir_buf.astype(params.buf.dtype))
+            return new_params, new_ef, new_mom, losses
+
+        # sign methods
+        u_dev = g_dev
+        if algo.momentum > 0.0:
+            g_buf = flatbuf.flatten_tree(layout, gather_leafdims(g_dev, 2),
+                                         batch_dims=2, dtype=jnp.float32)
+            new_mom = state.mom.replace(
+                algo.momentum * state.mom.buf
+                + (1.0 - algo.momentum) * g_buf)
+            u_dev = new_mom.tree(cast=False)
+        if algo.error_feedback:
+            # the EF scale is a per-leaf mean: constrain u to the tree
+            # path's compute sharding so the reduction order (and hence
+            # the residual) stays bitwise identical
+            u_dev = jax.tree.map(
+                lambda u, e, cs: topo.constrain(
+                    u.astype(jnp.float32) + e, topo.dev_spec(*cs)),
+                u_dev, state.ef.tree(cast=False), bundle.compute_specs)
+        mask = maskf > 0.5
+        fold_dc = (algo.transport == "fused" and algo.is_dc
+                   and not algo.error_feedback)
+        if algo.is_dc and not fold_dc:
+            d_dev = _bcast_pd(topo, delta.tree(cast=False),
+                              bundle.compute_specs, None)
+            u_dev = jax.tree.map(
+                lambda u, dl: u + algo.rho * dl.astype(u.dtype),
+                u_dev, d_dev)
+        if algo.transport == "fused" and not algo.error_feedback:
+            # the whole-model v <- v - mu*vote is ONE vote_update
+            # read-modify-write over the packed-word buffer (mu folded
+            # into the kernel when it is step-independent)
+            new_buf = votes.fused_sign_vote_update(
+                topo, layout, u_dev,
+                delta.buf if fold_dc else None,
+                algo.rho if fold_dc else 0.0, mask, params.buf, mu,
+                mu_static=None if algo.decay else algo.mu)
+            return params.replace(new_buf), new_ef, new_mom, losses
+        s_dev = jax.tree.map(signs.sgn, u_dev)
+        if algo.error_feedback:
+            new_ef = state.ef.replace(flatbuf.flatten_tree(
+                layout,
+                gather_leafdims(ef_residual(u_dev, s_dev), 2),
+                batch_dims=2, dtype=jnp.float32))
+        return descend(vote_direction(s_dev, mask)), new_ef, new_mom, losses
 
     # ---------------- the step ------------------------------------------
     def train_step(state: TrainState, batch, edge_weights, dev_weights,
@@ -314,17 +471,23 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         else:  # 'never'
             params, delta, delta_next = operand
 
-        # -- local sign step
-        direction, new_ef, new_mom, losses = local_direction(
-            state, params, delta, batch["train"], rngs_l, dev_weights, maskf)
-
         mu = jnp.asarray(
             algo.mu if algo.is_sign else algo.mu_sgd, algo.master_dtype)
         if algo.decay:
             rnd = (state.step // t_e).astype(algo.master_dtype)
             mu = mu / jnp.sqrt(rnd + 1.0)
-        params = jax.tree.map(
-            lambda v, s: v - mu * s.astype(v.dtype), params, direction)
+
+        # -- local sign step
+        if flat:
+            params, new_ef, new_mom, losses = local_step_flat(
+                state, params, delta, batch["train"], rngs_l, dev_weights,
+                maskf, mu)
+        else:
+            direction, new_ef, new_mom, losses = local_direction(
+                state, params, delta, batch["train"], rngs_l, dev_weights,
+                maskf)
+            params = jax.tree.map(
+                lambda v, s: v - mu * s.astype(v.dtype), params, direction)
         params = constrain_master(params)
 
         new_state = TrainState(
@@ -349,19 +512,38 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 if jnp.issubdtype(x.dtype, jnp.floating) else xp,
                 topo.pod_spec(*s))
 
-        params = jax.tree.map(rep, params_single, bundle.master_specs)
-        zeros_m = lambda dt: jax.tree.map(
-            lambda v: jnp.zeros_like(v, dtype=dt), params)
-        delta = constrain_master(zeros_m(algo.delta_dtype))
-        delta_next = (constrain_master(zeros_m(algo.delta_dtype))
+        params_tree = jax.tree.map(rep, params_single, bundle.master_specs)
+        if flat:
+            layout = flatbuf.make_layout(params_tree, batch_dims=1)
+            buf = flatbuf.flatten_tree(layout, gather_leafdims(params_tree, 1),
+                                       batch_dims=1)
+            params = flatbuf.FlatState(
+                topo.constrain(buf, topo.pod_spec(None)), layout)
+            zeros_m = lambda dt: flatbuf.FlatState(
+                topo.constrain(jnp.zeros((p, layout.n_pad), dt),
+                               topo.pod_spec(None)),
+                flatbuf.with_dtype(layout, dt))
+            d_pp = topo.devices_per_pod
+            zeros_pd = lambda dt: flatbuf.FlatState(
+                topo.constrain(jnp.zeros((p, d_pp, layout.n_pad), dt),
+                               topo.dev_spec(None)),
+                flatbuf.with_dtype(layout, dt), batch_dims=2)
+        else:
+            params = params_tree
+            zeros_m = lambda dt: constrain_master(jax.tree.map(
+                lambda v: jnp.zeros_like(v, dtype=dt), params_tree))
+            zeros_pd = lambda dt: _bcast_pd(
+                topo, jax.tree.map(
+                    lambda v: jnp.zeros_like(v, dtype=dt), params_tree),
+                bundle.compute_specs, None)
+        delta = zeros_m(algo.delta_dtype) if needs_delta else None
+        delta_next = (zeros_m(algo.delta_dtype)
                       if (algo.is_dc and algo.anchor_staleness == 1) else None)
         ef = mom = None
         if not fsdp and algo.error_feedback:
-            ef = _bcast_pd(topo, zeros_m(jnp.float32),
-                           bundle.compute_specs, None)
+            ef = zeros_pd(jnp.float32)
         if not fsdp and algo.momentum > 0.0:
-            mom = _bcast_pd(topo, zeros_m(jnp.float32),
-                            bundle.compute_specs, None)
+            mom = zeros_pd(jnp.float32)
         return TrainState(step=jnp.zeros((), jnp.int32), params=params,
                           delta=delta, delta_next=delta_next, ef=ef,
                           mom=mom, rng=rng)
@@ -399,6 +581,11 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     rep = topo.sharding(jax.sharding.PartitionSpec())
 
     def master(tree):
+        if tree is None:
+            return None
+        if isinstance(tree, flatbuf.FlatState):   # [P, n_pad] buffer
+            return jax.tree.map(
+                lambda _: topo.sharding(topo.pod_spec(None)), tree)
         return jax.tree.map(
             lambda _, s: topo.sharding(topo.pod_spec(*s)),
             tree, bundle.master_specs)
@@ -406,6 +593,9 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     def dev(tree):
         if tree is None:
             return None
+        if isinstance(tree, flatbuf.FlatState):   # [P, D, n_pad] buffer
+            return jax.tree.map(
+                lambda _: topo.sharding(topo.dev_spec(None)), tree)
         return jax.tree.map(
             lambda _, s: topo.sharding(topo.dev_spec(*s)),
             tree, bundle.compute_specs)
@@ -414,8 +604,7 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         step=rep,
         params=master(abstract_state.params),
         delta=master(abstract_state.delta),
-        delta_next=(master(abstract_state.delta_next)
-                    if abstract_state.delta_next is not None else None),
+        delta_next=master(abstract_state.delta_next),
         ef=dev(abstract_state.ef),
         mom=dev(abstract_state.mom),
         rng=rep,

@@ -49,6 +49,21 @@ transport     wire format     HBM passes per local step    fallback rules
     construction.  Requires the replicated regime; model-axis-sharded
     leaves are gathered implicitly (prefer ``ag_packed`` under heavy TP).
 
+State layouts (``AlgoConfig.state_layout``, see ``core.flatbuf``):
+
+``tree`` (default) -- the master params are a pytree; every transport's
+    vote is unflattened back to leaves and the descent update
+    ``v <- v - mu*vote`` is a per-leaf tree map.
+``flat`` -- the master params ARE the flat buffer (``flatbuf.FlatState``)
+    for the whole run; any transport's direction is applied as ONE
+    whole-buffer elementwise update, and ``transport="fused"`` goes
+    further through :func:`fused_sign_vote_update`: the vote is never
+    materialized -- ONE ``vote_update`` read-modify-write per pod applies
+    ``v <- v - mu*MajorityVote(packed)`` over the packed-word buffer
+    (in-place when compiled).  Bit-identical in trajectory to ``tree``
+    under every transport (the per-coordinate arithmetic is unchanged;
+    asserted by tests/test_parity_matrix.py).  Replicated regime only.
+
 All functions are pure jnp + sharding constraints: they lower to data-axis
 collectives under GSPMD and degenerate to local arithmetic at P=D=1 (which
 is how they are unit-tested against ``repro.core.signs``).
@@ -171,6 +186,60 @@ def _popcount_vote_words(words: jax.Array, mask: jax.Array | None,
     return vote.reshape(vote.shape[0], -1)                     # [P, W*32]
 
 
+def _fused_kernel_bufs(layout, u_dev, delta_tree, delta_buf, rho):
+    """Fold rule + flat views for the Pallas route (shared by the vote-
+    only and the flat-state vote+update entry points; the correction may
+    arrive as a pytree or as a flat buffer).
+
+    The sign_pack kernel adds rho*delta in f32; folding it there is
+    exact only when the reference per-leaf arithmetic is f32 too.
+    Mixed/low-precision trees pre-add in each leaf's own dtype
+    (identical to the tree path) to keep the transports bit-identical
+    at ULP sign boundaries.
+    """
+    leaves = layout.treedef.flatten_up_to(u_dev)
+    have_delta = (delta_tree is not None or delta_buf is not None) and rho
+    fold_in_kernel = (have_delta
+                      and all(leaf.dtype == jnp.float32 for leaf in leaves))
+    if have_delta and not fold_in_kernel:
+        if delta_tree is None:
+            delta_tree = flatbuf.unflatten_tree(layout, delta_buf,
+                                                batch_dims=1, cast=False)
+        u_dev = jax.tree.map(
+            lambda u, dl: u + rho * dl[:, None].astype(u.dtype),
+            u_dev, delta_tree)
+    # flatten in the promoted dtype over the u leaves: widening casts
+    # never move a value across zero, so the signs stay bit-identical to
+    # pack_tree's per-leaf-dtype arithmetic
+    dt = leaves[0].dtype
+    for leaf in leaves[1:]:
+        dt = jnp.promote_types(dt, leaf.dtype)
+    u_buf = flatbuf.flatten_tree(layout, u_dev, batch_dims=2, dtype=dt)
+    if not jnp.issubdtype(u_buf.dtype, jnp.floating):
+        # EF hands pre-signed int8 trees in; the kernels take float
+        # blocks (int8 VMEM tiling differs), and +-1 casts exactly.
+        u_buf = u_buf.astype(jnp.float32)
+    d_buf = None
+    if fold_in_kernel:
+        d_buf = (delta_buf.astype(u_buf.dtype) if delta_buf is not None
+                 else flatbuf.flatten_tree(layout, delta_tree, batch_dims=1,
+                                           dtype=u_buf.dtype))
+    return u_buf, d_buf
+
+
+def _packed_vote(topo, layout, u_dev, delta_tree, rho, mask):
+    """jnp route: per-leaf fused pack (correction pre-sign), ONE
+    data-axis gather of the 1-bit payload, one popcount -> [P, n_pad]."""
+    n_dev = layout.treedef.flatten_up_to(u_dev)[0].shape[1]
+    words = flatbuf.pack_tree(layout, u_dev, batch_dims=2,
+                              delta=delta_tree, rho=rho,
+                              delta_batch_dims=1)
+    # the device->edge uplink: all-gather the 1-bit payload over 'data'
+    words = topo.constrain(words, P(topo.pod_axis, topo.data_axis, None))
+    words = topo.constrain(words, P(topo.pod_axis, None, None))
+    return _popcount_vote_words(words, mask, n_dev)
+
+
 def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
                     mask: jax.Array | None = None):
     """Whole-model fused sign transport: pytree in, vote pytree out.
@@ -188,42 +257,56 @@ def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
     Pallas kernels over the flat f32 view (``kernels.ops``).
     """
     layout = flatbuf.make_layout(u_dev, batch_dims=2)
-    leaves = layout.treedef.flatten_up_to(u_dev)
-    n_dev = leaves[0].shape[1]
     mode = kops.fused_kernel_mode(topo.mesh.size)
-
     if mode in ("pallas", "interpret"):
-        # the sign_pack kernel adds rho*delta in f32; folding it there is
-        # exact only when the reference per-leaf arithmetic is f32 too.
-        # Mixed/low-precision trees pre-add in each leaf's own dtype
-        # (identical to the tree path) to keep the transports
-        # bit-identical at ULP sign boundaries.
-        fold_in_kernel = (
-            delta is not None and rho
-            and all(s.dtype == jnp.float32 for s in layout.slots))
-        if delta is not None and rho and not fold_in_kernel:
-            u_dev = jax.tree.map(
-                lambda u, dl: u + rho * dl[:, None].astype(u.dtype),
-                u_dev, delta)
-        u_buf = flatbuf.flatten_tree(layout, u_dev, batch_dims=2)
-        if not jnp.issubdtype(u_buf.dtype, jnp.floating):
-            # EF hands pre-signed int8 trees in; the kernels take float
-            # blocks (int8 VMEM tiling differs), and +-1 casts exactly.
-            u_buf = u_buf.astype(jnp.float32)
-        d_buf = (flatbuf.flatten_tree(layout, delta, batch_dims=1,
-                                      dtype=u_buf.dtype)
-                 if fold_in_kernel else None)
+        u_buf, d_buf = _fused_kernel_bufs(layout, u_dev, delta, None, rho)
         vote = kops.fused_sign_vote_flat(
             u_buf, d_buf, rho, mask, interpret=(mode == "interpret"))
     else:
-        words = flatbuf.pack_tree(layout, u_dev, batch_dims=2,
-                                  delta=delta, rho=rho, delta_batch_dims=1)
-        # the device->edge uplink: all-gather the 1-bit payload over 'data'
-        words = topo.constrain(words, P(topo.pod_axis, topo.data_axis, None))
-        words = topo.constrain(words, P(topo.pod_axis, None, None))
-        vote = _popcount_vote_words(words, mask, n_dev)
+        vote = _packed_vote(topo, layout, u_dev, delta, rho, mask)
     vote = topo.constrain(vote, P(topo.pod_axis, None))
     return flatbuf.unflatten_tree(layout, vote, batch_dims=1, cast=False)
+
+
+def fused_sign_vote_update(topo: Topology, layout: flatbuf.FlatLayout,
+                           u_dev, delta_buf: jax.Array | None,
+                           rho: float, mask: jax.Array | None,
+                           v_buf: jax.Array, mu,
+                           mu_static: float | None = None) -> jax.Array:
+    """Flat-state fused transport: ``v_buf <- v_buf - mu * vote`` whole-model.
+
+    u_dev: pytree of [P, D, *leaf] pre-sign directions (uniform dtype);
+    delta_buf: optional [P, n_pad] DC correction buffer (delta dtype);
+    v_buf: [P, n_pad] master buffer; mu: traced step-size scalar;
+    mu_static: the Python value of mu when it is step-independent -- lets
+    the Pallas route fold the update into the ``vote_update`` kernel
+    (ONE read-modify-write HBM pass over the whole model, no per-leaf
+    dispatch).  Votes are bit-identical to :func:`fused_sign_vote` and
+    the update arithmetic matches the tree-state per-leaf
+    ``v - mu*vote.astype(v.dtype)`` exactly.
+    """
+    mode = kops.fused_kernel_mode(topo.mesh.size)
+    if mode in ("pallas", "interpret"):
+        u_buf, d_buf = _fused_kernel_bufs(layout, u_dev, None, delta_buf,
+                                          rho)
+        interpret = (mode == "interpret")
+        if mu_static is not None and v_buf.dtype == jnp.float32:
+            # the kernel updates in f32: exact vs the tree path only for
+            # f32 masters (mu_static rounds identically)
+            new_v = kops.fused_vote_update_flat(
+                u_buf, d_buf, rho, mask, v_buf, float(mu_static),
+                interpret=interpret)
+        else:
+            vote = kops.fused_sign_vote_flat(u_buf, d_buf, rho, mask,
+                                             interpret=interpret)
+            new_v = v_buf - mu * vote.astype(v_buf.dtype)
+    else:
+        delta_tree = (flatbuf.unflatten_tree(layout, delta_buf,
+                                             batch_dims=1, cast=False)
+                      if delta_buf is not None and rho else None)
+        vote = _packed_vote(topo, layout, u_dev, delta_tree, rho, mask)
+        new_v = v_buf - mu * vote.astype(v_buf.dtype)
+    return topo.constrain(new_v, P(topo.pod_axis, None))
 
 
 def majority_vote_dev(topo: Topology, s_dev: jax.Array,

@@ -16,6 +16,12 @@ tests force ``use_pallas=True, interpret=True`` on CPU).
 (n, block) is computed once per process, and inputs whose flat size is
 already block-aligned (everything produced by ``core.flatbuf``) are pure
 reshape views -- no concatenate, no pad.
+
+``fused_sign_vote_flat`` is the vote-only local compute of the fused
+transport; ``fused_vote_update_flat`` (state_layout="flat") additionally
+applies ``v <- v - mu*vote`` inside the single ``vote_update``
+read-modify-write, so the whole-model update is one HBM pass (aliased
+in place when compiled).
 """
 from __future__ import annotations
 
@@ -184,6 +190,22 @@ def fused_sign_vote_flat(u_buf: jax.Array, d_buf: jax.Array | None,
     fused update into a pure vote).
     """
     p, d, n = u_buf.shape
+    packed, rows, block_c = _sign_pack_slabs(u_buf, d_buf, rho, interpret)
+    zeros = jnp.zeros((rows, block_c), jnp.float32)
+    brv = _row_block(rows, _vu.BLOCK_R)
+    out = []
+    for q in range(p):                     # P is small and static
+        m_q = mask[q] if mask is not None else None
+        out.append(_vu.vote_update(packed[q], zeros, m_q, mu=-1.0,
+                                   block_r=brv, block_c=block_c,
+                                   interpret=interpret))
+    return jnp.stack(out).astype(jnp.int8).reshape(p, n)
+
+
+def _sign_pack_slabs(u_buf: jax.Array, d_buf: jax.Array | None, rho: float,
+                     interpret: bool):
+    """[P, D, n] float -> ([P, D, rows, words/row] packed, rows, block_c)."""
+    p, d, n = u_buf.shape
     block_c = _sp.BLOCK_C
     rows = n // block_c
     assert n % block_c == 0, (n, block_c)
@@ -194,13 +216,32 @@ def fused_sign_vote_flat(u_buf: jax.Array, d_buf: jax.Array | None,
         d2 = d_buf.astype(u_buf.dtype).reshape(p * rows, block_c)
     packed = _sp.sign_pack(g2, d2, rho, block_r=br, block_c=block_c,
                            interpret=interpret, slab_rows=rows)
-    packed = packed.reshape(p, d, rows, block_c // PACK)
-    zeros = jnp.zeros((rows, block_c), jnp.float32)
+    return packed.reshape(p, d, rows, block_c // PACK), rows, block_c
+
+
+def fused_vote_update_flat(u_buf: jax.Array, d_buf: jax.Array | None,
+                           rho: float, mask: jax.Array | None,
+                           v_buf: jax.Array, mu: float, *,
+                           interpret: bool) -> jax.Array:
+    """Flat-state fused local step: ``v <- v - mu * vote`` on the buffer.
+
+    u_buf: [P, D, n_pad] float pre-sign directions; d_buf: [P, n_pad]
+    correction or None (same fold rules as ``fused_sign_vote_flat``);
+    v_buf: [P, n_pad] master buffer; mu: static step size.  One
+    ``sign_pack`` sweep over all P*D rows, then exactly ONE
+    ``vote_update`` read-modify-write per pod over the whole-model
+    packed-word buffer -- the vote never materializes, the update is the
+    kernel's single HBM pass over v (aliased in place when compiled).
+    """
+    p, d, n = u_buf.shape
+    assert v_buf.shape == (p, n), (v_buf.shape, (p, n))
+    packed, rows, block_c = _sign_pack_slabs(u_buf, d_buf, rho, interpret)
+    v2 = v_buf.reshape(p, rows, block_c)
     brv = _row_block(rows, _vu.BLOCK_R)
     out = []
     for q in range(p):                     # P is small and static
         m_q = mask[q] if mask is not None else None
-        out.append(_vu.vote_update(packed[q], zeros, m_q, mu=-1.0,
+        out.append(_vu.vote_update(packed[q], v2[q], m_q, mu=mu,
                                    block_r=brv, block_c=block_c,
                                    interpret=interpret))
-    return jnp.stack(out).astype(jnp.int8).reshape(p, n)
+    return jnp.stack(out).reshape(p, n)

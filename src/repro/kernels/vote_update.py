@@ -70,6 +70,10 @@ def vote_update(packed: jax.Array, v: jax.Array,
                 p_ref, v_ref, None, o_ref, mu=mu, n_voters=n_voters),
             mu=mu, n_voters=k)
 
+    # v' aliases v: the kernel is a true read-modify-write (one HBM pass
+    # over the model when the caller donates v).  Interpret mode keeps
+    # out-of-place semantics -- identical values either way.
+    alias = {} if interpret else {"input_output_aliases": {1: 0}}
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -77,4 +81,5 @@ def vote_update(packed: jax.Array, v: jax.Array,
         out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
         interpret=interpret,
+        **alias,
     )(*args)

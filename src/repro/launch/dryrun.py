@@ -104,7 +104,7 @@ def analyze(lowered, label, verbose=True, axis_sizes=None,
 
 
 def run_cell(arch_name, shape_name, multi_pod, method, transport,
-             t_e, verbose=True, tag="baseline"):
+             t_e, verbose=True, tag="baseline", state_layout="tree"):
     shape = SHAPES[shape_name]
     cfg = configs.get_config(arch_name)
     ok, why = configs.shape_applicable(cfg, shape)
@@ -124,7 +124,8 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
     n_params = sum(math.prod(a.shape)
                    for a in jax.tree.leaves(built.abstract_params()))
     cell["params"] = n_params
-    algo = hier.AlgoConfig(method=method, transport=transport, t_e=t_e)
+    algo = hier.AlgoConfig(method=method, transport=transport, t_e=t_e,
+                           state_layout=state_layout)
     phases = {}
     mesh_tag = "multi" if multi_pod else "single"
     hdir = REPORT_DIR / "hlo"
@@ -158,6 +159,8 @@ def main():
     ap.add_argument("--method", default="dc_hier_signsgd",
                     choices=hier.ALL_METHODS)
     ap.add_argument("--transport", default="ag_packed")
+    ap.add_argument("--state_layout", default="tree",
+                    choices=["tree", "flat"])
     ap.add_argument("--t_e", type=int, default=15)
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--quiet", action="store_true")
@@ -182,7 +185,8 @@ def main():
                 try:
                     cell = run_cell(arch, shape, multi, args.method,
                                     args.transport, args.t_e,
-                                    verbose=not args.quiet, tag=args.tag)
+                                    verbose=not args.quiet, tag=args.tag,
+                                    state_layout=args.state_layout)
                     cell["wall_s"] = round(time.time() - t0, 1)
                     out.write_text(json.dumps(cell, indent=1))
                     print(f"   OK ({cell['wall_s']}s) -> {out.name}",

@@ -59,7 +59,12 @@ def weights_abstract(topo: Topology):
 
 def train_state_abstract(built: BuiltModel, topo: Topology,
                          algo: hier.AlgoConfig):
-    """Abstract TrainState with shardings applied."""
+    """Abstract TrainState with shardings applied.
+
+    Mirrors ``algo.state_layout``: under ``"flat"`` the params / delta /
+    EF / momentum entries come back as ``flatbuf.FlatState`` nodes whose
+    single [P(, D), n_pad] buffer leaf carries the sharding (the layout
+    rides through ``eval_shape`` in the treedef aux data)."""
     init_fn, _ = hier.make_hier_step(topo, algo, built.bundle)
     params_abs = built.abstract_params()
     state_abs = jax.eval_shape(init_fn, params_abs, jax.random.PRNGKey(0))

@@ -138,6 +138,10 @@ def main():
                     choices=hier.ALL_METHODS)
     ap.add_argument("--transport", default="ag_packed",
                     choices=votes.SIGN_TRANSPORTS)
+    ap.add_argument("--state_layout", default="tree",
+                    choices=["tree", "flat"],
+                    help="flat: master params live as the core.flatbuf "
+                         "buffer (whole-model fused update)")
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--rho", type=float, default=0.2)
     ap.add_argument("--batch", type=int, default=4)
@@ -156,6 +160,7 @@ def main():
         topo = single_device_topology()
     algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
                            t_e=args.t_e, transport=args.transport,
+                           state_layout=args.state_layout,
                            compute_dtype=jnp.float32 if args.smoke
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,

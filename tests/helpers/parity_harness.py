@@ -1,0 +1,176 @@
+"""Shared parity fixture: ONE toy problem + runners for every supported
+(method x transport x state_layout x regime) train-step combination and
+for the ``ref_fed`` paper oracle on the SAME trajectory.
+
+Used two ways:
+  * in-process by ``tests/test_parity_matrix.py`` on the default
+    single-device runtime (P = D = 1);
+  * by ``tests/helpers/parity_matrix_check.py`` in a subprocess with 8
+    forced host devices (P = D = 2, TP = 2), which replaces the old
+    ad-hoc ``fused_parity_check.py`` / ``multidev_oracle_check.py``
+    scratch scripts.
+
+The toy model is a deterministic 2-matrix linear regression with an
+odd-minor bias (33 % 32 != 0 exercises the packed-transport fallbacks)
+and per-pod heterogeneous targets (so the DC correction has something
+to correct).  All runners consume identical batches, seeds and masks;
+sign transports and state layouts must agree BITWISE, the oracle and
+the FSDP regime within float tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hier, ref_fed
+from repro.core.topology import Topology
+
+DIN, HID, DOUT = 16, 64, 33
+
+
+def loss_fn(params, batch, rng):
+    h = batch["x"] @ params["w"]
+    pred = h @ params["w2"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+COMPUTE_SPECS = {"w": P(None, "model"), "b": P(None),
+                 "w2": P("model", None)}
+FSDP_MASTER_SPECS = {"w": P("data", "model"), "b": P(None),
+                     "w2": P("model", None)}
+
+
+def make_problem(pods: int, devs: int, rounds: int = 3, t_e: int = 3,
+                 batch: int = 8, seed: int = 0):
+    """Deterministic batches [S, P, D, B, .] with per-pod targets."""
+    key = jax.random.PRNGKey(seed)
+    w0 = {"w": jax.random.normal(key, (DIN, HID)) * 0.3,
+          "b": jnp.zeros((DOUT,)),
+          "w2": jax.random.normal(jax.random.fold_in(key, 1),
+                                  (HID, DOUT)) * 0.3}
+    steps = rounds * t_e
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 7),
+                           (steps, pods, devs, batch, DIN))
+    w_true = jax.random.normal(jax.random.PRNGKey(seed + 9),
+                               (pods, DIN, DOUT))
+    ys = jnp.einsum("spdbi,pio->spdbo", xs, w_true)
+    return {"w0": w0, "xs": xs, "ys": ys, "pods": pods, "devs": devs,
+            "rounds": rounds, "t_e": t_e}
+
+
+def _algo(method, transport, state_layout, **kw):
+    base = dict(method=method, mu=5e-3, mu_sgd=0.05, t_e=3, rho=1.0,
+                transport=transport, state_layout=state_layout,
+                compute_dtype=jnp.float32, master_dtype=jnp.float32,
+                delta_dtype=jnp.float32)
+    base.update(kw)
+    return hier.AlgoConfig(**base)
+
+
+def _fsdp_loss_master(params, delta, batch, rngs, lift):
+    p_dev = lift(params, delta, FSDP_MASTER_SPECS, COMPUTE_SPECS)
+
+    def one(pd, b, r):
+        h = b["x"] @ pd["w"]
+        pred = h @ pd["w2"] + pd["b"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    losses = jax.vmap(jax.vmap(one))(p_dev, batch, rngs)
+    return jnp.sum(losses), losses
+
+
+def run_hier(topo: Topology, problem, method, transport="ag_packed",
+             state_layout="tree", regime="replicated", mask=None,
+             **algo_kw):
+    """Run the full trajectory; returns the final edge-model pytree
+    (plain numpy leaves, flat state unflattened) plus the edge weights
+    used, so callers can cloud-aggregate for oracle comparison."""
+    t_e = problem["t_e"]
+    algo = _algo(method, transport, state_layout, t_e=t_e, **algo_kw)
+    if regime == "fsdp":
+        bundle = hier.ModelBundle(loss=None, compute_specs=COMPUTE_SPECS,
+                                  master_specs=FSDP_MASTER_SPECS,
+                                  loss_master=_fsdp_loss_master,
+                                  param_mode="fsdp")
+    else:
+        bundle = hier.ModelBundle(loss=loss_fn,
+                                  compute_specs=COMPUTE_SPECS,
+                                  master_specs=COMPUTE_SPECS)
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = init_fn(problem["w0"], jax.random.PRNGKey(1))
+    pods, devs = problem["pods"], problem["devs"]
+    ew = jnp.full((pods,), 1.0 / pods)
+    dw = jnp.full((pods, devs), 1.0 / devs)
+    maskf = jnp.ones((pods, devs)) if mask is None else jnp.asarray(mask)
+    jstep = jax.jit(step)
+    xs, ys = problem["xs"], problem["ys"]
+    for s in range(problem["rounds"] * t_e):
+        anchor = s - s % t_e
+        batch = {"train": {"x": xs[s], "y": ys[s]},
+                 "anchor": {"x": xs[anchor], "y": ys[anchor]}}
+        state, _ = jstep(state, batch, ew, dw, maskf)
+    params = (state.params.tree() if state_layout == "flat"
+              else state.params)
+    return jax.tree.map(np.asarray, params), np.asarray(ew)
+
+
+def aggregate(params, edge_weights):
+    """Cloud aggregation of the final edge models (the oracle's w)."""
+    return jax.tree.map(
+        lambda v: np.tensordot(edge_weights, np.asarray(v), axes=1),
+        params)
+
+
+def run_oracle(problem, method, mask=None):
+    """ref_fed transcription of Algorithms 1/2 on the same trajectory."""
+    pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
+    cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
+                             method=method)
+    state = ref_fed.init_state(problem["w0"], pods)
+    grad_fn = lambda p, b, r: jax.grad(loss_fn)(p, b, r)
+    xs, ys = problem["xs"], problem["ys"]
+    for t in range(problem["rounds"]):
+        batches = [[[{"x": xs[t * t_e + tau, q, k],
+                      "y": ys[t * t_e + tau, q, k]}
+                     for tau in range(t_e)] for k in range(devs)]
+                   for q in range(pods)]
+        anchors = [[{"x": xs[t * t_e, q, k], "y": ys[t * t_e, q, k]}
+                    for k in range(devs)] for q in range(pods)]
+        state = ref_fed.global_round(
+            state, cfg, grad_fn, batches, anchors,
+            [1.0 / pods] * pods, [[1.0 / devs] * devs] * pods,
+            jax.random.PRNGKey(1),
+            device_mask=None if mask is None else mask)
+    return jax.tree.map(np.asarray, state.w)
+
+
+# -- matrix definition (shared by the fast suite and the 8-device check)
+
+SIGN_TRANSPORTS = ("ag_packed", "ar_int8", "fused")
+LAYOUTS = ("tree", "flat")
+
+
+def matrix_cells():
+    """Every supported replicated (method, transport, state_layout)."""
+    cells = []
+    for method in ("hier_signsgd", "dc_hier_signsgd"):
+        for transport in SIGN_TRANSPORTS:
+            for layout in LAYOUTS:
+                cells.append((method, transport, layout))
+    for method in ("hier_sgd", "hier_local_qsgd"):
+        for layout in LAYOUTS:
+            cells.append((method, "ag_packed", layout))
+    return cells
+
+
+def assert_trees_equal(a, b, tag, exact=True, atol=0.0):
+    for k in a:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        if exact:
+            assert np.array_equal(x, y), (
+                tag, k, float(np.max(np.abs(x - y))))
+        else:
+            np.testing.assert_allclose(x, y, atol=atol, rtol=0,
+                                       err_msg=f"{tag}/{k}")

@@ -1,0 +1,52 @@
+"""Smoke test for the ``benchmarks/run.py --fast`` CI profile: it must
+complete in seconds (cost model, no CPU training) and emit the same
+row names / JSON schema as the real-training profile."""
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+EXPECT_FIG2 = {f"fig2/{tag}/{m}"
+               for tag in ("iid", "noniid")
+               for m in ("hier_sgd", "hier_local_qsgd", "hier_signsgd",
+                         "dc_hier_signsgd")}
+EXPECT_FIG3 = {f"fig3/{tag}/te{te}/{m}"
+               for tag in ("iid", "noniid") for te in (5, 15)
+               for m in ("hier_signsgd", "dc_hier_signsgd")}
+EXPECT_FIG4 = {f"fig4/rho{r}" for r in (0.0, 0.2, 1.0)}
+
+
+def test_fast_profile_is_fast_and_schema_stable(tmp_path):
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": str(tmp_path)}
+    t0 = time.time()
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--fast",
+         "--out-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=120, env=env)
+    wall = time.time() - t0
+    assert r.returncode == 0, r.stderr[-2000:]
+    # "completes in seconds": generous bound still far below one real
+    # CPU training round of fig2 (interpreter startup dominates)
+    assert wall < 90, wall
+
+    report = json.loads((tmp_path / "bench_results.json").read_text())
+    assert set(report) == {"rows"}
+    rows = report["rows"]
+    assert rows and all(set(row) == {"name", "us_per_call", "derived"}
+                        for row in rows)
+    names = {row["name"] for row in rows}
+    for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4):
+        assert expect <= names, expect - names
+    by_name = {row["name"]: row for row in rows}
+    for name in EXPECT_FIG2 | EXPECT_FIG3 | EXPECT_FIG4:
+        row = by_name[name]
+        assert row["us_per_call"] > 0
+        key = "final_acc=" if name.startswith("fig2") else "final_loss="
+        assert key in row["derived"], row
+        assert "src=cost_model" in row["derived"], row
+    # table2 rows ride along unchanged
+    assert any(n.startswith("table2/") for n in names)

@@ -1,4 +1,6 @@
-"""Checkpoint store: roundtrip, atomicity, corruption fallback, GC, async."""
+"""Checkpoint store: roundtrip, atomicity, corruption fallback, GC, async,
+and flat-state (FlatLayout metadata) save/restore with tree<->flat
+conversion both ways."""
 import json
 import pathlib
 
@@ -9,6 +11,7 @@ import pytest
 
 from repro.checkpoint import store
 from repro.checkpoint.async_ckpt import AsyncSaver
+from repro.core import flatbuf
 
 
 def _tree(seed=0):
@@ -78,3 +81,95 @@ def test_manifest_records_leaves(tmp_path):
     manifest = json.loads((path / "manifest.json").read_text())
     assert manifest["step"] == 7
     assert any("params/w" in k for k in manifest["leaves"])
+
+
+# ---------------------------------------------------------------------------
+# Flat state (state_layout="flat")
+# ---------------------------------------------------------------------------
+
+def _flat_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    leaves = {"w": jax.random.normal(k, (2, 4, 8)),
+              "b": jax.random.normal(jax.random.fold_in(k, 1), (2, 33),
+                                     jnp.bfloat16)}
+    fs = flatbuf.from_tree(leaves, batch_dims=1)
+    # fused-update padding drift: padding coords are don't-care and must
+    # not leak into (or be required by) the tree form
+    fs = fs.replace(fs.buf.at[..., fs.layout.n:].set(-7.0))
+    return {"params": fs, "step": jnp.asarray(seed, jnp.int32),
+            "rng": jax.random.PRNGKey(seed + 1)}
+
+
+def test_flat_roundtrip_records_layout(tmp_path):
+    t = _flat_tree(3)
+    path = store.save(tmp_path, 3, t)
+    manifest = json.loads((path / "manifest.json").read_text())
+    meta = manifest["flat_state"]["params"]
+    lay = t["params"].layout
+    assert meta["n"] == lay.n and meta["n_pad"] == lay.n_pad
+    assert [s["offset"] for s in meta["slots"]] == [
+        s.offset for s in lay.slots]
+    out = store.restore(tmp_path, 3, t)
+    np.testing.assert_array_equal(np.asarray(out["params"].buf),
+                                  np.asarray(t["params"].buf))
+
+
+def test_flat_tree_conversion_roundtrip(tmp_path):
+    """save flat -> load tree -> save tree -> load flat: bit-exact."""
+    t = _flat_tree(5)
+    tree_like = dict(t, params=t["params"].tree())
+    store.save(tmp_path / "a", 1, t)
+    as_tree = store.restore(tmp_path / "a", 1, tree_like)
+    for a, b in zip(jax.tree.leaves(as_tree["params"]),
+                    jax.tree.leaves(tree_like["params"])):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    store.save(tmp_path / "b", 2, as_tree)
+    as_flat = store.restore(tmp_path / "b", 2, t)
+    for a, b in zip(jax.tree.leaves(as_flat["params"].tree()),
+                    jax.tree.leaves(t["params"].tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_restore_validates_layout(tmp_path):
+    t = _flat_tree(0)
+    store.save(tmp_path, 1, t)
+    other = flatbuf.from_tree(
+        {"w": jnp.zeros((2, 5, 5)), "b": jnp.zeros((2, 33))}, batch_dims=1)
+    with pytest.raises(IOError, match="layout mismatch"):
+        store.restore(tmp_path, 1, dict(t, params=other))
+    # identical slot table, wrong batch shape (e.g. devices-per-pod
+    # changed between save and restore) must raise too
+    lay = t["params"].layout
+    wrong_batch = flatbuf.FlatState(jnp.zeros((3, lay.n_pad), lay.dtype),
+                                    lay)
+    with pytest.raises(IOError, match="layout mismatch"):
+        store.restore(tmp_path, 1, dict(t, params=wrong_batch))
+    missing = {"params": t["params"], "step": t["step"],
+               "rng": t["rng"], "extra": jnp.zeros((2,))}
+    with pytest.raises(IOError, match="missing leaf"):
+        store.restore(tmp_path, 1, missing)
+
+
+def test_flat_conversion_matches_by_key_not_position(tmp_path):
+    """A renamed leaf of identical shape must raise, never be silently
+    loaded into another slot's coordinates."""
+    t = _flat_tree(0)
+    # tree checkpoint -> flat run with a renamed leaf (same shapes)
+    tree_like = dict(t, params=t["params"].tree())
+    store.save(tmp_path / "a", 1, tree_like)
+    renamed = flatbuf.from_tree(
+        {"v": tree_like["params"]["w"], "b": tree_like["params"]["b"]},
+        batch_dims=1)
+    with pytest.raises(IOError, match="missing leaf"):
+        store.restore(tmp_path / "a", 1, dict(t, params=renamed))
+    # flat checkpoint -> flat run with a renamed leaf: slot-table keys
+    # differ -> layout mismatch
+    store.save(tmp_path / "b", 2, t)
+    with pytest.raises(IOError, match="layout mismatch"):
+        store.restore(tmp_path / "b", 2, dict(t, params=renamed))
+    # flat checkpoint -> tree run with a renamed leaf -> missing leaf
+    tree_renamed = dict(t, params={"v": tree_like["params"]["w"],
+                                   "b": tree_like["params"]["b"]})
+    with pytest.raises(IOError, match="missing leaf"):
+        store.restore(tmp_path / "b", 2, tree_renamed)

@@ -94,6 +94,87 @@ def test_pack_tree_fuses_dc_correction():
     np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
 
 
+DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _edge_tree(sizes, dtype_idxs, batch=(), seed=0):
+    """Leaves covering the edge cases: size 0 -> zero-size leaf, size 1
+    -> scalar leaf, else a vector; dtypes cycle through DTYPES."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i, n in enumerate(sizes):
+        dt = DTYPES[dtype_idxs[i % len(dtype_idxs)] % len(DTYPES)]
+        shape = (0, 3) if n == 0 else (() if n == 1 else (n,))
+        tree[f"leaf{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i), batch + shape, dt)
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 80), min_size=1, max_size=5),
+       st.lists(st.integers(0, 2), min_size=1, max_size=5),
+       st.integers(0, 3))
+def test_roundtrip_edge_cases(sizes, dtype_idxs, batch_dims):
+    """Mixed dtypes + scalar leaves + zero-size leaves + up to 3 batch
+    dims: flatten/unflatten restores every leaf bit-exactly, and
+    pack_tree still matches pack-of-flat (so slot offsets stay aligned
+    even across empty slots)."""
+    batch = (2, 2, 3)[:batch_dims]
+    tree = _edge_tree(sizes, dtype_idxs, batch=batch)
+    lay = flatbuf.make_layout(tree, batch_dims=batch_dims)
+    assert lay.n == sum(0 if n == 0 else max(n, 1) for n in sizes)
+    buf = flatbuf.flatten_tree(lay, tree, batch_dims=batch_dims)
+    assert buf.shape == batch + (lay.n_pad,)
+    back = flatbuf.unflatten_tree(lay, buf, batch_dims=batch_dims)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert back[k].shape == tree[k].shape
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    words = flatbuf.pack_tree(lay, tree, batch_dims=batch_dims)
+    expect = signs.pack_signs(signs.sgn(buf))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(1, 50), min_size=2, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+def test_layout_stable_under_tree_ordering(sizes, seed):
+    """jax.tree canonicalizes dict key order, so the layout -- and hence
+    every persisted flat buffer -- must not depend on insertion order."""
+    tree = _edge_tree(sizes, [0], seed=seed % 1000)
+    rev = {k: tree[k] for k in reversed(list(tree))}
+    l1 = flatbuf.make_layout(tree)
+    l2 = flatbuf.make_layout(rev)
+    assert l1.slots == l2.slots
+    assert l1.treedef == l2.treedef
+    b1 = flatbuf.flatten_tree(l1, tree)
+    b2 = flatbuf.flatten_tree(l2, rev)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    back = flatbuf.unflatten_tree(l1, b2)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_flat_state_pytree_node():
+    """FlatState round-trips through jax.tree transforms with the layout
+    riding in the treedef (same layout -> same structure)."""
+    tree = _edge_tree([33, 7], [0, 1])
+    fs = flatbuf.from_tree(tree)
+    mapped = jax.tree.map(lambda x: x * 2, fs)
+    assert isinstance(mapped, flatbuf.FlatState)
+    assert mapped.layout is fs.layout
+    leaves, treedef = jax.tree.flatten(fs)
+    assert len(leaves) == 1
+    assert treedef == jax.tree.flatten(mapped)[1]
+    back = fs.tree()
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
 def test_rejects_unsupported_leaves():
     with pytest.raises(ValueError):
         flatbuf.make_layout({"u": jnp.zeros((4,), jnp.uint32)})

@@ -1,13 +1,9 @@
 """Fused flat-buffer transport: bit-identity with the per-leaf transports
-at the votes level and inside full ``make_hier_step`` train steps.
+at the votes level.
 
-The multi-device (8 host CPUs) trajectory parity runs in a subprocess --
-see helpers/fused_parity_check.py.
+Full train-step trajectory parity (method x transport x state_layout x
+regime, single- and multi-device) lives in tests/test_parity_matrix.py.
 """
-import pathlib
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,9 +12,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import hier, signs, votes
 from repro.core.topology import single_device_topology
-
-HELPERS = pathlib.Path(__file__).parent / "helpers"
-SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
 
 
 @pytest.fixture(scope="module")
@@ -125,55 +118,3 @@ def test_algo_config_validates_transport():
     with pytest.raises(ValueError):
         hier.AlgoConfig(method="bogus")
     hier.AlgoConfig(transport="fused")          # accepted
-
-
-def _run_steps(topo, transport, method, steps=6, **algo_kw):
-    def loss_fn(params, batch, rng):
-        pred = batch["x"] @ params["w"] + params["b"]
-        return jnp.mean((pred - batch["y"]) ** 2)
-
-    w0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 33)) * 0.3,
-          "b": jnp.zeros((33,))}
-    specs = {"w": P(None, None), "b": P(None)}
-    xs = jax.random.normal(jax.random.PRNGKey(7), (6, 1, 1, 8, 16))
-    ys = jnp.einsum("spdbi,io->spdbo", xs,
-                    jax.random.normal(jax.random.PRNGKey(9), (16, 33)))
-    algo = hier.AlgoConfig(method=method, mu=5e-3, t_e=3, rho=1.0,
-                           transport=transport,
-                           compute_dtype=jnp.float32,
-                           master_dtype=jnp.float32,
-                           delta_dtype=jnp.float32, **algo_kw)
-    bundle = hier.ModelBundle(loss=loss_fn, compute_specs=specs,
-                              master_specs=specs)
-    init_fn, step = hier.make_hier_step(topo, algo, bundle)
-    state = init_fn(w0, jax.random.PRNGKey(1))
-    jstep = jax.jit(step)
-    ew, dw, mask = jnp.ones((1,)), jnp.ones((1, 1)), jnp.ones((1, 1))
-    for t in range(steps):
-        state, _ = jstep(state, {"train": {"x": xs[t], "y": ys[t]}},
-                         ew, dw, mask)
-    return jax.tree.map(np.asarray, state.params)
-
-
-@pytest.mark.parametrize("method", ["hier_signsgd", "dc_hier_signsgd"])
-@pytest.mark.parametrize("extra", [{}, {"error_feedback": True},
-                                   {"momentum": 0.9}])
-def test_train_step_parity_single_device(topo, method, extra):
-    ref = _run_steps(topo, "ag_packed", method, **extra)
-    got = _run_steps(topo, "fused", method, **extra)
-    for k in ref:
-        np.testing.assert_array_equal(ref[k], got[k])
-
-
-@pytest.mark.slow
-def test_train_step_parity_multidevice():
-    """8-CPU mesh: ag_packed / ar_int8 / fused produce bitwise-identical
-    trajectories (DC + plain, straggler masks, EF)."""
-    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
-    r = subprocess.run(
-        [sys.executable, str(HELPERS / "fused_parity_check.py")],
-        capture_output=True, text=True, timeout=900, env=env)
-    assert r.returncode == 0, (
-        f"fused_parity_check failed:\nSTDOUT:\n{r.stdout[-4000:]}\n"
-        f"STDERR:\n{r.stderr[-4000:]}")
-    assert "fused transport parity OK" in r.stdout

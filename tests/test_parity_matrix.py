@@ -1,0 +1,210 @@
+"""The transport x method x state_layout x regime parity matrix.
+
+One shared toy trajectory (tests/helpers/parity_harness.py) is run
+through every supported train-step combination:
+
+  * methods: hier_signsgd | dc_hier_signsgd | hier_sgd | hier_local_qsgd
+  * transports: ag_packed | ar_int8 | fused          (sign methods)
+  * state layouts: tree | flat
+  * regimes: replicated | fsdp  (flat is replicated-only by design)
+
+Sign transports and state layouts must agree BITWISE (ties -> +1 by
+construction, update arithmetic per-coordinate identical); the paper
+oracle (``ref_fed``) and the FSDP regime agree within float tolerance.
+The multi-device version of the same matrix (2x2x2 mesh, straggler
+masks, EF/momentum) runs in a subprocess -- see
+helpers/parity_matrix_check.py -- and is marked ``slow``.
+"""
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
+import parity_harness as H  # noqa: E402
+
+from repro.core import flatbuf, hier  # noqa: E402
+from repro.core.topology import single_device_topology  # noqa: E402
+from repro.kernels import vote_update as _vu  # noqa: E402
+
+HELPERS = pathlib.Path(__file__).parent / "helpers"
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return single_device_topology()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return H.make_problem(pods=1, devs=1)
+
+
+@pytest.fixture(scope="module")
+def refs():
+    """Lazily-computed (ag_packed, tree, replicated) reference per
+    method -- the shared fixture every matrix cell compares against."""
+    return {}
+
+
+def _ref(refs, topo, problem, method):
+    if method not in refs:
+        refs[method] = H.run_hier(topo, problem, method)
+    return refs[method]
+
+
+@pytest.mark.parametrize("method,transport,layout", H.matrix_cells())
+def test_matrix_cross_parity(topo, problem, refs, method, transport,
+                             layout):
+    """Every cell is bitwise identical to the reference cell."""
+    ref, _ = _ref(refs, topo, problem, method)
+    got, _ = H.run_hier(topo, problem, method, transport, layout)
+    H.assert_trees_equal(ref, got, f"{method}/{transport}/{layout}")
+
+
+@pytest.mark.parametrize("method", ["hier_signsgd", "dc_hier_signsgd",
+                                    "hier_sgd"])
+def test_matrix_vs_oracle(topo, problem, refs, method):
+    """Cloud-aggregated final model == the ref_fed paper oracle.
+
+    (hier_local_qsgd is excluded: its stochastic quantizer draws from a
+    different rng stream in the oracle, so trajectories diverge by
+    design.)"""
+    params, ew = _ref(refs, topo, problem, method)
+    oracle = H.run_oracle(problem, method)
+    H.assert_trees_equal(H.aggregate(params, ew), oracle,
+                         f"oracle/{method}", exact=False, atol=1e-5)
+
+
+@pytest.mark.parametrize("layout", H.LAYOUTS)
+@pytest.mark.parametrize("kw", [{"error_feedback": True},
+                                {"momentum": 0.9}, {"decay": True}],
+                         ids=["ef", "momentum", "decay"])
+def test_matrix_options(topo, problem, layout, kw):
+    """Beyond-paper options stay layout- and transport-invariant
+    (decay also exercises the dynamic-mu fused update route)."""
+    ref, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "ag_packed",
+                        "tree", **kw)
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused",
+                        layout, **kw)
+    H.assert_trees_equal(ref, got, f"options/{kw}/{layout}")
+
+
+@pytest.mark.parametrize("method", ["hier_signsgd", "dc_hier_signsgd",
+                                    "hier_sgd"])
+def test_matrix_fsdp_regime(topo, problem, refs, method):
+    ref, _ = _ref(refs, topo, problem, method)
+    got, _ = H.run_hier(topo, problem, method, regime="fsdp")
+    H.assert_trees_equal(ref, got, f"fsdp/{method}", exact=False,
+                         atol=1e-6)
+
+
+def test_flat_rejects_fsdp(topo):
+    bundle = hier.ModelBundle(loss=None, compute_specs=H.COMPUTE_SPECS,
+                              master_specs=H.FSDP_MASTER_SPECS,
+                              loss_master=H._fsdp_loss_master,
+                              param_mode="fsdp")
+    with pytest.raises(ValueError, match="replicated"):
+        hier.make_hier_step(topo, hier.AlgoConfig(state_layout="flat"),
+                            bundle)
+    with pytest.raises(ValueError):
+        hier.AlgoConfig(state_layout="bogus")
+
+
+def _count_vote_updates(topo, problem, layout, monkeypatch):
+    """Trace one fused train step; return the mu of each vote_update
+    kernel invocation (the kernel route is forced via interpret mode)."""
+    monkeypatch.setenv("REPRO_FUSED_PALLAS", "interpret")
+    calls = []
+    orig = _vu.vote_update
+
+    def counting(*args, **kw):
+        calls.append(kw.get("mu"))
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(_vu, "vote_update", counting)
+    algo = H._algo("dc_hier_signsgd", "fused", layout,
+                   t_e=problem["t_e"])
+    bundle = hier.ModelBundle(loss=H.loss_fn,
+                              compute_specs=H.COMPUTE_SPECS,
+                              master_specs=H.COMPUTE_SPECS)
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = init_fn(problem["w0"], jax.random.PRNGKey(1))
+    ew = jnp.ones((1,))
+    dw = mask = jnp.ones((1, 1))
+    batch = {"train": {"x": problem["xs"][0], "y": problem["ys"][0]}}
+    jax.make_jaxpr(lambda s, b: step(s, b, ew, dw, mask))(state, batch)
+    return calls, algo
+
+
+def test_flat_fused_single_vote_update(topo, problem, monkeypatch):
+    """Acceptance: the flat update path issues exactly ONE vote_update
+    over the whole-model buffer per local step, with the real mu folded
+    in (the update IS the kernel's read-modify-write) -- while the tree
+    layout uses the kernel only as a vote (mu = -1) and updates per
+    leaf."""
+    calls, algo = _count_vote_updates(topo, problem, "flat", monkeypatch)
+    assert calls == [algo.mu], calls
+    calls, _ = _count_vote_updates(topo, problem, "tree", monkeypatch)
+    assert calls == [-1.0], calls
+
+
+@pytest.mark.parametrize("method,opts", [
+    ("dc_hier_signsgd", {}),
+    ("dc_hier_signsgd", {"error_feedback": True}),
+    ("hier_signsgd", {}),
+    ("hier_signsgd", {"error_feedback": True, "momentum": 0.9}),
+    ("hier_sgd", {}),
+])
+@pytest.mark.parametrize("layout", H.LAYOUTS)
+def test_state_structure(topo, problem, method, opts, layout):
+    """Regression: state entries are allocated only when used -- delta
+    only for DC (or FSDP), EF residual only under error_feedback,
+    momentum only when momentum > 0 -- in both state layouts."""
+    algo = H._algo(method, "ag_packed", layout, **opts)
+    bundle = hier.ModelBundle(loss=H.loss_fn,
+                              compute_specs=H.COMPUTE_SPECS,
+                              master_specs=H.COMPUTE_SPECS)
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = init_fn(problem["w0"], jax.random.PRNGKey(0))
+    assert (state.delta is not None) == (method == "dc_hier_signsgd")
+    assert (state.delta_next is not None) == (method == "dc_hier_signsgd")
+    assert (state.ef is not None) == opts.get("error_feedback", False)
+    assert (state.mom is not None) == (opts.get("momentum", 0.0) > 0)
+    if layout == "flat":
+        assert isinstance(state.params, flatbuf.FlatState)
+        for fs in (state.delta, state.ef, state.mom):
+            assert fs is None or isinstance(fs, flatbuf.FlatState)
+        if state.delta is not None:
+            assert state.delta.buf.dtype == algo.delta_dtype
+            # aux buffers re-label the layout with their own dtype
+            assert state.delta.layout.dtype == algo.delta_dtype
+            assert all(s.dtype == algo.delta_dtype
+                       for s in state.delta.layout.slots)
+        if state.ef is not None:
+            assert state.ef.buf.shape == (1, 1, state.params.layout.n_pad)
+    # the step runs and preserves the structure
+    ew = jnp.ones((1,))
+    dw = mask = jnp.ones((1, 1))
+    batch = {"train": {"x": problem["xs"][0], "y": problem["ys"][0]}}
+    state2, _ = jax.jit(step)(state, batch, ew, dw, mask)
+    assert (jax.tree_util.tree_structure(state2)
+            == jax.tree_util.tree_structure(state))
+
+
+@pytest.mark.slow
+def test_parity_matrix_multidevice():
+    """The full matrix on an 8-CPU 2x2x2 mesh: cross-transport /
+    cross-layout bitwise, oracle, straggler masks, EF/momentum, FSDP."""
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    r = subprocess.run(
+        [sys.executable, str(HELPERS / "parity_matrix_check.py")],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert r.returncode == 0, (
+        f"parity_matrix_check failed:\nSTDOUT:\n{r.stdout[-4000:]}\n"
+        f"STDERR:\n{r.stderr[-4000:]}")
+    assert "parity matrix OK" in r.stdout

@@ -47,6 +47,24 @@ def test_checkpoint_resume_continues(topo, tmp_path):
 
 
 @pytest.mark.slow
+def test_flat_state_resumes_from_tree_checkpoint(topo, tmp_path):
+    """Cross-layout resume: a tree-state run's checkpoint loads into a
+    state_layout='flat' run (store converts leaves into the buffer) and
+    training continues from the same step."""
+    cfg = configs.get_smoke("xlstm_350m")
+    run = RunCfg(steps=10, batch_per_device=4, seq_len=32,
+                 ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    run_training(cfg, topo, _algo(), run)
+    run2 = RunCfg(steps=14, batch_per_device=4, seq_len=32,
+                  ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    _, h2 = run_training(cfg, topo,
+                         _algo(state_layout="flat", transport="fused"),
+                         run2)
+    assert h2[0]["step"] == 10
+    assert all(jnp.isfinite(h["loss"]) for h in h2)
+
+
+@pytest.mark.slow
 def test_fault_injection_device_loss(topo):
     """Losing a device mid-run degrades to quorum voting, not a crash."""
     cfg = configs.get_smoke("gemma3_1b")
