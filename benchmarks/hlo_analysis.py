@@ -235,6 +235,7 @@ def analyze_hlo_text(text: str, axis_sizes: dict[str, int] | None = None):
         "wire_bytes": 0.0,
         "collectives": defaultdict(lambda: {"bytes": 0.0, "count": 0}),
         "per_axis_bytes": defaultdict(float),
+        "per_axis_op_bytes": defaultdict(float),
         "while_trips": {},
         "top_collectives": [],
     }
@@ -371,6 +372,7 @@ def analyze_hlo_text(text: str, axis_sizes: dict[str, int] | None = None):
                 totals["collectives"][base]["bytes"] += mult * in_b
                 totals["collectives"][base]["count"] += mult
                 totals["per_axis_bytes"][axes] += mult * in_b
+                totals["per_axis_op_bytes"][f"{base}@{axes}"] += mult * in_b
                 totals["top_collectives"].append(
                     {"op": base, "bytes": in_b, "mult": mult,
                      "axes": axes, "group_size": gsz,
@@ -379,9 +381,35 @@ def analyze_hlo_text(text: str, axis_sizes: dict[str, int] | None = None):
     walk("__entry__", 1.0)
     totals["collectives"] = {k: v for k, v in totals["collectives"].items()}
     totals["per_axis_bytes"] = dict(totals["per_axis_bytes"])
+    totals["per_axis_op_bytes"] = dict(totals["per_axis_op_bytes"])
     totals["collective_bytes_total"] = sum(
         v["bytes"] for v in totals["collectives"].values())
     totals["top_collectives"] = sorted(
         totals["top_collectives"], key=lambda d: -d["bytes"] * d["mult"]
     )[:24]
     return totals
+
+
+def collective_bytes(stats: dict, op: str | None = None,
+                     axis: str | None = None) -> float:
+    """Total operand bytes of collectives filtered by op and/or mesh axis.
+
+    ``axis`` matches any replica-group label that *includes* the axis
+    (``per_axis_op_bytes`` labels multi-axis groups ``"a+b"``).
+    Collectives whose replica groups could NOT be attributed (label
+    ``"unknown"``: no ``axis_sizes`` passed, or an unparsed
+    replica_groups format) count toward EVERY axis filter -- an
+    acceptance check like ``collective_bytes(stats, op="all-gather",
+    axis="model") == 0`` must fail loudly on a module it cannot
+    attribute, not pass vacuously.
+    """
+    total = 0.0
+    for key, b in stats.get("per_axis_op_bytes", {}).items():
+        k_op, k_axes = key.split("@", 1)
+        if op is not None and k_op != op:
+            continue
+        if (axis is not None and k_axes != "unknown"
+                and axis not in k_axes.split("+")):
+            continue
+        total += b
+    return total

@@ -2,6 +2,12 @@
 framework's KV-cache serving path (same code the decode_32k/long_500k
 dry-run cells lower).
 
+Serves straight from a flat-state checkpoint: the trained ``FlatState``
+buffer (``state_layout="flat"``) is handed to
+``specs.serve_params_from_flat`` and the model runs on ``unflatten``
+slice VIEWS of the buffer -- no per-leaf tree is ever assembled
+(zero-copy checkpoint -> serving).
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 import pathlib
@@ -12,15 +18,31 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
+from repro.core import flatbuf
 from repro.core.topology import single_device_topology
+from repro.launch import specs
 from repro.models import build
 
 cfg = configs.get_smoke("zamba2_2p7b")      # hybrid SSM: O(1) decode state
 topo = single_device_topology()
 built = build.build_model(cfg, topo)
-params = built.init_params(jax.random.PRNGKey(0))
+params_tree = built.init_params(jax.random.PRNGKey(0))
+
+# what a flat-state training run checkpoints: ONE [P, n_pad] buffer
+# (P = 1 edge here).  Serving slices views out of it directly.
+ckpt = flatbuf.from_tree(
+    jax.tree.map(lambda v: v[None], params_tree), batch_dims=1)
+params = specs.serve_params_from_flat(built, topo, ckpt)
+probe = jax.tree.leaves(params_tree)[0]
+np.testing.assert_array_equal(np.asarray(jax.tree.leaves(params)[0]),
+                              np.asarray(probe))
+shardings = specs.serve_param_shardings(built, topo, ckpt)
+print(f"serving {ckpt.layout.n} params from a FlatState view "
+      f"(n_pad={ckpt.layout.n_pad}, "
+      f"buffer sharding={jax.tree.leaves(shardings)[0].spec})")
 
 B, PROMPT, GEN = 4, 24, 16
 prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0,

@@ -16,13 +16,18 @@ together with the driver's retry loop this is the node-failure story
 Flat state (``core.flatbuf.FlatState``, used by ``state_layout="flat"``):
 a FlatState node is saved as its single buffer array plus a
 ``manifest["flat_state"]`` entry recording the FlatLayout (slot table,
-n/n_pad, buffer dtype).  Restore converts both ways: a flat checkpoint
-loads into a tree-state ``like`` (the buffer is sliced per slot) and a
-tree checkpoint loads into a flat-state ``like`` (the leaves are
-assembled into the buffer at their slot offsets) -- in both directions
-only the real coordinates transfer; tile/tail padding is don't-care.
-The slot table is validated against the ``like`` layout, so silent
-structure drift raises instead of corrupting.
+n/n_pad, buffer dtype, model-shard count and per-slot shard dims).
+Restore converts both ways: a flat checkpoint loads into a tree-state
+``like`` (the buffer is sliced per slot -- sharded slots reassemble
+their per-bucket blocks along ``shard_dim``) and a tree checkpoint
+loads into a flat-state ``like`` (the leaves are assembled into the
+buffer at their slot offsets, block per bucket for sharded slots,
+copies into every bucket otherwise) -- in both directions only the
+real coordinates transfer; tile/tail padding is don't-care.  The slot
+table is validated against the ``like`` layout, so silent structure
+drift raises instead of corrupting; a sharded flat checkpoint restored
+into a differently-sharded flat run goes through the tree form (save
+trees at shard-count boundaries, or restore via a tree ``like``).
 """
 from __future__ import annotations
 
@@ -77,13 +82,15 @@ def _layout_meta(fs: flatbuf.FlatState) -> dict:
     return {
         "n": lay.n,
         "n_pad": lay.n_pad,
+        "shards": lay.shards,
         "dtype": str(np.dtype(lay.dtype)) if np.dtype(lay.dtype).kind != "V"
         else "bfloat16",
         "batch_dims": fs.batch_dims,
         "slots": [{"key": key, "shape": list(s.shape),
                    "dtype": str(np.dtype(s.dtype))
                    if np.dtype(s.dtype).kind != "V" else "bfloat16",
-                   "size": s.size, "padded": s.padded, "offset": s.offset}
+                   "size": s.size, "padded": s.padded, "offset": s.offset,
+                   "shard_dim": s.shard_dim}
                   for key, s in zip(_leaf_keys(lay), lay.slots)],
     }
 
@@ -91,17 +98,20 @@ def _layout_meta(fs: flatbuf.FlatState) -> dict:
 def _check_slots(meta: dict, like_fs: flatbuf.FlatState, where: str):
     """The saved slot table (keys included) must match the target."""
     layout = like_fs.layout
-    ours = [(k, list(s.shape), s.size, s.padded, s.offset)
+    ours = [(k, list(s.shape), s.size, s.padded, s.offset, s.shard_dim)
             for k, s in zip(_leaf_keys(layout), layout.slots)]
     theirs = [(s["key"], list(s["shape"]), s["size"], s["padded"],
-               s["offset"]) for s in meta["slots"]]
+               s["offset"], s.get("shard_dim")) for s in meta["slots"]]
     if (ours != theirs or meta["n_pad"] != layout.n_pad
+            or meta.get("shards", 1) != layout.shards
             or meta["batch_dims"] != like_fs.batch_dims):
         raise IOError(
             f"flat-state layout mismatch at {where!r}: checkpoint has "
             f"{len(theirs)} slots / n_pad={meta['n_pad']} / "
+            f"shards={meta.get('shards', 1)} / "
             f"batch_dims={meta['batch_dims']}, target expects "
             f"{len(ours)} slots / n_pad={layout.n_pad} / "
+            f"shards={layout.shards} / "
             f"batch_dims={like_fs.batch_dims}")
 
 
@@ -209,17 +219,28 @@ def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
                 f"checkpoint is missing leaf {k!r} for flat-state "
                 f"target {key!r}")
         arr = data[k]
-        if tuple(arr.shape[bd:]) != slot.shape:
+        want = slot.global_shape(lay.shards)
+        if tuple(arr.shape[bd:]) != want:
             raise IOError(
                 f"flat-state leaf {k!r} has shape {arr.shape}, slot "
-                f"expects {slot.shape} after {bd} batch dims")
+                f"expects {want} after {bd} batch dims")
         _check_batch(arr.shape, like_fs, k)
         if batch is None:
             batch = arr.shape[:bd]
-        parts.append((slot, arr.reshape(batch + (slot.size,))))
+        parts.append((slot, arr))
     buf = np.zeros(batch + (lay.n_pad,), np_dtype)
+    bp = lay.bucket_pad
     for slot, arr in parts:
-        buf[..., slot.offset:slot.offset + slot.size] = arr
+        if slot.shard_dim is None:
+            # per-bucket copy: every model shard holds the full leaf
+            flat = arr.reshape(batch + (slot.size,))
+            blocks = [flat] * lay.shards
+        else:
+            blocks = [b.reshape(batch + (slot.size,)) for b in np.split(
+                arr, lay.shards, axis=bd + slot.shard_dim)]
+        for m, blk in enumerate(blocks):
+            off = m * bp + slot.offset
+            buf[..., off:off + slot.size] = blk
     return buf
 
 
@@ -240,9 +261,15 @@ def _slice_flat(data, manifest: dict, like_keyed) -> dict:
         buf = data[q]
         bd = meta["batch_dims"]
         batch = buf.shape[:bd]
+        shards = meta.get("shards", 1)
+        bp = meta["n_pad"] // shards
         for slot in meta["slots"]:
             k = q + SEP + slot["key"]
-            shape = batch + tuple(slot["shape"])
+            local = tuple(slot["shape"])
+            sd = slot.get("shard_dim")
+            gshape = (local if sd is None else local[:sd]
+                      + (local[sd] * shards,) + local[sd + 1:])
+            shape = batch + gshape
             leaf = like_keyed.get(k)
             if leaf is not None and tuple(
                     getattr(leaf, "shape", shape)) != shape:
@@ -250,7 +277,14 @@ def _slice_flat(data, manifest: dict, like_keyed) -> dict:
                     f"flat-state slot for {k!r} has shape {shape}, "
                     f"target leaf expects {getattr(leaf, 'shape', None)}")
             off, size = slot["offset"], slot["size"]
-            expanded[k] = buf[..., off:off + size].reshape(shape)
+            if sd is None:
+                # copies are bit-identical; bucket 0's is the leaf
+                expanded[k] = buf[..., off:off + size].reshape(shape)
+            else:
+                blocks = [buf[..., m * bp + off:m * bp + off + size
+                              ].reshape(batch + local)
+                          for m in range(shards)]
+                expanded[k] = np.concatenate(blocks, axis=bd + sd)
     return expanded
 
 

@@ -55,11 +55,44 @@ one array leaf).  Under ``state_layout="flat"``:
 The layout of a given tree is deterministic (flatten order x the rules
 above), so two runs -- or a tree-state checkpoint and a flat-state run
 -- always agree on where every leaf lives.
+
+Model-axis sharded layouts (per-shard buckets)
+----------------------------------------------
+``make_layout(..., sharding=ModelSharding(...))`` lays the tree out as
+``shards`` identical **buckets**, one per model (TP) shard, so the flat
+buffer can live sharded along the mesh's model axis end to end -- no
+leaf is ever gathered to build or read the buffer:
+
+  * a leaf whose PartitionSpec names the model axis on a divisible dim
+    contributes its *local block* to each bucket (bucket m holds block m
+    of the leaf along ``LeafSlot.shard_dim``);
+  * every other leaf (replicated specs, uneven or zero-size dims) is
+    **copied whole into every bucket** -- each shard votes/updates its
+    own copy from identical inputs, so the copies stay bit-identical by
+    construction and any one of them is the leaf;
+  * slots store *local* (per-bucket) geometry; the buckets share one
+    slot table, each bucket is independently 32*128-tile aligned, and
+    ``n_pad = shards * bucket_pad`` with bucket m owning the contiguous
+    word range ``[m * bucket_pad/32, (m+1) * bucket_pad/32)``.
+
+``layout.bucket()`` is the shards=1 layout of ONE bucket: inside a
+``shard_map`` program (see ``core.shardflat``) every rank runs the
+ordinary ``flatten_tree``/``unflatten_tree``/``pack_tree`` on its local
+block with the bucket layout, which is how the sharded layout stays a
+pure re-indexing of the same per-coordinate arithmetic.  The global
+(reference) ``flatten_tree``/``unflatten_tree``/``pack_tree`` here
+implement identical semantics with static slices/concats and work on
+any runtime -- they are the oracle the shard_map path is tested
+against.  Coordinate ORDER differs from the unsharded layout (buckets
+interleave leaf blocks), but the sign->vote->update sweep is
+coordinate-order agnostic, so trajectories stay bit-identical
+leaf-for-leaf.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -80,12 +113,20 @@ def _ceil_to(x: int, m: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class LeafSlot:
-    """Static placement of one leaf inside the flat buffer."""
+    """Static placement of one leaf inside the flat buffer.
+
+    For sharded layouts (``FlatLayout.shards > 1``) the geometry is
+    LOCAL: ``shape``/``size``/``padded`` describe the per-bucket block
+    and ``offset`` is the offset *within* a bucket.  ``shard_dim`` is
+    the leaf dim the model axis divides (global dim = local * shards),
+    or None for a leaf copied whole into every bucket.
+    """
     shape: tuple[int, ...]       # leaf dims (batch dims excluded)
     dtype: Any                   # original leaf dtype (restored on unflatten)
     size: int                    # prod(shape)
     padded: int                  # size padded to a PACK multiple
     offset: int                  # coordinate offset; offset % PACK == 0
+    shard_dim: int | None = None  # model-sharded leaf dim (sharded layouts)
 
     @property
     def word_offset(self) -> int:
@@ -95,19 +136,93 @@ class LeafSlot:
     def words(self) -> int:
         return self.padded // PACK
 
+    def global_shape(self, shards: int) -> tuple[int, ...]:
+        if self.shard_dim is None:
+            return self.shape
+        d = self.shard_dim
+        return self.shape[:d] + (self.shape[d] * shards,) + self.shape[d + 1:]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSharding:
+    """How the model (TP) axis divides a tree into per-shard buckets.
+
+    ``specs`` is a pytree of ``jax.sharding.PartitionSpec`` over the
+    LEAF dims (batch dims excluded) -- the same trees ``ModelBundle``
+    carries as master/compute specs.  A leaf shards on the first dim
+    whose spec entry names ``axis`` and whose extent divides evenly by
+    ``shards``; everything else is copied whole into every bucket.
+    """
+    shards: int
+    axis: str
+    specs: Any
+
+
+@functools.lru_cache(maxsize=None)
+def _warn_uneven(shape: tuple[int, ...], dim: int, shards: int):
+    # once per (shape, dim, shards): a TP-sharded leaf that cannot
+    # divide degrades to a per-bucket copy -- correct, but the buffer
+    # stores `shards` copies and every shard_map entry re-replicates
+    # the leaf over the model axis (a whole-leaf gather).  Surfacing it
+    # beats silently losing the sharded layout's headline property.
+    warnings.warn(
+        f"flatbuf sharded layout: leaf shape {shape} is model-sharded on "
+        f"dim {dim} but {shape[dim]} does not divide by {shards} shards; "
+        f"falling back to a per-bucket COPY (replicated over model, "
+        f"gathered at shard_map boundaries).  Pad the dim to a multiple "
+        f"of the model axis to keep it sharded.", stacklevel=3)
+
+
+def _spec_shard_dim(spec, axis: str, shape: tuple[int, ...],
+                    shards: int) -> int | None:
+    if spec is None:
+        return None
+    for i, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if axis in names:
+            if i < len(shape) and shape[i] > 0 and shape[i] % shards == 0:
+                return i
+            if i < len(shape) and shape[i] > 0:
+                _warn_uneven(shape, i, shards)
+            return None          # uneven / zero dim -> per-bucket copy
+    return None
+
 
 @dataclasses.dataclass(frozen=True)
 class FlatLayout:
     """Static layout of a pytree as one tile-aligned flat buffer."""
     treedef: Any
     slots: tuple[LeafSlot, ...]
-    n: int                       # real coordinates (sum of slot sizes)
-    n_pad: int                   # buffer length; n_pad % TILE == 0
+    n: int                       # distinct real coordinates
+    n_pad: int                   # buffer length; n_pad % (shards*TILE) == 0
     dtype: Any                   # promoted float dtype of the flat buffer
+    shards: int = 1              # model-axis buckets (1 = unsharded)
 
     @property
     def n_words(self) -> int:
         return self.n_pad // PACK
+
+    @property
+    def bucket_pad(self) -> int:
+        """Coordinates per model-shard bucket (== n_pad when shards=1)."""
+        return self.n_pad // self.shards
+
+    @property
+    def bucket_words(self) -> int:
+        return self.bucket_pad // PACK
+
+    def bucket(self) -> "FlatLayout":
+        """The shards=1 layout of ONE bucket (identity when unsharded).
+
+        This is what a shard_map program uses on its local block: the
+        slots already store local geometry, so the bucket layout is the
+        same slot table over a ``bucket_pad``-long buffer.
+        """
+        if self.shards == 1:
+            return self
+        return dataclasses.replace(
+            self, shards=1, n_pad=self.bucket_pad,
+            n=sum(s.size for s in self.slots))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -150,10 +265,10 @@ class FlatState:
                 f"batch_dims={self.batch_dims})")
 
 
-def from_tree(tree: PyTree, batch_dims: int = 0,
-              dtype: Any = None) -> FlatState:
+def from_tree(tree: PyTree, batch_dims: int = 0, dtype: Any = None,
+              sharding: ModelSharding | None = None) -> FlatState:
     """Lay out and flatten ``tree`` into a :class:`FlatState` in one call."""
-    layout = make_layout(tree, batch_dims=batch_dims)
+    layout = make_layout(tree, batch_dims=batch_dims, sharding=sharding)
     buf = flatten_tree(layout, tree, batch_dims=batch_dims, dtype=dtype)
     return FlatState(buf, layout, batch_dims)
 
@@ -171,19 +286,26 @@ def with_dtype(layout: FlatLayout, dtype: Any) -> FlatLayout:
     return dataclasses.replace(layout, slots=slots, dtype=dtype)
 
 
-def make_layout(tree: PyTree, batch_dims: int = 0,
-                tile: int = TILE) -> FlatLayout:
+def make_layout(tree: PyTree, batch_dims: int = 0, tile: int = TILE,
+                sharding: ModelSharding | None = None) -> FlatLayout:
     """Compute the static layout of ``tree`` (shapes/dtypes only).
 
     batch_dims: number of leading dims shared by every leaf (e.g. 2 for
     ``[P, D, *leaf]`` per-device gradients) that stay un-flattened.
+
+    sharding: lay the tree out as per-model-shard buckets (see the
+    module docstring).  A sharding under which no leaf actually divides
+    normalizes back to the unsharded (shards=1) layout, so callers can
+    pass the mesh sharding unconditionally.
     """
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         raise ValueError("cannot lay out an empty pytree")
-    slots = []
-    offset = 0
-    dtype = None
+    shards = sharding.shards if sharding is not None else 1
+    if shards > 1:
+        spec_leaves = treedef.flatten_up_to(sharding.specs)
+    else:
+        spec_leaves = [None] * len(leaves)
     kinds = set()
     for leaf in leaves:
         if jnp.issubdtype(leaf.dtype, jnp.floating):
@@ -199,18 +321,53 @@ def make_layout(tree: PyTree, batch_dims: int = 0,
         # so a mixed buffer could corrupt int values; keep trees
         # dtype-kind homogeneous (sign trees are all-int, grads all-float)
         raise ValueError("flatbuf trees must not mix int and float leaves")
-    for leaf in leaves:
+    slots = []
+    offset = 0
+    dtype = None
+    for leaf, spec in zip(leaves, spec_leaves):
         shape = tuple(leaf.shape[batch_dims:])
+        sd = (_spec_shard_dim(spec, sharding.axis, shape, shards)
+              if shards > 1 else None)
+        if sd is not None:
+            shape = (shape[:sd] + (shape[sd] // shards,) + shape[sd + 1:])
         size = int(functools.reduce(lambda a, b: a * b, shape, 1))
         padded = _ceil_to(max(size, 1), PACK)
         slots.append(LeafSlot(shape=shape, dtype=leaf.dtype, size=size,
-                              padded=padded, offset=offset))
+                              padded=padded, offset=offset, shard_dim=sd))
         offset += padded
         dtype = (leaf.dtype if dtype is None
                  else jnp.promote_types(dtype, leaf.dtype))
-    n = sum(s.size for s in slots)
+    if shards > 1 and all(s.shard_dim is None for s in slots):
+        shards = 1               # nothing divides: don't pay M-way copies
+    n = sum(s.size * (shards if s.shard_dim is not None else 1)
+            for s in slots)
     return FlatLayout(treedef=treedef, slots=tuple(slots), n=n,
-                      n_pad=_ceil_to(offset, tile), dtype=jnp.dtype(dtype))
+                      n_pad=shards * _ceil_to(offset, tile),
+                      dtype=jnp.dtype(dtype), shards=shards)
+
+
+def bucket_trees(layout: FlatLayout, tree: PyTree,
+                 batch_dims: int = 0) -> list[PyTree]:
+    """Per-bucket local trees of a sharded layout (static slices).
+
+    Bucket m's tree holds block m of every sharded leaf (along its
+    ``shard_dim``) and the full leaf for per-bucket copies -- exactly
+    what rank m of a shard_map program sees locally.
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    out = []
+    for m in range(layout.shards):
+        parts = []
+        for slot, leaf in zip(layout.slots, leaves):
+            if slot.shard_dim is None:
+                parts.append(leaf)
+            else:
+                ax = batch_dims + slot.shard_dim
+                w = slot.shape[slot.shard_dim]
+                parts.append(jax.lax.slice_in_dim(leaf, m * w, (m + 1) * w,
+                                                  axis=ax))
+        out.append(layout.treedef.unflatten(parts))
+    return out
 
 
 def _flat_leaf(slot: LeafSlot, leaf: jax.Array, batch_dims: int):
@@ -224,7 +381,17 @@ def _flat_leaf(slot: LeafSlot, leaf: jax.Array, batch_dims: int):
 
 def flatten_tree(layout: FlatLayout, tree: PyTree, batch_dims: int = 0,
                  dtype: Any = None) -> jax.Array:
-    """tree -> ``[*batch, n_pad]`` buffer in the (promoted) buffer dtype."""
+    """tree -> ``[*batch, n_pad]`` buffer in the (promoted) buffer dtype.
+
+    Sharded layouts build each bucket from the leaf blocks it owns
+    (static slices -- the reference semantics of the shard_map path in
+    ``core.shardflat``, which never moves a block off its shard).
+    """
+    if layout.shards > 1:
+        bucket = layout.bucket()
+        return jnp.concatenate(
+            [flatten_tree(bucket, t, batch_dims=batch_dims, dtype=dtype)
+             for t in bucket_trees(layout, tree, batch_dims)], axis=-1)
     dtype = layout.dtype if dtype is None else dtype
     leaves = layout.treedef.flatten_up_to(tree)
     parts = [_flat_leaf(s, leaf.astype(dtype), batch_dims)
@@ -242,7 +409,28 @@ def unflatten_tree(layout: FlatLayout, buf: jax.Array, batch_dims: int = 0,
 
     cast=True restores each leaf's original dtype (exact for widening
     promotions); cast=False keeps ``buf.dtype`` (e.g. int8 vote bits).
+
+    Sharded layouts reassemble each sharded leaf by concatenating its
+    per-bucket blocks along ``shard_dim``; per-bucket copies read
+    bucket 0 (all copies are bit-identical by construction).
     """
+    if layout.shards > 1:
+        bucket = layout.bucket()
+        bp = layout.bucket_pad
+        parts = [
+            bucket.treedef.flatten_up_to(
+                unflatten_tree(bucket, buf[..., m * bp:(m + 1) * bp],
+                               batch_dims=batch_dims, cast=cast))
+            for m in range(layout.shards)]
+        leaves = []
+        for i, slot in enumerate(layout.slots):
+            if slot.shard_dim is None:
+                leaves.append(parts[0][i])
+            else:
+                leaves.append(jnp.concatenate(
+                    [p[i] for p in parts],
+                    axis=batch_dims + slot.shard_dim))
+        return layout.treedef.unflatten(leaves)
     batch = buf.shape[:batch_dims]
     leaves = []
     for s in layout.slots:
@@ -271,6 +459,15 @@ def pack_tree(layout: FlatLayout, tree: PyTree, batch_dims: int = 0,
     contiguous.  Tail words are all-ones (+1 signs), matching
     ``pack_signs`` padding.
     """
+    if layout.shards > 1:
+        bucket = layout.bucket()
+        uts = bucket_trees(layout, tree, batch_dims)
+        dts = (bucket_trees(layout, delta, delta_batch_dims)
+               if delta is not None else [None] * layout.shards)
+        return jnp.concatenate(
+            [pack_tree(bucket, ut, batch_dims=batch_dims, delta=dt,
+                       rho=rho, delta_batch_dims=delta_batch_dims)
+             for ut, dt in zip(uts, dts)], axis=-1)
     leaves = layout.treedef.flatten_up_to(tree)
     dl_leaves = (layout.treedef.flatten_up_to(delta)
                  if delta is not None else [None] * len(leaves))

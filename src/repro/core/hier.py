@@ -37,7 +37,11 @@ params as a pytree and applies updates per leaf; ``flat`` stores the
 master (and delta / EF / momentum) AS the ``core.flatbuf`` buffer for the
 entire run, materializing leaf views only at the loss boundary -- the
 whole-model update is then one elementwise sweep, and under
-``transport="fused"`` a single ``vote_update`` read-modify-write.  Both
+``transport="fused"`` a single ``vote_update`` read-modify-write.  On a
+mesh with a >1 model axis the flat buffer uses the *sharded* layout
+(per-model-shard buckets) and every tree<->buffer move runs as a
+``shard_map`` program (``core.shardflat``), so TP-sharded leaves are
+never gathered -- the buffer lives model-axis sharded end to end.  Both
 layouts are bit-identical in trajectory (tests/test_parity_matrix.py).
 """
 from __future__ import annotations
@@ -49,7 +53,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import device_axis, flatbuf, signs, votes
+from repro.core import device_axis, flatbuf, shardflat, signs, votes
 from repro.core.device_axis import LiftCfg
 from repro.core.topology import Topology
 
@@ -222,13 +226,24 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     def vote_direction(s_dev, mask):
         """Per-pod vote of a pre-signed tree via the configured transport."""
         if algo.transport == "fused":
-            return votes.fused_sign_vote(topo, s_dev, None, 0.0, mask)
+            return votes.fused_sign_vote(topo, s_dev, None, 0.0, mask,
+                                         specs=bundle.compute_specs)
         return jax.tree.map(
             lambda s, cs: votes.majority_vote_dev(
                 topo, s, mask, algo.transport, cs),
             s_dev, bundle.compute_specs)
 
     # ---------------- anchor (DC) pass ----------------------------------
+    # Parity contract note: the anchor is the one FULL-PRECISION
+    # statistic the state layouts share.  On multi-chip TP meshes XLA
+    # fuses the (large, scanned) gradient program differently around
+    # the two layouts' consumers, so real archs can pick up f32-ULP
+    # differences in delta between tree and flat state -- float-level
+    # equivalence, same class as the FSDP-regime tolerance.  The toy
+    # parity matrix (every mesh, incl. 2x2x2 TP) is exactly bitwise:
+    # per-coordinate arithmetic is identical in both layouts, only XLA
+    # fusion of the backward differs (an optimization_barrier on the
+    # anchor grads was tried and does not pin it).
     def compute_delta(params, delta_shaped, batch, rngs, edge_w, dev_w,
                       maskf):
         if fsdp:
@@ -243,9 +258,7 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             # local steps consume is the buffer itself (the pre-sign
             # correction u + rho*delta is one fused elementwise op).
             g_dev, _ = per_device_grads(master_views(params), batch, rngs)
-            g_buf = flatbuf.flatten_tree(params.layout,
-                                         gather_leafdims(g_dev, 2),
-                                         batch_dims=2, dtype=jnp.float32)
+            g_buf = flatten_buf(params.layout, g_dev, 2, jnp.float32)
             c_q = votes.weighted_mean_dev(topo, g_buf, dev_w)
             c = votes.pod_weighted_average(topo, c_q, edge_w)
             delta = (c - c_q).astype(algo.delta_dtype)
@@ -261,10 +274,16 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                              c, c_q)
         return constrain_master(delta)
 
+    def flat_spec(layout, lead: int = 1):
+        """Buffer spec (model-axis sharded iff the layout is) -- the
+        single source of truth is ``shardflat.buf_spec`` so train-state
+        placement can never diverge from the shard_map in/out specs."""
+        return shardflat.buf_spec(topo, layout, batch_dims=lead)
+
     def constrain_master(tree):
-        if flat:   # FlatState leaves: [P, n_pad] buffers
-            return jax.tree.map(
-                lambda x: topo.constrain(x, topo.pod_spec(None)), tree)
+        if flat:   # FlatState: [P, n_pad] buffer (sharded iff its layout)
+            return tree.replace(
+                topo.constrain(tree.buf, flat_spec(tree.layout)))
         return jax.tree.map(
             lambda x, s: topo.constrain(x, topo.pod_spec(*s)),
             tree, bundle.master_specs)
@@ -272,23 +291,32 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     def master_views(fs):
         """Flat state -> leaf views, re-constrained to the per-leaf master
         layout so the loss compiles to the SAME partitioned compute as the
-        tree layout (keeps flat bit-identical to tree under TP sharding)."""
+        tree layout (keeps flat bit-identical to tree under TP sharding).
+        Sharded layouts slice the views inside shard_map -- no model-axis
+        gather; the re-constrain is then a no-op for sharded leaves."""
         return jax.tree.map(
             lambda x, s: topo.constrain(x, topo.pod_spec(*s)),
-            fs.tree(), bundle.master_specs)
+            shardflat.tree_views(topo, fs), bundle.master_specs)
 
     def gather_leafdims(tree, lead):
-        """Replicate every leaf's non-leading dims before a flat-buffer
-        concat.  The buffer's coordinate space is unsharded, so
-        TP-sharded leaves are gathered implicitly on the flat path (the
-        documented ``fused`` caveat; per-shard buckets are a ROADMAP
-        item) -- and uniform operand shardings keep XLA's concat
+        """Replicate every leaf's non-leading dims before an *unsharded*
+        flat-buffer concat: uniform operand shardings keep XLA's concat
         partitioner out of the mixed minor-/major-dim-sharded case it
-        miscompiles."""
+        miscompiles.  Sharded layouts never come through here -- their
+        concats are rank-local inside shard_map (``flatten_buf``)."""
         spec = topo.dev_spec if lead == 2 else topo.pod_spec
         return jax.tree.map(
             lambda x: topo.constrain(x, spec(*([None] * (x.ndim - lead)))),
             tree)
+
+    def flatten_buf(layout, tree, batch_dims, dtype=None):
+        """tree -> flat buffer without unsharding TP leaves: per-bucket
+        shard_map writes for sharded layouts, the ``gather_leafdims``
+        dodge for the unsharded one."""
+        if layout.shards > 1:
+            return shardflat.flatten(topo, layout, tree, batch_dims, dtype)
+        return flatbuf.flatten_tree(layout, gather_leafdims(tree, batch_dims),
+                                    batch_dims=batch_dims, dtype=dtype)
 
     # ---------------- local step direction ------------------------------
     def local_direction(state, params, delta, batch, rngs, dev_w, maskf):
@@ -339,7 +367,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             if algo.transport == "fused" and not algo.error_feedback:
                 direction = votes.fused_sign_vote(
                     topo, u_dev, delta if fold_dc else None,
-                    algo.rho if fold_dc else 0.0, mask)
+                    algo.rho if fold_dc else 0.0, mask,
+                    specs=bundle.compute_specs)
                 return direction, new_ef, new_mom, losses
             s_dev = jax.tree.map(signs.sgn, u_dev)
             if algo.error_feedback:
@@ -364,26 +393,22 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         new_ef, new_mom = state.ef, state.mom
 
         def descend(direction_tree):
-            dir_buf = flatbuf.flatten_tree(layout,
-                                           gather_leafdims(direction_tree, 1),
-                                           batch_dims=1,
-                                           dtype=params.buf.dtype)
+            dir_buf = flatten_buf(layout, direction_tree, 1,
+                                  params.buf.dtype)
             return params.replace(params.buf - mu * dir_buf)
 
         if algo.method == "hier_sgd":
-            g_buf = flatbuf.flatten_tree(layout, gather_leafdims(g_dev, 2),
-                                         batch_dims=2, dtype=jnp.float32)
+            g_buf = flatten_buf(layout, g_dev, 2, jnp.float32)
             dir_buf = votes.weighted_mean_dev(topo, g_buf, dev_w)
             new_params = params.replace(
                 params.buf - mu * dir_buf.astype(params.buf.dtype))
             return new_params, new_ef, new_mom, losses
         if algo.method == "hier_local_qsgd":
-            # quantize per leaf BEFORE gathering (identical fold_in
+            # quantize per leaf BEFORE flattening (identical fold_in
             # indices AND identical norm-reduction sharding to the tree
             # path), then one whole-buffer weighted mean + update
-            q_buf = flatbuf.flatten_tree(
-                layout, gather_leafdims(quantize_dev(g_dev, rngs), 2),
-                batch_dims=2, dtype=jnp.float32)
+            q_buf = flatten_buf(layout, quantize_dev(g_dev, rngs), 2,
+                                jnp.float32)
             dir_buf = votes.weighted_mean_dev(topo, q_buf, dev_w)
             new_params = params.replace(
                 params.buf - mu * dir_buf.astype(params.buf.dtype))
@@ -392,12 +417,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         # sign methods
         u_dev = g_dev
         if algo.momentum > 0.0:
-            g_buf = flatbuf.flatten_tree(layout, gather_leafdims(g_dev, 2),
-                                         batch_dims=2, dtype=jnp.float32)
+            g_buf = flatten_buf(layout, g_dev, 2, jnp.float32)
             new_mom = state.mom.replace(
                 algo.momentum * state.mom.buf
                 + (1.0 - algo.momentum) * g_buf)
-            u_dev = new_mom.tree(cast=False)
+            u_dev = shardflat.tree_views(topo, new_mom, cast=False)
         if algo.error_feedback:
             # the EF scale is a per-leaf mean: constrain u to the tree
             # path's compute sharding so the reduction order (and hence
@@ -405,12 +429,14 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             u_dev = jax.tree.map(
                 lambda u, e, cs: topo.constrain(
                     u.astype(jnp.float32) + e, topo.dev_spec(*cs)),
-                u_dev, state.ef.tree(cast=False), bundle.compute_specs)
+                u_dev, shardflat.tree_views(topo, state.ef, cast=False),
+                bundle.compute_specs)
         mask = maskf > 0.5
         fold_dc = (algo.transport == "fused" and algo.is_dc
                    and not algo.error_feedback)
         if algo.is_dc and not fold_dc:
-            d_dev = _bcast_pd(topo, delta.tree(cast=False),
+            d_dev = _bcast_pd(topo, shardflat.tree_views(topo, delta,
+                                                         cast=False),
                               bundle.compute_specs, None)
             u_dev = jax.tree.map(
                 lambda u, dl: u + algo.rho * dl.astype(u.dtype),
@@ -427,10 +453,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             return params.replace(new_buf), new_ef, new_mom, losses
         s_dev = jax.tree.map(signs.sgn, u_dev)
         if algo.error_feedback:
-            new_ef = state.ef.replace(flatbuf.flatten_tree(
-                layout,
-                gather_leafdims(ef_residual(u_dev, s_dev), 2),
-                batch_dims=2, dtype=jnp.float32))
+            new_ef = state.ef.replace(flatten_buf(
+                layout, ef_residual(u_dev, s_dev), 2, jnp.float32))
         return descend(vote_direction(s_dev, mask)), new_ef, new_mom, losses
 
     # ---------------- the step ------------------------------------------
@@ -514,19 +538,23 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
 
         params_tree = jax.tree.map(rep, params_single, bundle.master_specs)
         if flat:
-            layout = flatbuf.make_layout(params_tree, batch_dims=1)
-            buf = flatbuf.flatten_tree(layout, gather_leafdims(params_tree, 1),
-                                       batch_dims=1)
+            # on a >1 model axis the buffer is laid out as per-shard
+            # buckets and stays model-sharded for the whole run
+            sharding = (shardflat.model_sharding(topo, bundle.master_specs)
+                        if topo.model_shards > 1 else None)
+            layout = flatbuf.make_layout(params_tree, batch_dims=1,
+                                         sharding=sharding)
+            buf = flatten_buf(layout, params_tree, 1)
             params = flatbuf.FlatState(
-                topo.constrain(buf, topo.pod_spec(None)), layout)
+                topo.constrain(buf, flat_spec(layout)), layout)
             zeros_m = lambda dt: flatbuf.FlatState(
                 topo.constrain(jnp.zeros((p, layout.n_pad), dt),
-                               topo.pod_spec(None)),
+                               flat_spec(layout)),
                 flatbuf.with_dtype(layout, dt))
             d_pp = topo.devices_per_pod
             zeros_pd = lambda dt: flatbuf.FlatState(
                 topo.constrain(jnp.zeros((p, d_pp, layout.n_pad), dt),
-                               topo.dev_spec(None)),
+                               flat_spec(layout, 2)),
                 flatbuf.with_dtype(layout, dt), batch_dims=2)
         else:
             params = params_tree
@@ -584,8 +612,8 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         if tree is None:
             return None
         if isinstance(tree, flatbuf.FlatState):   # [P, n_pad] buffer
-            return jax.tree.map(
-                lambda _: topo.sharding(topo.pod_spec(None)), tree)
+            spec = shardflat.buf_spec(topo, tree.layout, 1)
+            return jax.tree.map(lambda _: topo.sharding(spec), tree)
         return jax.tree.map(
             lambda _, s: topo.sharding(topo.pod_spec(*s)),
             tree, bundle.master_specs)
@@ -594,8 +622,8 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         if tree is None:
             return None
         if isinstance(tree, flatbuf.FlatState):   # [P, D, n_pad] buffer
-            return jax.tree.map(
-                lambda _: topo.sharding(topo.dev_spec(None)), tree)
+            spec = shardflat.buf_spec(topo, tree.layout, 2)
+            return jax.tree.map(lambda _: topo.sharding(spec), tree)
         return jax.tree.map(
             lambda _, s: topo.sharding(topo.dev_spec(*s)),
             tree, bundle.compute_specs)

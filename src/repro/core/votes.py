@@ -17,10 +17,13 @@ transport     wire format     HBM passes per local step    fallback rules
 ``fused``     1 bit/coord,    ONE flat word buffer for     FSDP regime and
               one contiguous  the whole model: per-leaf    per-leaf callers
               word buffer     fused (g + rho*delta) ->     -> ``ag_packed``;
-              (flatbuf        sign -> pack, word-level     off-TPU / multi-
-              layout)         concat (1/32 of the tally),  device mesh ->
-                              ONE data-axis gather, ONE    pure-jnp path
-                              popcount vote + update       (bit-identical)
+              (flatbuf        sign -> pack, word-level     model axis > 1 ->
+              layout)         concat (1/32 of the tally),  shard_map program
+                              ONE data-axis gather, ONE    on per-shard
+                              popcount vote + update       buckets (kernels
+                                                           per rank on TPU);
+                                                           off-TPU -> pure
+                                                           jnp (bit-ident.)
 ``mean`` /    32 bits/coord   full-precision weighted      --
 ``wmean``                     averaging (HierSGD)
 ============  ==============  ===========================  =================
@@ -43,11 +46,16 @@ transport     wire format     HBM passes per local step    fallback rules
     correction fused pre-sign (Alg. 2's device-side step), ONE gather moves
     it, and ONE fused popcount-vote produces the per-pod direction.  On a
     single-device TPU mesh the local compute runs the Pallas kernels
-    (``kernels.sign_pack`` / ``kernels.vote_update``); everywhere else a
-    pure-jnp path with identical arithmetic runs (GSPMD partitions it), so
-    all three sign transports are bit-identical (ties -> +1) by
-    construction.  Requires the replicated regime; model-axis-sharded
-    leaves are gathered implicitly (prefer ``ag_packed`` under heavy TP).
+    (``kernels.sign_pack`` / ``kernels.vote_update``); on a multi-chip
+    mesh with a >1 model axis the whole chain runs as a ``shard_map``
+    program over a *sharded* flatbuf layout (per-model-shard buckets):
+    each rank sign-packs its own bucket (Pallas on TPU), the packed
+    words are all-gathered over ``data`` INSIDE the program -- the only
+    collective -- and each rank votes/updates its local shard, so no
+    whole-leaf gather and no unsharded bit tensor ever exist.
+    Everywhere else a pure-jnp path with identical arithmetic runs
+    (GSPMD partitions it).  All three sign transports are bit-identical
+    (ties -> +1) by construction.  Requires the replicated regime.
 
 State layouts (``AlgoConfig.state_layout``, see ``core.flatbuf``):
 
@@ -60,9 +68,15 @@ State layouts (``AlgoConfig.state_layout``, see ``core.flatbuf``):
     further through :func:`fused_sign_vote_update`: the vote is never
     materialized -- ONE ``vote_update`` read-modify-write per pod applies
     ``v <- v - mu*MajorityVote(packed)`` over the packed-word buffer
-    (in-place when compiled).  Bit-identical in trajectory to ``tree``
-    under every transport (the per-coordinate arithmetic is unchanged;
-    asserted by tests/test_parity_matrix.py).  Replicated regime only.
+    (in-place when compiled).  On meshes with a >1 model axis the
+    buffer uses the SHARDED flatbuf layout (one bucket per model shard)
+    and every buffer<->tree move plus the fused chain itself runs under
+    ``shard_map`` (``core.shardflat`` / :func:`_fused_shard_map`) --
+    the buffer, the packed words and the vote stay model-sharded end to
+    end.  Bit-identical in trajectory to ``tree`` under every transport
+    (the per-coordinate arithmetic is unchanged; asserted by
+    tests/test_parity_matrix.py and the multi-chip
+    tests/helpers/sharded_fused_check.py).  Replicated regime only.
 
 All functions are pure jnp + sharding constraints: they lower to data-axis
 collectives under GSPMD and degenerate to local arithmetic at P=D=1 (which
@@ -72,9 +86,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import flatbuf, signs
+from repro.core import flatbuf, shardflat, signs
 from repro.core.topology import Topology
 from repro.kernels import ops as kops
 
@@ -240,8 +255,101 @@ def _packed_vote(topo, layout, u_dev, delta_tree, rho, mask):
     return _popcount_vote_words(words, mask, n_dev)
 
 
+def _fused_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
+                     delta_tree, delta_buf, rho: float,
+                     mask: jax.Array | None, v_buf: jax.Array | None,
+                     mu, mu_static: float | None):
+    """The multi-chip fused transport: ONE shard_map program per step.
+
+    Per rank (pod p, device d, model shard m): fuse the DC correction
+    pre-sign and pack the rank's own bucket of the sharded flatbuf
+    layout (Pallas ``sign_pack`` on TPU, pure-jnp elsewhere -- same
+    arithmetic as the unsharded path per coordinate), all-gather the
+    packed words over the ``data`` axis -- the only collective in the
+    program, 1 bit/coordinate of the LOCAL shard -- then popcount-vote
+    and (when ``v_buf`` is given) apply ``v <- v - mu*vote`` on the
+    local bucket via the ``vote_update`` read-modify-write.  No leaf is
+    ever gathered over ``model`` and no unsharded bit tensor exists.
+
+    Returns the updated [P, n_pad] buffer when ``v_buf`` is given, else
+    the per-pod vote as a [P, *leaf] int8 pytree (unflattened inside
+    the program; sharded leaves come back model-sharded on their
+    ``shard_dim``, per-bucket copies replicated -- every rank computes
+    the identical vote for them by construction).
+    """
+    bucket = layout.bucket()
+    mode = kops.fused_kernel_mode(topo.mesh.size, shard_mapped=True)
+    use_kernel = mode in ("pallas", "interpret")
+    interpret = mode == "interpret"
+    n_dev = topo.devices_per_pod
+    want_update = v_buf is not None
+    fold_mu = (want_update and use_kernel and mu_static is not None
+               and v_buf.dtype == jnp.float32)
+
+    names = ["u"]
+    args = [u_dev]
+    in_specs = [shardflat.leaf_specs(topo, layout, 2)]
+    if delta_tree is not None and rho:
+        names.append("dt")
+        args.append(delta_tree)
+        in_specs.append(shardflat.leaf_specs(topo, layout, 1))
+    if delta_buf is not None and rho:
+        names.append("db")
+        args.append(delta_buf)
+        in_specs.append(shardflat.buf_spec(topo, layout, 1))
+    if mask is not None:
+        names.append("mask")
+        args.append(mask)
+        in_specs.append(P(topo.pod_axis, None))
+    if want_update:
+        names.append("v")
+        args.append(v_buf)
+        in_specs.append(shardflat.buf_spec(topo, layout, 1))
+        if not fold_mu:
+            names.append("mu")
+            args.append(mu)
+            in_specs.append(P())
+
+    def program(*local):
+        kw = dict(zip(names, local))
+        u_l, dt_l, db_l = kw["u"], kw.get("dt"), kw.get("db")
+        m_l, v_l = kw.get("mask"), kw.get("v")
+        if use_kernel:
+            u2, d2 = _fused_kernel_bufs(bucket, u_l, dt_l, db_l, rho)
+            words = kops.fused_pack_flat(u2, d2, rho, interpret=interpret)
+        else:
+            if db_l is not None:
+                dt_l = flatbuf.unflatten_tree(bucket, db_l, batch_dims=1,
+                                              cast=False)
+            words = flatbuf.pack_tree(bucket, u_l, batch_dims=2,
+                                      delta=dt_l, rho=rho,
+                                      delta_batch_dims=1)
+        # the device->edge uplink: gather the 1-bit payload over 'data'
+        words = jax.lax.all_gather(words, topo.data_axis, axis=1,
+                                   tiled=True)
+        if fold_mu:
+            return kops.fused_vote_update_words(
+                words, v_l, m_l, float(mu_static), interpret=interpret)
+        if use_kernel:
+            vote = kops.fused_vote_update_words(
+                words, None, m_l, -1.0, interpret=interpret
+            ).astype(jnp.int8)
+        else:
+            vote = _popcount_vote_words(words, m_l, n_dev)
+        if want_update:
+            return v_l - kw["mu"] * vote.astype(v_l.dtype)
+        return flatbuf.unflatten_tree(bucket, vote, batch_dims=1,
+                                      cast=False)
+
+    out_specs = (shardflat.buf_spec(topo, layout, 1) if want_update
+                 else shardflat.leaf_specs(topo, layout, 1))
+    fn = shard_map(program, mesh=topo.mesh, in_specs=tuple(in_specs),
+                   out_specs=out_specs, check_rep=False)
+    return fn(*args)
+
+
 def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
-                    mask: jax.Array | None = None):
+                    mask: jax.Array | None = None, specs=None):
     """Whole-model fused sign transport: pytree in, vote pytree out.
 
     u_dev: pytree of [P, D, *leaf] pre-sign directions (gradients after
@@ -255,7 +363,19 @@ def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
     jnp path), one data-axis gather of the packed words, one popcount
     vote.  On a single-device TPU mesh the local sweeps instead run the
     Pallas kernels over the flat f32 view (``kernels.ops``).
+
+    specs: optional per-leaf PartitionSpec pytree (leaf dims).  On a
+    mesh with a >1 model axis this switches to the sharded flatbuf
+    layout + shard_map program (:func:`_fused_shard_map`): TP-sharded
+    leaves stay sharded end to end and the Pallas kernels run per rank.
     """
+    if specs is not None and topo.model_shards > 1:
+        layout = flatbuf.make_layout(
+            u_dev, batch_dims=2,
+            sharding=shardflat.model_sharding(topo, specs))
+        if layout.shards > 1:
+            return _fused_shard_map(topo, layout, u_dev, delta, None, rho,
+                                    mask, None, None, None)
     layout = flatbuf.make_layout(u_dev, batch_dims=2)
     mode = kops.fused_kernel_mode(topo.mesh.size)
     if mode in ("pallas", "interpret"):
@@ -284,7 +404,16 @@ def fused_sign_vote_update(topo: Topology, layout: flatbuf.FlatLayout,
     dispatch).  Votes are bit-identical to :func:`fused_sign_vote` and
     the update arithmetic matches the tree-state per-leaf
     ``v - mu*vote.astype(v.dtype)`` exactly.
+
+    A sharded ``layout`` (``layout.shards > 1``, from
+    ``flatbuf.make_layout(..., sharding=...)``) routes through the
+    shard_map program (:func:`_fused_shard_map`): the buffer stays
+    model-axis sharded for the whole read-modify-write.
     """
+    if layout.shards > 1:
+        new_v = _fused_shard_map(topo, layout, u_dev, None, delta_buf,
+                                 rho, mask, v_buf, mu, mu_static)
+        return topo.constrain(new_v, shardflat.buf_spec(topo, layout, 1))
     mode = kops.fused_kernel_mode(topo.mesh.size)
     if mode in ("pallas", "interpret"):
         u_buf, d_buf = _fused_kernel_bufs(layout, u_dev, None, delta_buf,

@@ -21,7 +21,11 @@ reshape views -- no concatenate, no pad.
 transport; ``fused_vote_update_flat`` (state_layout="flat") additionally
 applies ``v <- v - mu*vote`` inside the single ``vote_update``
 read-modify-write, so the whole-model update is one HBM pass (aliased
-in place when compiled).
+in place when compiled).  Both are compositions of the two halves the
+multi-chip shard_map program calls directly with the data-axis gather
+in between: ``fused_pack_flat`` (device-side sign+pack, pre-gather) and
+``fused_vote_update_words`` (edge-side vote+update on the gathered
+words) -- see ``core.votes``.
 """
 from __future__ import annotations
 
@@ -54,14 +58,18 @@ def _resolve(use_pallas: bool | None, interpret: bool | None):
     return use_pallas, interpret
 
 
-def fused_kernel_mode(mesh_size: int) -> str:
+def fused_kernel_mode(mesh_size: int, shard_mapped: bool = False) -> str:
     """How the fused flat-buffer transport should run its local compute.
 
     Returns ``"pallas"`` (compiled), ``"interpret"`` or ``"jnp"``.  The
-    Pallas kernels are single-device programs, so they only engage when
-    the mesh has one device (single-chip runs / per-host simulation);
-    multi-device GSPMD meshes always take the pure-jnp path, whose
-    collectives partition correctly.  ``REPRO_FUSED_PALLAS`` overrides:
+    Pallas kernels are single-device programs; outside ``shard_map``
+    they only engage when the mesh has one device (single-chip runs /
+    per-host simulation) and multi-device GSPMD meshes take the
+    pure-jnp path, whose collectives partition correctly.  With
+    ``shard_mapped=True`` the caller is building a per-rank shard_map
+    program -- every rank is a single device there, so the compiled
+    kernels engage on TPU at ANY mesh size (this is the multi-chip
+    fused path of ``core.votes``).  ``REPRO_FUSED_PALLAS`` overrides:
     ``off`` forces jnp, ``interpret`` forces interpret-mode Pallas
     (used by tests to exercise the kernel route on CPU).
     """
@@ -70,7 +78,7 @@ def fused_kernel_mode(mesh_size: int) -> str:
         return "jnp"
     if env == "interpret":
         return "interpret"
-    if mesh_size == 1 and on_tpu():
+    if (shard_mapped or mesh_size == 1) and on_tpu():
         return "pallas"
     return "jnp"
 
@@ -174,32 +182,70 @@ def ternary_quant_nd(x: jax.Array, rng: jax.Array, *,
 # Fused flat-buffer transport (local compute of core.votes "fused")
 # ---------------------------------------------------------------------------
 
+def fused_pack_flat(u_buf: jax.Array, d_buf: jax.Array | None,
+                    rho: float, *, interpret: bool) -> jax.Array:
+    """Device-side half of the fused transport: flat floats -> packed words.
+
+    u_buf: [P, D, n_pad] float (n_pad % 4096 == 0, from core.flatbuf);
+    d_buf: [P, n_pad] correction or None (the caller only folds the DC
+    correction here for all-f32 trees -- the kernel adds in f32, which
+    is exact iff the reference arithmetic is f32 too).  Returns the
+    1-bit uplink payload [P, D, n_pad/32] uint32 via ONE ``sign_pack``
+    sweep over all P*D rows (delta re-read per voter through its
+    BlockSpec, never broadcast-copied).  This is the pre-gather half the
+    multi-chip shard_map program runs per rank before the data-axis
+    all-gather of the words (``core.votes``).
+    """
+    p, d, n = u_buf.shape
+    packed, _, _ = _sign_pack_slabs(u_buf, d_buf, rho, interpret)
+    return packed.reshape(p, d, n // PACK)
+
+
+def fused_vote_update_words(words: jax.Array, v_buf: jax.Array | None,
+                            mask: jax.Array | None, mu: float, *,
+                            interpret: bool) -> jax.Array:
+    """Edge-side half: packed voter words -> vote (+ optional update).
+
+    words: [P, D, n_words] uint32 (all D voters' payloads, e.g. after
+    the data-axis gather); v_buf: [P, n_pad] float master buffer, or
+    None to compute a pure vote (v = 0, mu = -1 makes the fused update
+    emit exactly ``MajorityVote``); mask: [P, D] voter mask or None.
+    ONE ``vote_update`` read-modify-write per pod over the whole-model
+    packed-word buffer.
+    """
+    p, d, w = words.shape
+    n = w * PACK
+    block_c = _vu.BLOCK_C
+    rows = n // block_c
+    assert n % block_c == 0, (n, block_c)
+    packed = words.reshape(p, d, rows, block_c // PACK)
+    v2 = None if v_buf is None else v_buf.reshape(p, rows, block_c)
+    zeros = (jnp.zeros((rows, block_c), jnp.float32) if v_buf is None
+             else None)
+    brv = _row_block(rows, _vu.BLOCK_R)
+    out = []
+    for q in range(p):                     # P is small and static
+        m_q = mask[q] if mask is not None else None
+        out.append(_vu.vote_update(packed[q],
+                                   zeros if v2 is None else v2[q],
+                                   m_q, mu=mu, block_r=brv,
+                                   block_c=block_c, interpret=interpret))
+    return jnp.stack(out).reshape(p, n)
+
+
 def fused_sign_vote_flat(u_buf: jax.Array, d_buf: jax.Array | None,
                          rho: float, mask: jax.Array | None, *,
                          interpret: bool) -> jax.Array:
     """Pallas route of the fused transport on a local flat buffer.
 
-    u_buf: [P, D, n_pad] float (n_pad % 4096 == 0, from core.flatbuf);
-    d_buf: [P, n_pad] correction or None (the caller only folds the DC
-    correction here for all-f32 trees -- the kernel adds in f32, which is
-    exact iff the reference arithmetic is f32 too); mask: [P, D] voter
-    mask or None.  Returns the per-pod vote [P, n_pad] int8 via one
-    ``sign_pack`` sweep over all P*D rows (delta re-read per voter
-    through its BlockSpec, never broadcast-copied) and one
-    ``vote_update`` read-modify-write per pod (v = 0, mu = -1 turns the
-    fused update into a pure vote).
+    Composition of :func:`fused_pack_flat` and
+    :func:`fused_vote_update_words` with v = 0, mu = -1 (pure vote).
+    Returns the per-pod vote [P, n_pad] int8.
     """
-    p, d, n = u_buf.shape
-    packed, rows, block_c = _sign_pack_slabs(u_buf, d_buf, rho, interpret)
-    zeros = jnp.zeros((rows, block_c), jnp.float32)
-    brv = _row_block(rows, _vu.BLOCK_R)
-    out = []
-    for q in range(p):                     # P is small and static
-        m_q = mask[q] if mask is not None else None
-        out.append(_vu.vote_update(packed[q], zeros, m_q, mu=-1.0,
-                                   block_r=brv, block_c=block_c,
-                                   interpret=interpret))
-    return jnp.stack(out).astype(jnp.int8).reshape(p, n)
+    words = fused_pack_flat(u_buf, d_buf, rho, interpret=interpret)
+    vote = fused_vote_update_words(words, None, mask, -1.0,
+                                   interpret=interpret)
+    return vote.astype(jnp.int8)
 
 
 def _sign_pack_slabs(u_buf: jax.Array, d_buf: jax.Array | None, rho: float,
@@ -235,13 +281,6 @@ def fused_vote_update_flat(u_buf: jax.Array, d_buf: jax.Array | None,
     """
     p, d, n = u_buf.shape
     assert v_buf.shape == (p, n), (v_buf.shape, (p, n))
-    packed, rows, block_c = _sign_pack_slabs(u_buf, d_buf, rho, interpret)
-    v2 = v_buf.reshape(p, rows, block_c)
-    brv = _row_block(rows, _vu.BLOCK_R)
-    out = []
-    for q in range(p):                     # P is small and static
-        m_q = mask[q] if mask is not None else None
-        out.append(_vu.vote_update(packed[q], v2[q], m_q, mu=mu,
-                                   block_r=brv, block_c=block_c,
-                                   interpret=interpret))
-    return jnp.stack(out).reshape(p, n)
+    words = fused_pack_flat(u_buf, d_buf, rho, interpret=interpret)
+    return fused_vote_update_words(words, v_buf, mask, mu,
+                                   interpret=interpret)

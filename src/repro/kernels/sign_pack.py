@@ -10,6 +10,13 @@ Tiling: the flattened parameter stream is viewed as [R, C] (C a multiple
 of 32*128); each grid step processes an (BR, BC) f32 block (VMEM ~2-4 MB)
 and emits a (BR, BC/32) uint32 block.  Bit j of word w holds the sign of
 coordinate 32*w + j (same wire format as repro.core.signs.pack_signs).
+
+The kernel is a single-device program: on multi-chip meshes it runs
+per-rank inside the fused transport's ``shard_map`` program
+(``core.votes``), where each rank packs its own model-axis bucket of
+the flat buffer (``core.flatbuf`` sharded layouts) and only the packed
+words travel (data-axis all-gather between this kernel and
+``vote_update``).
 """
 from __future__ import annotations
 

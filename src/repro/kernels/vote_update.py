@@ -8,6 +8,12 @@ one HBM pass over the model instead of three (unpack, vote, update).
 
 Tiling: grid over [R/BR, C/BC]; per step the kernel reads a (K, BR, BC/32)
 uint32 slab + a (BR, BC) f32 block of v (VMEM ~2 MB at K=16).
+
+Single-device program: on multi-chip meshes it runs per-rank inside the
+fused transport's ``shard_map`` program (``core.votes``) on the rank's
+model-axis bucket of the flat buffer, consuming the K uplink payloads
+gathered over the data axis -- the vote never sees (and the mesh never
+materializes) an unsharded bit tensor.
 """
 from __future__ import annotations
 

@@ -13,6 +13,13 @@ The paper's hierarchy binds to these axes: ``data`` = devices within an
 edge cluster (1-bit vote tier), ``pod`` = edge servers under the cloud
 (model-average tier).  On a single pod the cloud tier degenerates to Q=1
 (the pod axis is absent and the paper's delta is identically zero).
+
+The ``model`` axis is tensor parallelism, orthogonal to the hierarchy:
+with ``state_layout="flat"`` the flat master buffer is laid out as one
+bucket per model shard (``core.flatbuf`` sharded layouts) and the fused
+transport runs as a shard_map program over this mesh, so the 16-way
+model axis of the production shapes never gathers a leaf -- see
+docs/architecture.md.
 """
 from __future__ import annotations
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hier
+from repro.core import flatbuf, hier, shardflat
 from repro.core.topology import Topology
 from repro.models.build import BuiltModel
 from repro.models.config import LMConfig, ShapeCfg
@@ -74,16 +74,49 @@ def train_state_abstract(built: BuiltModel, topo: Topology,
         state_abs, shardings)
 
 
-def serve_param_shardings(built: BuiltModel, topo: Topology):
+def serve_param_shardings(built: BuiltModel, topo: Topology, params=None):
     """Serve params: compute layout when weights are resident (fit per
     chip in bf16); FSDP master layout (data-sharded, per-layer gathers)
-    otherwise."""
+    otherwise.
+
+    ``params`` may be a ``flatbuf.FlatState`` (a flat-state checkpoint
+    served as-is): the sharding is then for the single buffer leaf --
+    model-axis sharded on its last dim when the layout is sharded,
+    replicated otherwise -- and the per-leaf serve views are taken with
+    :func:`serve_params_from_flat`."""
+    if isinstance(params, flatbuf.FlatState):
+        ax = topo.model_axis if params.layout.shards > 1 else None
+        spec = P(*([None] * params.batch_dims), ax)
+        return jax.tree.map(lambda _: topo.sharding(spec), params)
     specs = (built.bundle.compute_specs
              if built.serve_layout == "resident"
              else built.bundle.master_specs)
     return jax.tree.map(
         lambda _, s: topo.sharding(P(*s)),
         built.abstract_params(), specs)
+
+
+def serve_params_from_flat(built: BuiltModel, topo: Topology,
+                           fs: flatbuf.FlatState, dtype=None):
+    """Flat-state checkpoint -> serve param tree, zero-copy.
+
+    ``fs`` may carry the training state's leading pod dim ([P, n_pad]);
+    serving uses edge model 0 (post-round edge models are equal after
+    cloud aggregation).  The returned tree is slice views of the buffer
+    -- for a sharded layout the views are taken inside shard_map
+    (``shardflat.tree_views``), so sharded leaves come back model-axis
+    sharded and nothing is assembled or gathered.  Cast to ``dtype``
+    only when one is given (the cast is then the only copy).
+    """
+    if fs.batch_dims:
+        fs = flatbuf.FlatState(fs.buf[(0,) * fs.batch_dims], fs.layout,
+                               batch_dims=0)
+    tree = shardflat.tree_views(topo, fs)
+    if dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda v: v.astype(dtype)
+        if jnp.issubdtype(v.dtype, jnp.floating) else v, tree)
 
 
 def serve_params_abstract(built: BuiltModel, topo: Topology,

@@ -3,7 +3,8 @@
 Provides a minimal deterministic fallback for ``hypothesis`` when the real
 package is not installed (hermetic CI images bake in only jax + pytest).
 The stub implements exactly the subset the suite uses -- ``given``,
-``settings`` and the ``integers`` / ``lists`` strategies -- drawing a fixed
+``settings`` and the ``integers`` / ``lists`` / ``sampled_from``
+strategies -- drawing a fixed
 number of pseudo-random examples from a per-test seeded numpy generator
 (boundary values first), so property tests still execute and remain
 reproducible.  When ``hypothesis`` IS importable, it is used unchanged.
@@ -32,6 +33,13 @@ def _install_hypothesis_stub() -> None:
         return _Strategy(
             lambda rng: int(rng.integers(min_value, max_value + 1)),
             boundary=(min_value, max_value),
+        )
+
+    def sampled_from(values):
+        vals = tuple(values)
+        return _Strategy(
+            lambda rng: vals[int(rng.integers(len(vals)))],
+            boundary=vals,
         )
 
     def lists(elements, min_size=0, max_size=10):
@@ -80,6 +88,7 @@ def _install_hypothesis_stub() -> None:
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
     st_mod.lists = lists
+    st_mod.sampled_from = sampled_from
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given

@@ -81,6 +81,18 @@ def _fsdp_loss_master(params, delta, batch, rngs, lift):
     return jnp.sum(losses), losses
 
 
+def make_bundle(regime: str = "replicated") -> hier.ModelBundle:
+    """The toy model's bundle for either regime (shared by the fast
+    suite, the 8-device matrix check and the sharded fused check)."""
+    if regime == "fsdp":
+        return hier.ModelBundle(loss=None, compute_specs=COMPUTE_SPECS,
+                                master_specs=FSDP_MASTER_SPECS,
+                                loss_master=_fsdp_loss_master,
+                                param_mode="fsdp")
+    return hier.ModelBundle(loss=loss_fn, compute_specs=COMPUTE_SPECS,
+                            master_specs=COMPUTE_SPECS)
+
+
 def run_hier(topo: Topology, problem, method, transport="ag_packed",
              state_layout="tree", regime="replicated", mask=None,
              **algo_kw):
@@ -89,15 +101,7 @@ def run_hier(topo: Topology, problem, method, transport="ag_packed",
     used, so callers can cloud-aggregate for oracle comparison."""
     t_e = problem["t_e"]
     algo = _algo(method, transport, state_layout, t_e=t_e, **algo_kw)
-    if regime == "fsdp":
-        bundle = hier.ModelBundle(loss=None, compute_specs=COMPUTE_SPECS,
-                                  master_specs=FSDP_MASTER_SPECS,
-                                  loss_master=_fsdp_loss_master,
-                                  param_mode="fsdp")
-    else:
-        bundle = hier.ModelBundle(loss=loss_fn,
-                                  compute_specs=COMPUTE_SPECS,
-                                  master_specs=COMPUTE_SPECS)
+    bundle = make_bundle(regime)
     init_fn, step = hier.make_hier_step(topo, algo, bundle)
     state = init_fn(problem["w0"], jax.random.PRNGKey(1))
     pods, devs = problem["pods"], problem["devs"]

@@ -1,0 +1,86 @@
+"""Multi-chip fused transport check: 2x2x2 (pod, data, model) host mesh.
+
+The tentpole acceptance cell for the model-axis-sharded flat layout
+(``core.flatbuf`` sharded layouts + the ``core.votes`` shard_map fused
+program):
+
+1. trajectory parity -- ``transport="fused"`` + ``state_layout="flat"``
+   on the model=2 mesh is BITWISE identical to the ``ag_packed`` /
+   tree-layout reference (the jnp oracle), on both the pure-jnp route
+   and the per-rank Pallas kernel route (interpret mode on CPU);
+2. the flat state actually engages the sharded layout
+   (``layout.shards == 2``);
+3. the optimized HLO of the compiled train step contains NO model-axis
+   all-gather (no whole-leaf gather -- asserted via
+   ``benchmarks.hlo_analysis``), and its total all-gather traffic is
+   bounded by the 1-bit packed uplink payload.
+
+Run directly (forces 8 host devices before importing jax):
+    PYTHONPATH=src python tests/helpers/sharded_fused_check.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import pathlib
+import sys
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[2]))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+import parity_harness as H  # noqa: E402
+from benchmarks import hlo_analysis  # noqa: E402
+from repro.core import hier  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+
+Pn, Dn, Mn = 2, 2, 2
+mesh = Mesh(np.array(jax.devices()).reshape(Pn, Dn, Mn),
+            ("pod", "data", "model"))
+topo = Topology(mesh=mesh, pod_axis="pod")
+problem = H.make_problem(Pn, Dn)
+
+# ---- 1a. bitwise trajectory parity, jnp route -------------------------
+ref, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "ag_packed", "tree")
+got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", "flat")
+H.assert_trees_equal(ref, got, "multichip/fused/flat")
+print("multichip fused/flat bitwise parity OK (jnp route)")
+
+# ---- 1b. per-rank Pallas kernels inside shard_map (interpret on CPU) --
+os.environ["REPRO_FUSED_PALLAS"] = "interpret"
+small = H.make_problem(Pn, Dn, rounds=1, t_e=2)
+ref_k, _ = H.run_hier(topo, small, "dc_hier_signsgd", "ag_packed", "tree")
+got_k, _ = H.run_hier(topo, small, "dc_hier_signsgd", "fused", "flat")
+H.assert_trees_equal(ref_k, got_k, "multichip/fused/flat/kernel")
+del os.environ["REPRO_FUSED_PALLAS"]
+print("multichip fused/flat bitwise parity OK (kernel route, interpret)")
+
+# ---- 2 + 3. sharded layout engaged, HLO free of model-axis gathers ----
+algo = H._algo("dc_hier_signsgd", "fused", "flat", t_e=problem["t_e"])
+init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
+state = init_fn(problem["w0"], jax.random.PRNGKey(1))
+layout = state.params.layout
+assert layout.shards == Mn, layout
+assert any(s.shard_dim is not None for s in layout.slots)
+
+ew = jnp.full((Pn,), 1.0 / Pn)
+dw = jnp.full((Pn, Dn), 1.0 / Dn)
+mask = jnp.ones((Pn, Dn))
+batch = {"train": {"x": problem["xs"][0], "y": problem["ys"][0]}}
+txt = jax.jit(step).lower(state, batch, ew, dw, mask).compile().as_text()
+stats = hlo_analysis.analyze_hlo_text(
+    txt, axis_sizes={"pod": Pn, "data": Dn, "model": Mn})
+
+model_ag = hlo_analysis.collective_bytes(stats, op="all-gather",
+                                         axis="model")
+assert model_ag == 0, (
+    f"whole-leaf gather: {model_ag:.0f} all-gather bytes over the model "
+    f"axis in the fused/flat step ({stats['per_axis_op_bytes']})")
+ag_total = hlo_analysis.collective_bytes(stats, op="all-gather")
+payload_bound = 4 * layout.n_words        # the whole 1-bit uplink, uint32
+assert 0 < ag_total <= payload_bound, (ag_total, payload_bound)
+print(f"HLO: zero model-axis all-gather bytes; uplink all-gather "
+      f"{ag_total:.0f} B <= packed payload bound {payload_bound} B")
+print("sharded fused check OK")

@@ -1,0 +1,90 @@
+"""Docs stay true: link integrity + README support matrix consistency.
+
+The README's transport x method x state_layout matrix is the public
+contract; this test pins it to the ACTUAL parametrization of the parity
+suite (``tests/helpers/parity_harness.matrix_cells``), so a cell can
+only be advertised if the bitwise parity tests run it -- and vice
+versa.  CI runs this file in the standalone docs job.
+"""
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
+import parity_harness as H  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_docs_exist():
+    assert (ROOT / "README.md").is_file()
+    assert (ROOT / "docs" / "architecture.md").is_file()
+    assert (ROOT / "docs" / "benchmarks.md").is_file()
+
+
+def test_markdown_links_resolve():
+    """Every relative link in README/ROADMAP/docs points at a real file."""
+    missing = []
+    for doc in DOC_FILES:
+        for target in _LINK.findall(doc.read_text()):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            path = (doc.parent / target.split("#")[0]).resolve()
+            if not path.exists():
+                missing.append(f"{doc.relative_to(ROOT)} -> {target}")
+    assert not missing, f"dangling doc links: {missing}"
+
+
+def _readme_matrix():
+    """Parse the support-matrix table: {method: {column: cell}}."""
+    text = (ROOT / "README.md").read_text()
+    rows = [ln for ln in text.splitlines()
+            if ln.startswith("|") and "`" in ln]
+    header = next(ln for ln in rows if "method" in ln)
+    cols = [c.strip().strip("`") for c in header.strip("|").split("|")]
+    matrix = {}
+    for ln in rows:
+        cells = [c.strip() for c in ln.strip("|").split("|")]
+        m = re.match(r"`(\w+)`", cells[0])
+        if not m or m.group(1) == cols[0]:
+            continue
+        matrix[m.group(1)] = {
+            col: cell.strip("`") for col, cell in zip(cols[1:], cells[1:])}
+    return matrix
+
+
+def test_readme_matrix_matches_parity_parametrization():
+    matrix = _readme_matrix()
+    sign_methods = {m for m, _, _ in H.matrix_cells()
+                    if m in ("hier_signsgd", "dc_hier_signsgd")}
+    for method, transport, layout in H.matrix_cells():
+        assert method in matrix, f"README matrix is missing {method}"
+        row = matrix[method]
+        assert row.get(layout) == "✓", (
+            f"README matrix: {method} must advertise state_layout "
+            f"{layout!r} (tested by test_parity_matrix)")
+        if method in sign_methods:
+            assert row.get(transport) == "✓", (
+                f"README matrix: {method} must advertise transport "
+                f"{transport!r} (tested by test_parity_matrix)")
+        else:
+            assert row.get(transport) == "mean", (
+                f"README matrix: {method} aggregates by weighted mean")
+    # no over-advertising: every ✓ transport cell is in the test matrix
+    tested = {(m, t) for m, t, _ in H.matrix_cells()}
+    for method, row in matrix.items():
+        for transport in H.SIGN_TRANSPORTS:
+            if row.get(transport) == "✓":
+                assert (method, transport) in tested, (
+                    f"README advertises untested cell "
+                    f"{method}/{transport}")
+
+
+def test_readme_tier1_command():
+    """The README's verify command matches ROADMAP's tier-1 gate."""
+    readme = (ROOT / "README.md").read_text()
+    assert "python -m pytest -x -q" in readme

@@ -1,9 +1,11 @@
-"""Flat-buffer bucketization: layout invariants + roundtrip properties."""
+"""Flat-buffer bucketization: layout invariants + roundtrip properties
+(unsharded and model-axis-sharded per-shard-bucket layouts)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
 
 from repro.core import flatbuf, signs
 
@@ -171,6 +173,106 @@ def test_flat_state_pytree_node():
     back = fs.tree()
     for k in tree:
         assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def _shard_specs(tree, batch_dims):
+    """Model axis on every leaf's first post-batch dim (where one
+    exists): divisible dims shard, uneven/zero/scalar leaves must fall
+    back to per-bucket copies."""
+    return {k: (P("model", *([None] * (v.ndim - batch_dims - 1)))
+                if v.ndim > batch_dims else P())
+            for k, v in tree.items()}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 80), min_size=1, max_size=5),
+       st.lists(st.integers(0, 2), min_size=1, max_size=5),
+       st.sampled_from([1, 2, 4]),
+       st.integers(0, 2))
+def test_sharded_roundtrip(sizes, dtype_idxs, shards, batch_dims):
+    """Sharded layouts (shard counts 1/2/4, mixed dtypes, uneven,
+    scalar and zero-size leaves): flatten/unflatten restores every leaf
+    bit-exactly, pack matches pack-of-flat wordwise, and the bucket
+    geometry invariants hold."""
+    batch = (2, 3)[:batch_dims]
+    tree = _edge_tree(sizes, dtype_idxs, batch=batch)
+    specs = _shard_specs(tree, batch_dims)
+    sharding = flatbuf.ModelSharding(shards, "model", specs)
+    lay = flatbuf.make_layout(tree, batch_dims=batch_dims,
+                              sharding=sharding)
+    base = flatbuf.make_layout(tree, batch_dims=batch_dims)
+    assert lay.shards in (1, shards)
+    assert lay.n == base.n                  # copies are not new coords
+    assert lay.n_pad == lay.shards * lay.bucket_pad
+    assert lay.bucket_pad % flatbuf.TILE == 0
+    offset = 0
+    for slot in lay.slots:                  # per-BUCKET placement
+        assert slot.offset == offset
+        assert slot.offset % flatbuf.PACK == 0
+        if slot.shard_dim is not None:
+            g = slot.global_shape(lay.shards)
+            assert g[slot.shard_dim] == slot.shape[slot.shard_dim] * lay.shards
+        offset += slot.padded
+
+    buf = flatbuf.flatten_tree(lay, tree, batch_dims=batch_dims)
+    assert buf.shape == batch + (lay.n_pad,)
+    back = flatbuf.unflatten_tree(lay, buf, batch_dims=batch_dims)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert back[k].shape == tree[k].shape
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    words = flatbuf.pack_tree(lay, tree, batch_dims=batch_dims)
+    expect = signs.pack_signs(signs.sgn(buf))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(1, 60), min_size=2, max_size=4),
+       st.integers(0, 2 ** 31 - 1))
+def test_sharded_copies_and_blocks_land_in_buckets(sizes, seed):
+    """Bucket m holds block m of every sharded leaf and a full copy of
+    every unsharded leaf -- checked against bucket_trees + the bucket()
+    sub-layout, which is what each shard_map rank computes locally."""
+    # _tree_from_sizes gives even sizes shape (n/2, 2): x4 keeps the
+    # sharded dim0 = 2s divisible by 2 for every leaf
+    sizes = [s * 4 for s in sizes]
+    tree = _tree_from_sizes(sizes, seed=seed % 1000)
+    specs = _shard_specs(tree, 0)
+    lay = flatbuf.make_layout(
+        tree, sharding=flatbuf.ModelSharding(2, "model", specs))
+    assert lay.shards == 2
+    buf = flatbuf.flatten_tree(lay, tree)
+    bp = lay.bucket_pad
+    bucket = lay.bucket()
+    for m, local_tree in enumerate(flatbuf.bucket_trees(lay, tree)):
+        local = flatbuf.flatten_tree(bucket, local_tree)
+        np.testing.assert_array_equal(
+            np.asarray(buf[m * bp:(m + 1) * bp]), np.asarray(local))
+
+
+def test_sharding_normalizes_when_nothing_divides():
+    """A sharding under which no leaf divides collapses to shards=1 --
+    callers can pass the mesh sharding unconditionally."""
+    tree = {"a": jnp.zeros((33,)), "s": jnp.zeros(())}
+    lay = flatbuf.make_layout(tree, sharding=flatbuf.ModelSharding(
+        2, "model", _shard_specs(tree, 0)))
+    assert lay.shards == 1
+    assert lay == flatbuf.make_layout(tree)
+
+
+def test_sharded_from_tree_and_with_dtype():
+    tree = _tree_from_sizes([64, 128])
+    fs = flatbuf.from_tree(tree, sharding=flatbuf.ModelSharding(
+        4, "model", _shard_specs(tree, 0)))
+    assert fs.layout.shards == 4
+    relabeled = flatbuf.with_dtype(fs.layout, jnp.bfloat16)
+    assert relabeled.shards == 4
+    assert relabeled.bucket_pad == fs.layout.bucket_pad
+    back = fs.tree()
+    for k in tree:
         np.testing.assert_array_equal(np.asarray(back[k]),
                                       np.asarray(tree[k]))
 

@@ -13,7 +13,11 @@ construction, update arithmetic per-coordinate identical); the paper
 oracle (``ref_fed``) and the FSDP regime agree within float tolerance.
 The multi-device version of the same matrix (2x2x2 mesh, straggler
 masks, EF/momentum) runs in a subprocess -- see
-helpers/parity_matrix_check.py -- and is marked ``slow``.
+helpers/parity_matrix_check.py -- and is marked ``slow``; there the
+flat cells exercise the model-axis-SHARDED layout + shard_map fused
+program, and helpers/sharded_fused_check.py is the dedicated
+multi-chip fused acceptance cell (bitwise parity on both routes plus
+the no-model-axis-gather HLO assert).
 """
 import pathlib
 import subprocess
@@ -104,10 +108,7 @@ def test_matrix_fsdp_regime(topo, problem, refs, method):
 
 
 def test_flat_rejects_fsdp(topo):
-    bundle = hier.ModelBundle(loss=None, compute_specs=H.COMPUTE_SPECS,
-                              master_specs=H.FSDP_MASTER_SPECS,
-                              loss_master=H._fsdp_loss_master,
-                              param_mode="fsdp")
+    bundle = H.make_bundle("fsdp")
     with pytest.raises(ValueError, match="replicated"):
         hier.make_hier_step(topo, hier.AlgoConfig(state_layout="flat"),
                             bundle)
@@ -129,10 +130,7 @@ def _count_vote_updates(topo, problem, layout, monkeypatch):
     monkeypatch.setattr(_vu, "vote_update", counting)
     algo = H._algo("dc_hier_signsgd", "fused", layout,
                    t_e=problem["t_e"])
-    bundle = hier.ModelBundle(loss=H.loss_fn,
-                              compute_specs=H.COMPUTE_SPECS,
-                              master_specs=H.COMPUTE_SPECS)
-    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
     state = init_fn(problem["w0"], jax.random.PRNGKey(1))
     ew = jnp.ones((1,))
     dw = mask = jnp.ones((1, 1))
@@ -166,10 +164,7 @@ def test_state_structure(topo, problem, method, opts, layout):
     only for DC (or FSDP), EF residual only under error_feedback,
     momentum only when momentum > 0 -- in both state layouts."""
     algo = H._algo(method, "ag_packed", layout, **opts)
-    bundle = hier.ModelBundle(loss=H.loss_fn,
-                              compute_specs=H.COMPUTE_SPECS,
-                              master_specs=H.COMPUTE_SPECS)
-    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
     state = init_fn(problem["w0"], jax.random.PRNGKey(0))
     assert (state.delta is not None) == (method == "dc_hier_signsgd")
     assert (state.delta_next is not None) == (method == "dc_hier_signsgd")
@@ -196,15 +191,29 @@ def test_state_structure(topo, problem, method, opts, layout):
             == jax.tree_util.tree_structure(state))
 
 
+def _run_check(script: str, want: str):
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    r = subprocess.run(
+        [sys.executable, str(HELPERS / script)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    assert r.returncode == 0, (
+        f"{script} failed:\nSTDOUT:\n{r.stdout[-4000:]}\n"
+        f"STDERR:\n{r.stderr[-4000:]}")
+    assert want in r.stdout
+
+
 @pytest.mark.slow
 def test_parity_matrix_multidevice():
     """The full matrix on an 8-CPU 2x2x2 mesh: cross-transport /
-    cross-layout bitwise, oracle, straggler masks, EF/momentum, FSDP."""
-    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
-    r = subprocess.run(
-        [sys.executable, str(HELPERS / "parity_matrix_check.py")],
-        capture_output=True, text=True, timeout=1800, env=env)
-    assert r.returncode == 0, (
-        f"parity_matrix_check failed:\nSTDOUT:\n{r.stdout[-4000:]}\n"
-        f"STDERR:\n{r.stderr[-4000:]}")
-    assert "parity matrix OK" in r.stdout
+    cross-layout bitwise, oracle, straggler masks, EF/momentum, FSDP.
+    The flat cells run the model-axis-SHARDED layout there (model=2)."""
+    _run_check("parity_matrix_check.py", "parity matrix OK")
+
+
+@pytest.mark.slow
+def test_fused_multichip_sharded():
+    """The multi-chip fused acceptance cell (8-CPU 2x2x2 mesh): sharded
+    flat layout engaged, bitwise parity on the jnp AND per-rank kernel
+    (interpret) routes, and NO model-axis all-gather in the optimized
+    HLO of the fused/flat train step (benchmarks.hlo_analysis)."""
+    _run_check("sharded_fused_check.py", "sharded fused check OK")
