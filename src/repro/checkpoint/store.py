@@ -15,19 +15,22 @@ together with the driver's retry loop this is the node-failure story
 
 Flat state (``core.flatbuf.FlatState``, used by ``state_layout="flat"``):
 a FlatState node is saved as its single buffer array plus a
-``manifest["flat_state"]`` entry recording the FlatLayout (slot table,
-n/n_pad, buffer dtype, model-shard count and per-slot shard dims).
-Restore converts both ways: a flat checkpoint loads into a tree-state
-``like`` (the buffer is sliced per slot -- sharded slots reassemble
-their per-bucket blocks along ``shard_dim``) and a tree checkpoint
-loads into a flat-state ``like`` (the leaves are assembled into the
-buffer at their slot offsets, block per bucket for sharded slots,
-copies into every bucket otherwise) -- in both directions only the
-real coordinates transfer; tile/tail padding is don't-care.  The slot
-table is validated against the ``like`` layout, so silent structure
-drift raises instead of corrupting; a sharded flat checkpoint restored
-into a differently-sharded flat run goes through the tree form (save
-trees at shard-count boundaries, or restore via a tree ``like``).
+``manifest["flat_state"]`` entry recording the FlatLayout (slot table
+with per-slot LOGICAL global shapes, n/n_pad, buffer dtype, model-shard
+count, per-slot shard dims and uneven ``shard_pad`` tails).  Restore
+converts both ways: a flat checkpoint loads into a tree-state ``like``
+(the buffer is sliced per slot -- sharded slots reassemble their
+per-bucket blocks along ``shard_dim`` and drop the uneven zero tail)
+and a tree checkpoint loads into a flat-state ``like`` (the leaves are
+assembled into the buffer at their slot offsets, zero-padded block per
+bucket for sharded slots, copies into every bucket otherwise) -- in
+both directions only the real coordinates transfer; tile/tail/shard
+padding is don't-care.  The slot table is validated against the
+``like`` layout; when the tables differ but every logical leaf agrees
+(same keys, same global shapes -- e.g. an old copy-style manifest for a
+leaf the padded-shard layout now keeps sharded, or a different shard
+count), restore transparently goes through the tree form.  Anything
+else raises naming the offending leaf and field.
 """
 from __future__ import annotations
 
@@ -87,32 +90,60 @@ def _layout_meta(fs: flatbuf.FlatState) -> dict:
         else "bfloat16",
         "batch_dims": fs.batch_dims,
         "slots": [{"key": key, "shape": list(s.shape),
+                   "global_shape": list(s.global_shape(lay.shards)),
                    "dtype": str(np.dtype(s.dtype))
                    if np.dtype(s.dtype).kind != "V" else "bfloat16",
                    "size": s.size, "padded": s.padded, "offset": s.offset,
-                   "shard_dim": s.shard_dim}
+                   "shard_dim": s.shard_dim, "shard_pad": s.shard_pad}
                   for key, s in zip(_leaf_keys(lay), lay.slots)],
     }
 
 
-def _check_slots(meta: dict, like_fs: flatbuf.FlatState, where: str):
-    """The saved slot table (keys included) must match the target."""
+def _meta_global_shape(slot: dict, shards: int) -> tuple[int, ...]:
+    """LOGICAL leaf shape a saved slot stores (old manifests lack the
+    explicit ``global_shape``/``shard_pad`` fields -- derive it)."""
+    if "global_shape" in slot:
+        return tuple(slot["global_shape"])
+    local = tuple(slot["shape"])
+    sd = slot.get("shard_dim")
+    if sd is None:
+        return local
+    sp = slot.get("shard_pad", 0)
+    return local[:sd] + (local[sd] * shards - sp,) + local[sd + 1:]
+
+
+def _slot_mismatch(meta: dict, like_fs: flatbuf.FlatState) -> str | None:
+    """First difference between the saved slot table and the target's,
+    as an actionable per-leaf message (None when they match exactly)."""
     layout = like_fs.layout
-    ours = [(k, list(s.shape), s.size, s.padded, s.offset, s.shard_dim)
-            for k, s in zip(_leaf_keys(layout), layout.slots)]
-    theirs = [(s["key"], list(s["shape"]), s["size"], s["padded"],
-               s["offset"], s.get("shard_dim")) for s in meta["slots"]]
-    if (ours != theirs or meta["n_pad"] != layout.n_pad
-            or meta.get("shards", 1) != layout.shards
-            or meta["batch_dims"] != like_fs.batch_dims):
-        raise IOError(
-            f"flat-state layout mismatch at {where!r}: checkpoint has "
-            f"{len(theirs)} slots / n_pad={meta['n_pad']} / "
-            f"shards={meta.get('shards', 1)} / "
-            f"batch_dims={meta['batch_dims']}, target expects "
-            f"{len(ours)} slots / n_pad={layout.n_pad} / "
-            f"shards={layout.shards} / "
-            f"batch_dims={like_fs.batch_dims}")
+    if meta.get("shards", 1) != layout.shards:
+        return (f"shards: checkpoint has {meta.get('shards', 1)}, target "
+                f"layout has {layout.shards}")
+    if meta["n_pad"] != layout.n_pad:
+        return (f"n_pad: checkpoint has {meta['n_pad']}, target layout "
+                f"has {layout.n_pad}")
+    if meta["batch_dims"] != like_fs.batch_dims:
+        return (f"batch_dims: checkpoint has {meta['batch_dims']}, "
+                f"target has {like_fs.batch_dims}")
+    if len(meta["slots"]) != len(layout.slots):
+        return (f"slot count: checkpoint has {len(meta['slots'])} leaves, "
+                f"target layout has {len(layout.slots)}")
+    for key, slot, saved in zip(_leaf_keys(layout), layout.slots,
+                                meta["slots"]):
+        if saved["key"] != key:
+            return (f"leaf {key!r}: checkpoint slot at the same position "
+                    f"is keyed {saved['key']!r} (renamed/reordered leaf)")
+        for field, ours, theirs in (
+                ("shape", list(slot.shape), list(saved["shape"])),
+                ("size", slot.size, saved["size"]),
+                ("padded", slot.padded, saved["padded"]),
+                ("offset", slot.offset, saved["offset"]),
+                ("shard_dim", slot.shard_dim, saved.get("shard_dim")),
+                ("shard_pad", slot.shard_pad, saved.get("shard_pad", 0))):
+            if ours != theirs:
+                return (f"leaf {key!r}, field {field!r}: checkpoint has "
+                        f"{theirs!r}, target layout has {ours!r}")
+    return None
 
 
 def _check_batch(arr_shape, like_fs: flatbuf.FlatState, where: str):
@@ -199,13 +230,40 @@ def _verify(path: pathlib.Path) -> bool:
         return False
 
 
-def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
-    """Tree checkpoint -> flat run: pack saved leaves into the buffer.
+def _expand_flat_buf(buf: np.ndarray, meta: dict) -> dict:
+    """Saved flat buffer -> {slot key: LOGICAL leaf array}, per its own
+    manifest metadata: sharded slots reassemble their per-bucket blocks
+    along ``shard_dim`` and drop the uneven ``shard_pad`` zero tail;
+    per-bucket copies collapse to bucket 0 (bit-identical)."""
+    bd = meta["batch_dims"]
+    batch = tuple(buf.shape[:bd])
+    shards = meta.get("shards", 1)
+    bp = meta["n_pad"] // shards
+    out = {}
+    for slot in meta["slots"]:
+        local = tuple(slot["shape"])
+        sd = slot.get("shard_dim")
+        off, size = slot["offset"], slot["size"]
+        if sd is None:
+            out[slot["key"]] = buf[..., off:off + size].reshape(
+                batch + local)
+            continue
+        blocks = [buf[..., m * bp + off:m * bp + off + size
+                      ].reshape(batch + local) for m in range(shards)]
+        full = np.concatenate(blocks, axis=bd + sd)
+        extent = _meta_global_shape(slot, shards)[sd]
+        if full.shape[bd + sd] != extent:      # drop the shard zero tail
+            full = full[(slice(None),) * (bd + sd) + (slice(0, extent),)]
+        out[slot["key"]] = full
+    return out
 
-    Leaves are matched BY KEY (``<key>/<leaf path>`` as the tree save
-    wrote them), so a renamed or restructured leaf raises instead of
-    silently landing in another slot's coordinates.
-    """
+
+def _pack_flat_buf(arrs: dict, like_fs: flatbuf.FlatState,
+                   where: str) -> np.ndarray:
+    """{slot key: LOGICAL leaf array} -> the target layout's buffer:
+    zero-padded block per bucket for sharded slots, copies into every
+    bucket otherwise.  Raises naming the leaf on a missing key or a
+    global-shape mismatch."""
     lay = like_fs.layout
     bd = like_fs.batch_dims
     batch = None
@@ -213,12 +271,12 @@ def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
                 else np.dtype(lay.dtype))
     parts = []
     for rel, slot in zip(_leaf_keys(lay), lay.slots):
-        k = key + SEP + rel
-        if k not in data:
+        k = where + SEP + rel
+        if rel not in arrs:
             raise IOError(
                 f"checkpoint is missing leaf {k!r} for flat-state "
-                f"target {key!r}")
-        arr = data[k]
+                f"target {where!r}")
+        arr = arrs[rel]
         want = slot.global_shape(lay.shards)
         if tuple(arr.shape[bd:]) != want:
             raise IOError(
@@ -236,12 +294,47 @@ def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
             flat = arr.reshape(batch + (slot.size,))
             blocks = [flat] * lay.shards
         else:
+            ax = bd + slot.shard_dim
+            if slot.shard_pad:                 # uneven: zero shard tail
+                pads = [(0, 0)] * arr.ndim
+                pads[ax] = (0, slot.shard_pad)
+                arr = np.pad(np.asarray(arr), pads)
             blocks = [b.reshape(batch + (slot.size,)) for b in np.split(
-                arr, lay.shards, axis=bd + slot.shard_dim)]
+                arr, lay.shards, axis=ax)]
         for m, blk in enumerate(blocks):
             off = m * bp + slot.offset
             buf[..., off:off + slot.size] = blk
     return buf
+
+
+def _assemble_flat(data, key: str, like_fs: flatbuf.FlatState) -> np.ndarray:
+    """Tree checkpoint -> flat run: pack saved leaves into the buffer.
+
+    Leaves are matched BY KEY (``<key>/<leaf path>`` as the tree save
+    wrote them), so a renamed or restructured leaf raises instead of
+    silently landing in another slot's coordinates.
+    """
+    arrs = {rel: data[key + SEP + rel]
+            for rel in _leaf_keys(like_fs.layout)
+            if key + SEP + rel in data}
+    return _pack_flat_buf(arrs, like_fs, key)
+
+
+def _convert_flat(buf, meta: dict, key: str, like_fs: flatbuf.FlatState,
+                  mismatch: str) -> np.ndarray:
+    """Flat checkpoint whose layout differs from the flat target: go
+    through the tree form.  Exact when every logical leaf agrees (same
+    keys / global shapes) -- e.g. an old copy-style manifest restored
+    into the padded-shard layout, or a different shard count; anything
+    else raises with the slot-level mismatch AND the leaf-level cause.
+    """
+    arrs = _expand_flat_buf(np.asarray(buf), meta)
+    try:
+        return _pack_flat_buf(arrs, like_fs, key)
+    except IOError as e:
+        raise IOError(
+            f"flat-state layout mismatch at {key!r} ({mismatch}); "
+            f"tree-form conversion also failed: {e}") from e
 
 
 def _slice_flat(data, manifest: dict, like_keyed) -> dict:
@@ -258,33 +351,15 @@ def _slice_flat(data, manifest: dict, like_keyed) -> dict:
     for q, meta in flat_meta.items():
         if _is_flat(like_keyed.get(q)):
             continue
-        buf = data[q]
-        bd = meta["batch_dims"]
-        batch = buf.shape[:bd]
-        shards = meta.get("shards", 1)
-        bp = meta["n_pad"] // shards
-        for slot in meta["slots"]:
-            k = q + SEP + slot["key"]
-            local = tuple(slot["shape"])
-            sd = slot.get("shard_dim")
-            gshape = (local if sd is None else local[:sd]
-                      + (local[sd] * shards,) + local[sd + 1:])
-            shape = batch + gshape
+        for rel, arr in _expand_flat_buf(data[q], meta).items():
+            k = q + SEP + rel
             leaf = like_keyed.get(k)
             if leaf is not None and tuple(
-                    getattr(leaf, "shape", shape)) != shape:
+                    getattr(leaf, "shape", arr.shape)) != arr.shape:
                 raise IOError(
-                    f"flat-state slot for {k!r} has shape {shape}, "
+                    f"flat-state slot for {k!r} has shape {arr.shape}, "
                     f"target leaf expects {getattr(leaf, 'shape', None)}")
-            off, size = slot["offset"], slot["size"]
-            if sd is None:
-                # copies are bit-identical; bucket 0's is the leaf
-                expanded[k] = buf[..., off:off + size].reshape(shape)
-            else:
-                blocks = [buf[..., m * bp + off:m * bp + off + size
-                              ].reshape(batch + local)
-                          for m in range(shards)]
-                expanded[k] = np.concatenate(blocks, axis=bd + sd)
+            expanded[k] = arr
     return expanded
 
 
@@ -295,7 +370,10 @@ def restore(ckpt_dir: str | pathlib.Path, step: int,
     ``like`` may mix tree- and flat-state (``flatbuf.FlatState``) nodes
     freely with respect to how the checkpoint was saved: flat <-> tree
     conversion happens here, validated against the manifest's FlatLayout
-    metadata.
+    metadata.  A flat checkpoint whose slot table differs from the flat
+    target (old copy-style manifest, different shard count) restores
+    through the tree form when the logical leaves agree; a genuine
+    structure mismatch raises naming the offending leaf and field.
     """
     path = pathlib.Path(ckpt_dir) / f"step_{step:010d}"
     if not _verify(path):
@@ -320,9 +398,13 @@ def restore(ckpt_dir: str | pathlib.Path, step: int,
     for key, leaf in keyed:
         if _is_flat(leaf):
             if key in flat_meta:              # flat -> flat
-                _check_slots(flat_meta[key], leaf, key)
-                arr = data[key]
-                _check_batch(arr.shape, leaf, key)
+                mismatch = _slot_mismatch(flat_meta[key], leaf)
+                if mismatch is None:
+                    arr = data[key]
+                    _check_batch(arr.shape, leaf, key)
+                else:                         # different flat layout:
+                    arr = _convert_flat(      # go through the tree form
+                        data[key], flat_meta[key], key, leaf, mismatch)
             else:                             # tree ckpt -> flat run
                 arr = _assemble_flat(data, key, leaf)
             leaves.append(leaf.replace(put(arr, leaf.buf)))

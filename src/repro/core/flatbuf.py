@@ -46,11 +46,12 @@ one array leaf).  Under ``state_layout="flat"``:
   * leaf views are materialized only at the loss-function boundary and
     at checkpoint/eval edges via :meth:`FlatState.tree`
     (``unflatten_tree`` is pure slice/reshape views);
-  * coordinates beyond each leaf's ``size`` (tail + tile padding) are
-    *don't-care*: the fused vote/update kernel sweeps them along with
-    the real coordinates (their gradient is 0 -> vote +1, so they
-    drift), but no view ever reads them and ``checkpoint.store``
-    round-trips only the real coordinates.
+  * coordinates beyond each leaf's ``size`` (tail + tile padding, and
+    in sharded layouts the ``shard_pad`` zero tail of an uneven leaf's
+    last block) are *don't-care*: the fused vote/update kernel sweeps
+    them along with the real coordinates (their gradient is 0 -> vote
+    +1, so they drift), but no view ever reads them and
+    ``checkpoint.store`` round-trips only the real coordinates.
 
 The layout of a given tree is deterministic (flatten order x the rules
 above), so two runs -- or a tree-state checkpoint and a flat-state run
@@ -63,12 +64,18 @@ Model-axis sharded layouts (per-shard buckets)
 buffer can live sharded along the mesh's model axis end to end -- no
 leaf is ever gathered to build or read the buffer:
 
-  * a leaf whose PartitionSpec names the model axis on a divisible dim
+  * a leaf whose PartitionSpec names the model axis on a nonzero dim
     contributes its *local block* to each bucket (bucket m holds block m
-    of the leaf along ``LeafSlot.shard_dim``);
-  * every other leaf (replicated specs, uneven or zero-size dims) is
-    **copied whole into every bucket** -- each shard votes/updates its
-    own copy from identical inputs, so the copies stay bit-identical by
+    of the leaf along ``LeafSlot.shard_dim``).  Extents that do NOT
+    divide by ``shards`` are padded *inside the layout*: the dim is
+    zero-extended up to ``shards * ceil(extent / shards)``
+    (``LeafSlot.shard_pad`` records the tail), so every bucket still
+    holds one equal block and the leaf stays sharded end to end -- the
+    zero tail is don't-care exactly like tile padding (``sgn(0) = +1``,
+    never read back, never checkpointed);
+  * every other leaf (replicated specs, zero-size dims) is **copied
+    whole into every bucket** -- each shard votes/updates its own copy
+    from identical inputs, so the copies stay bit-identical by
     construction and any one of them is the leaf;
   * slots store *local* (per-bucket) geometry; the buckets share one
     slot table, each bucket is independently 32*128-tile aligned, and
@@ -118,8 +125,11 @@ class LeafSlot:
     For sharded layouts (``FlatLayout.shards > 1``) the geometry is
     LOCAL: ``shape``/``size``/``padded`` describe the per-bucket block
     and ``offset`` is the offset *within* a bucket.  ``shard_dim`` is
-    the leaf dim the model axis divides (global dim = local * shards),
-    or None for a leaf copied whole into every bucket.
+    the leaf dim the model axis shards, or None for a leaf copied whole
+    into every bucket.  ``shard_pad`` is the number of zero-filled rows
+    the layout appends to the GLOBAL extent along ``shard_dim`` so it
+    divides evenly (uneven TP leaves): logical global extent =
+    ``shape[shard_dim] * shards - shard_pad``.
     """
     shape: tuple[int, ...]       # leaf dims (batch dims excluded)
     dtype: Any                   # original leaf dtype (restored on unflatten)
@@ -127,6 +137,8 @@ class LeafSlot:
     padded: int                  # size padded to a PACK multiple
     offset: int                  # coordinate offset; offset % PACK == 0
     shard_dim: int | None = None  # model-sharded leaf dim (sharded layouts)
+    shard_pad: int = 0           # zero tail padding the global shard_dim
+                                 # extent up to a multiple of shards
 
     @property
     def word_offset(self) -> int:
@@ -137,10 +149,17 @@ class LeafSlot:
         return self.padded // PACK
 
     def global_shape(self, shards: int) -> tuple[int, ...]:
+        """The LOGICAL (unpadded) leaf shape this slot stores."""
         if self.shard_dim is None:
             return self.shape
         d = self.shard_dim
-        return self.shape[:d] + (self.shape[d] * shards,) + self.shape[d + 1:]
+        return (self.shape[:d] + (self.shape[d] * shards - self.shard_pad,)
+                + self.shape[d + 1:])
+
+    def global_size(self, shards: int) -> int:
+        """Number of REAL (logical) coordinates this slot stores."""
+        return int(functools.reduce(
+            lambda a, b: a * b, self.global_shape(shards), 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,41 +169,50 @@ class ModelSharding:
     ``specs`` is a pytree of ``jax.sharding.PartitionSpec`` over the
     LEAF dims (batch dims excluded) -- the same trees ``ModelBundle``
     carries as master/compute specs.  A leaf shards on the first dim
-    whose spec entry names ``axis`` and whose extent divides evenly by
-    ``shards``; everything else is copied whole into every bucket.
+    whose spec entry names ``axis`` and has a nonzero extent (uneven
+    extents are zero-padded up to a multiple of ``shards`` inside the
+    layout, see ``LeafSlot.shard_pad``); everything else is copied
+    whole into every bucket.
     """
     shards: int
     axis: str
     specs: Any
 
 
+def _path_key(path) -> str:
+    """'/'-joined leaf path key (same convention as checkpoint.store)."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
 @functools.lru_cache(maxsize=None)
-def _warn_uneven(shape: tuple[int, ...], dim: int, shards: int):
-    # once per (shape, dim, shards): a TP-sharded leaf that cannot
-    # divide degrades to a per-bucket copy -- correct, but the buffer
-    # stores `shards` copies and every shard_map entry re-replicates
-    # the leaf over the model axis (a whole-leaf gather).  Surfacing it
-    # beats silently losing the sharded layout's headline property.
+def _warn_zero_copy(leaf_key: str, shape: tuple[int, ...], dim: int,
+                    shards: int):
+    # keyed on the leaf PATH, not just the shape: two different leaves
+    # of equal shape must each warn, while re-laying the same tree out
+    # (master / delta / EF layouts share geometry) stays deduped.  This
+    # is the ONE remaining per-bucket-copy fallback for a spec'd model
+    # dim -- a zero-size extent carries no data, so nothing is lost,
+    # but the spec is almost certainly a mistake worth surfacing.
     warnings.warn(
-        f"flatbuf sharded layout: leaf shape {shape} is model-sharded on "
-        f"dim {dim} but {shape[dim]} does not divide by {shards} shards; "
-        f"falling back to a per-bucket COPY (replicated over model, "
-        f"gathered at shard_map boundaries).  Pad the dim to a multiple "
-        f"of the model axis to keep it sharded.", stacklevel=3)
+        f"flatbuf sharded layout: leaf {leaf_key!r} (shape {shape}) is "
+        f"model-sharded on zero-size dim {dim}; it carries no data, so "
+        f"it is stored as a per-bucket COPY rather than {shards} padded "
+        f"blocks.", stacklevel=3)
 
 
 def _spec_shard_dim(spec, axis: str, shape: tuple[int, ...],
-                    shards: int) -> int | None:
+                    shards: int, leaf_key: str = "") -> int | None:
     if spec is None:
         return None
     for i, entry in enumerate(spec):
         names = entry if isinstance(entry, tuple) else (entry,)
         if axis in names:
-            if i < len(shape) and shape[i] > 0 and shape[i] % shards == 0:
-                return i
             if i < len(shape) and shape[i] > 0:
-                _warn_uneven(shape, i, shards)
-            return None          # uneven / zero dim -> per-bucket copy
+                return i         # uneven extents shard too: padded blocks
+            if i < len(shape):
+                _warn_zero_copy(leaf_key, shape, i, shards)
+            return None          # zero-size dim -> per-bucket copy
     return None
 
 
@@ -294,11 +322,14 @@ def make_layout(tree: PyTree, batch_dims: int = 0, tile: int = TILE,
     ``[P, D, *leaf]`` per-device gradients) that stay un-flattened.
 
     sharding: lay the tree out as per-model-shard buckets (see the
-    module docstring).  A sharding under which no leaf actually divides
-    normalizes back to the unsharded (shards=1) layout, so callers can
-    pass the mesh sharding unconditionally.
+    module docstring).  Uneven extents shard as padded blocks, so a
+    sharding normalizes back to the unsharded (shards=1) layout only
+    when NO leaf spec names the model axis on a nonzero dim -- callers
+    can pass the mesh sharding unconditionally.
     """
-    leaves, treedef = jax.tree.flatten(tree)
+    keyed, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [leaf for _, leaf in keyed]
+    leaf_keys = [_path_key(p) for p, _ in keyed]
     if not leaves:
         raise ValueError("cannot lay out an empty pytree")
     shards = sharding.shards if sharding is not None else 1
@@ -324,26 +355,76 @@ def make_layout(tree: PyTree, batch_dims: int = 0, tile: int = TILE,
     slots = []
     offset = 0
     dtype = None
-    for leaf, spec in zip(leaves, spec_leaves):
+    for leaf, spec, key in zip(leaves, spec_leaves, leaf_keys):
         shape = tuple(leaf.shape[batch_dims:])
-        sd = (_spec_shard_dim(spec, sharding.axis, shape, shards)
+        sd = (_spec_shard_dim(spec, sharding.axis, shape, shards, key)
               if shards > 1 else None)
+        sp = 0
         if sd is not None:
-            shape = (shape[:sd] + (shape[sd] // shards,) + shape[sd + 1:])
+            # pad the sharded extent up to the next multiple of shards
+            # so every bucket holds one equal local block (zero tail =
+            # don't-care coordinates, same convention as tile padding)
+            blk = -(-shape[sd] // shards)
+            sp = blk * shards - shape[sd]
+            shape = shape[:sd] + (blk,) + shape[sd + 1:]
         size = int(functools.reduce(lambda a, b: a * b, shape, 1))
         padded = _ceil_to(max(size, 1), PACK)
         slots.append(LeafSlot(shape=shape, dtype=leaf.dtype, size=size,
-                              padded=padded, offset=offset, shard_dim=sd))
+                              padded=padded, offset=offset, shard_dim=sd,
+                              shard_pad=sp))
         offset += padded
         dtype = (leaf.dtype if dtype is None
                  else jnp.promote_types(dtype, leaf.dtype))
     if shards > 1 and all(s.shard_dim is None for s in slots):
-        shards = 1               # nothing divides: don't pay M-way copies
-    n = sum(s.size * (shards if s.shard_dim is not None else 1)
+        shards = 1               # nothing shards: don't pay M-way copies
+    n = sum(s.global_size(shards) if s.shard_dim is not None else s.size
             for s in slots)
     return FlatLayout(treedef=treedef, slots=tuple(slots), n=n,
                       n_pad=shards * _ceil_to(offset, tile),
                       dtype=jnp.dtype(dtype), shards=shards)
+
+
+def _pad_shard_tail(slot: LeafSlot, leaf: jax.Array, batch_dims: int):
+    """Zero-extend an uneven sharded leaf's shard_dim to blk * shards.
+
+    Zero fill keeps the tail don't-care under the padding convention
+    (``sgn(0) = +1``); no view ever reads it back.
+    """
+    if slot.shard_dim is None or not slot.shard_pad:
+        return leaf
+    pads = [(0, 0)] * leaf.ndim
+    pads[batch_dims + slot.shard_dim] = (0, slot.shard_pad)
+    return jnp.pad(leaf, pads)
+
+
+def pad_tree(layout: FlatLayout, tree: PyTree,
+             batch_dims: int = 0) -> PyTree:
+    """Logical tree -> the layout's padded-shard shapes (zero tails).
+
+    Every uneven sharded leaf gains ``shard_pad`` zero rows along its
+    ``shard_dim`` so each leaf dim divides evenly by ``layout.shards``
+    -- the shapes a ``shard_map`` program (``core.shardflat``) needs at
+    its boundary.  Identity for even/copy slots and unsharded layouts.
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    return layout.treedef.unflatten(
+        [_pad_shard_tail(s, leaf, batch_dims)
+         for s, leaf in zip(layout.slots, leaves)])
+
+
+def unpad_tree(layout: FlatLayout, tree: PyTree,
+               batch_dims: int = 0) -> PyTree:
+    """Inverse of :func:`pad_tree`: slice each leaf back to its logical
+    extent (drops the don't-care zero tail; pure static slices)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    out = []
+    for slot, leaf in zip(layout.slots, leaves):
+        if slot.shard_dim is not None and slot.shard_pad:
+            ax = batch_dims + slot.shard_dim
+            leaf = jax.lax.slice_in_dim(
+                leaf, 0, leaf.shape[ax] - slot.shard_pad, axis=ax)
+        out.append(leaf)
+    return layout.treedef.unflatten(out)
 
 
 def bucket_trees(layout: FlatLayout, tree: PyTree,
@@ -351,10 +432,13 @@ def bucket_trees(layout: FlatLayout, tree: PyTree,
     """Per-bucket local trees of a sharded layout (static slices).
 
     Bucket m's tree holds block m of every sharded leaf (along its
-    ``shard_dim``) and the full leaf for per-bucket copies -- exactly
-    what rank m of a shard_map program sees locally.
+    ``shard_dim``, zero-padded tail for uneven extents) and the full
+    leaf for per-bucket copies -- exactly what rank m of a shard_map
+    program sees locally.
     """
-    leaves = layout.treedef.flatten_up_to(tree)
+    leaves = [_pad_shard_tail(s, leaf, batch_dims)
+              for s, leaf in zip(layout.slots,
+                                 layout.treedef.flatten_up_to(tree))]
     out = []
     for m in range(layout.shards):
         parts = []
@@ -411,8 +495,9 @@ def unflatten_tree(layout: FlatLayout, buf: jax.Array, batch_dims: int = 0,
     promotions); cast=False keeps ``buf.dtype`` (e.g. int8 vote bits).
 
     Sharded layouts reassemble each sharded leaf by concatenating its
-    per-bucket blocks along ``shard_dim``; per-bucket copies read
-    bucket 0 (all copies are bit-identical by construction).
+    per-bucket blocks along ``shard_dim`` (then dropping the uneven
+    ``shard_pad`` zero tail); per-bucket copies read bucket 0 (all
+    copies are bit-identical by construction).
     """
     if layout.shards > 1:
         bucket = layout.bucket()
@@ -427,9 +512,12 @@ def unflatten_tree(layout: FlatLayout, buf: jax.Array, batch_dims: int = 0,
             if slot.shard_dim is None:
                 leaves.append(parts[0][i])
             else:
-                leaves.append(jnp.concatenate(
-                    [p[i] for p in parts],
-                    axis=batch_dims + slot.shard_dim))
+                ax = batch_dims + slot.shard_dim
+                full = jnp.concatenate([p[i] for p in parts], axis=ax)
+                if slot.shard_pad:
+                    full = jax.lax.slice_in_dim(
+                        full, 0, full.shape[ax] - slot.shard_pad, axis=ax)
+                leaves.append(full)
         return layout.treedef.unflatten(leaves)
     batch = buf.shape[:batch_dims]
     leaves = []

@@ -41,8 +41,12 @@ whole-model update is then one elementwise sweep, and under
 mesh with a >1 model axis the flat buffer uses the *sharded* layout
 (per-model-shard buckets) and every tree<->buffer move runs as a
 ``shard_map`` program (``core.shardflat``), so TP-sharded leaves are
-never gathered -- the buffer lives model-axis sharded end to end.  Both
-layouts are bit-identical in trajectory (tests/test_parity_matrix.py).
+never gathered -- the buffer lives model-axis sharded end to end, and
+uneven extents (a model-sharded dim that does not divide the axis)
+stay sharded too via the layout's padded blocks (``flatbuf`` padded-
+shard rule; the zero tail is don't-care).  Both layouts are
+bit-identical in trajectory (tests/test_parity_matrix.py, including
+the uneven-leaf cell of the 8-device tier).
 """
 from __future__ import annotations
 

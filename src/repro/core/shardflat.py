@@ -20,6 +20,16 @@ with the bucket geometry):
     holds the identical copy; ``check_rep=False`` because shard_map
     cannot prove the replication invariant the layout guarantees)
 
+Uneven sharded leaves (``slot.shard_pad > 0``) cross the shard_map
+boundary in their PADDED shape -- shard_map requires every sharded dim
+to divide the mesh axis, so trees are zero-extended via
+``flatbuf.pad_tree`` on the way in and sliced back to the logical
+extent via ``flatbuf.unpad_tree`` on the way out.  Both are
+shard-boundary-aligned pad/slice ops (GSPMD's physical layout for an
+unevenly sharded dim IS the ceil-padded form), so they lower without
+model-axis communication; the zero tail is don't-care exactly like
+tile padding.
+
 ``check_rep=False`` is safe here by construction: copies are only ever
 written from model-replicated inputs through deterministic elementwise
 programs, so they remain bit-identical on every rank.
@@ -92,6 +102,7 @@ def flatten(topo: Topology, layout: flatbuf.FlatLayout, tree: PyTree,
         return flatbuf.flatten_tree(bucket, local_tree,
                                     batch_dims=batch_dims, dtype=dtype)
 
+    tree = flatbuf.pad_tree(layout, tree, batch_dims)
     return _smap(topo, prog, (leaf_specs(topo, layout, batch_dims),),
                  buf_spec(topo, layout, batch_dims))(tree)
 
@@ -113,5 +124,6 @@ def tree_views(topo: Topology, fs: flatbuf.FlatState,
         return flatbuf.unflatten_tree(bucket, local_buf,
                                       batch_dims=batch_dims, cast=cast)
 
-    return _smap(topo, prog, (buf_spec(topo, layout, batch_dims),),
-                 leaf_specs(topo, layout, batch_dims))(fs.buf)
+    out = _smap(topo, prog, (buf_spec(topo, layout, batch_dims),),
+                leaf_specs(topo, layout, batch_dims))(fs.buf)
+    return flatbuf.unpad_tree(layout, out, batch_dims)

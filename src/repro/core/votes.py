@@ -276,8 +276,17 @@ def _fused_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
     the program; sharded leaves come back model-sharded on their
     ``shard_dim``, per-bucket copies replicated -- every rank computes
     the identical vote for them by construction).
+
+    Uneven sharded leaves enter and leave the program in their padded
+    shapes (``flatbuf.pad_tree`` / ``unpad_tree``): the zero tail packs
+    to +1 sign bits -- the standard don't-care padding -- and is sliced
+    off any returned vote tree, so callers only ever see logical
+    extents.
     """
     bucket = layout.bucket()
+    u_dev = flatbuf.pad_tree(layout, u_dev, 2)
+    if delta_tree is not None:
+        delta_tree = flatbuf.pad_tree(layout, delta_tree, 1)
     mode = kops.fused_kernel_mode(topo.mesh.size, shard_mapped=True)
     use_kernel = mode in ("pallas", "interpret")
     interpret = mode == "interpret"
@@ -345,7 +354,10 @@ def _fused_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
                  else shardflat.leaf_specs(topo, layout, 1))
     fn = shard_map(program, mesh=topo.mesh, in_specs=tuple(in_specs),
                    out_specs=out_specs, check_rep=False)
-    return fn(*args)
+    out = fn(*args)
+    if want_update:
+        return out
+    return flatbuf.unpad_tree(layout, out, 1)
 
 
 def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,

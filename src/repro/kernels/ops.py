@@ -26,6 +26,15 @@ multi-chip shard_map program calls directly with the data-axis gather
 in between: ``fused_pack_flat`` (device-side sign+pack, pre-gather) and
 ``fused_vote_update_words`` (edge-side vote+update on the gathered
 words) -- see ``core.votes``.
+
+Padding contract: the flat views these wrappers sweep may contain
+don't-care coordinates BETWEEN real leaves, not just at the buffer
+tail -- slot tail padding and, in per-rank bucket buffers of a sharded
+layout, the zero shard tail of an uneven TP leaf's last block
+(``flatbuf.LeafSlot.shard_pad``).  All of them are zero floats, so the
+kernels see ``sgn(0) = +1`` and update them like any coordinate; no
+view ever reads them back, which is what makes the whole-buffer sweep
+legal without per-leaf masks.
 """
 from __future__ import annotations
 

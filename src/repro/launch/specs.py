@@ -105,8 +105,10 @@ def serve_params_from_flat(built: BuiltModel, topo: Topology,
     cloud aggregation).  The returned tree is slice views of the buffer
     -- for a sharded layout the views are taken inside shard_map
     (``shardflat.tree_views``), so sharded leaves come back model-axis
-    sharded and nothing is assembled or gathered.  Cast to ``dtype``
-    only when one is given (the cast is then the only copy).
+    sharded and nothing is assembled or gathered; uneven (padded-shard)
+    leaves are sliced to their LOGICAL extent, the don't-care zero tail
+    never reaches the served tree.  Cast to ``dtype`` only when one is
+    given (the cast is then the only copy).
     """
     if fs.batch_dims:
         fs = flatbuf.FlatState(fs.buf[(0,) * fs.batch_dims], fs.layout,

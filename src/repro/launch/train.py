@@ -52,7 +52,10 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
     jstep = jax.jit(step_fn, donate_argnums=(0,))
 
     params = built.init_params(jax.random.PRNGKey(run.seed))
-    state = init_fn(params, jax.random.PRNGKey(run.seed + 1))
+    # init under jit: masters constrained to uneven model-sharded specs
+    # (odd vocab/head extents on a TP mesh) only exist as jit-produced
+    # arrays -- eager placement of uneven shardings is unsupported
+    state = jax.jit(init_fn)(params, jax.random.PRNGKey(run.seed + 1))
 
     stream = synthetic.make_stream(synthetic.LMStreamCfg(
         vocab=cfg.vocab, seq_len=run.seq_len,

@@ -16,6 +16,13 @@ and per-pod heterogeneous targets (so the DC correction has something
 to correct).  All runners consume identical batches, seeds and masks;
 sign transports and state layouts must agree BITWISE, the oracle and
 the FSDP regime within float tolerance.
+
+``make_problem(..., hid=...)`` widens the matrix: an ODD hidden dim
+(``UNEVEN_HID``) makes both weight matrices model-shard unevenly under
+the canonical Megatron specs (w column-parallel, w2 row-parallel), so
+the sharded flat layout must engage its padded-shard blocks
+(``LeafSlot.shard_pad``) -- the uneven-TP-leaf parity cell of
+``sharded_fused_check.py`` / ``parity_matrix_check.py``.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ from repro.core import hier, ref_fed
 from repro.core.topology import Topology
 
 DIN, HID, DOUT = 16, 64, 33
+UNEVEN_HID = 65       # odd: w/w2 model-shard unevenly (padded blocks)
 
 
 def loss_fn(params, batch, rng):
@@ -43,13 +51,13 @@ FSDP_MASTER_SPECS = {"w": P("data", "model"), "b": P(None),
 
 
 def make_problem(pods: int, devs: int, rounds: int = 3, t_e: int = 3,
-                 batch: int = 8, seed: int = 0):
+                 batch: int = 8, seed: int = 0, hid: int = HID):
     """Deterministic batches [S, P, D, B, .] with per-pod targets."""
     key = jax.random.PRNGKey(seed)
-    w0 = {"w": jax.random.normal(key, (DIN, HID)) * 0.3,
+    w0 = {"w": jax.random.normal(key, (DIN, hid)) * 0.3,
           "b": jnp.zeros((DOUT,)),
           "w2": jax.random.normal(jax.random.fold_in(key, 1),
-                                  (HID, DOUT)) * 0.3}
+                                  (hid, DOUT)) * 0.3}
     steps = rounds * t_e
     xs = jax.random.normal(jax.random.PRNGKey(seed + 7),
                            (steps, pods, devs, batch, DIN))
@@ -103,7 +111,10 @@ def run_hier(topo: Topology, problem, method, transport="ag_packed",
     algo = _algo(method, transport, state_layout, t_e=t_e, **algo_kw)
     bundle = make_bundle(regime)
     init_fn, step = hier.make_hier_step(topo, algo, bundle)
-    state = init_fn(problem["w0"], jax.random.PRNGKey(1))
+    # init under jit: uneven model-sharded leaves (odd hid) only exist
+    # as jit-produced arrays -- eager placement of uneven shardings is
+    # unsupported -- and jit changes nothing for the even cells
+    state = jax.jit(init_fn)(problem["w0"], jax.random.PRNGKey(1))
     pods, devs = problem["pods"], problem["devs"]
     ew = jnp.full((pods,), 1.0 / pods)
     dw = jnp.full((pods, devs), 1.0 / devs)

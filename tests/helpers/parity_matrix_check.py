@@ -72,6 +72,21 @@ for kw in ({"error_feedback": True}, {"momentum": 0.9}):
                 ref, got, f"{kw}/{transport}/{layout}")
     print(f"dc_hier_signsgd  {kw} parity OK")
 
+# ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
+# both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
+# cells run the padded-block layout (LeafSlot.shard_pad) and must stay
+# bitwise identical to the tree-state reference on the same trajectory
+uneven = H.make_problem(Pn, Dn, hid=H.UNEVEN_HID)
+ref_u = None
+for transport in H.SIGN_TRANSPORTS:
+    for layout in H.LAYOUTS:
+        got, _ = H.run_hier(topo, uneven, "dc_hier_signsgd", transport,
+                            layout)
+        ref_u = got if ref_u is None else ref_u
+        H.assert_trees_equal(ref_u, got,
+                             f"uneven/{transport}/{layout}")
+print("dc_hier_signsgd  uneven-TP-leaf parity OK (padded shards)")
+
 # ---- FSDP regime (tree layout) vs replicated --------------------------
 for method in ("hier_signsgd", "dc_hier_signsgd", "hier_sgd"):
     got, _ = H.run_hier(topo, problem, method, regime="fsdp")

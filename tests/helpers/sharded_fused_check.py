@@ -11,9 +11,16 @@ program):
 2. the flat state actually engages the sharded layout
    (``layout.shards == 2``);
 3. the optimized HLO of the compiled train step contains NO model-axis
-   all-gather (no whole-leaf gather -- asserted via
-   ``benchmarks.hlo_analysis``), and its total all-gather traffic is
-   bounded by the 1-bit packed uplink payload.
+   all-gather (no whole-leaf gather -- asserted STRICTLY via
+   ``benchmarks.hlo_analysis.assert_axis_free``, so unattributed
+   collectives fail the check instead of hiding in it), and its total
+   all-gather traffic is bounded by the 1-bit packed uplink payload;
+4. the UNEVEN TP leaf cell: an odd hidden dim (65 % 2 != 0) makes both
+   weight matrices shard as padded blocks (``LeafSlot.shard_pad``) --
+   the layout must stay ``shards == 2`` with ``shard_dim`` set (NO
+   per-bucket copy), trajectories must stay bitwise vs the tree-state
+   reference, and the optimized HLO must still carry zero model-axis
+   all-gather bytes.
 
 Run directly (forces 8 host devices before importing jax):
     PYTHONPATH=src python tests/helpers/sharded_fused_check.py
@@ -58,29 +65,62 @@ del os.environ["REPRO_FUSED_PALLAS"]
 print("multichip fused/flat bitwise parity OK (kernel route, interpret)")
 
 # ---- 2 + 3. sharded layout engaged, HLO free of model-axis gathers ----
-algo = H._algo("dc_hier_signsgd", "fused", "flat", t_e=problem["t_e"])
-init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
-state = init_fn(problem["w0"], jax.random.PRNGKey(1))
+def _compiled_step_stats(prob, bundle):
+    """(state, HLO stats) of the compiled fused/flat train step."""
+    algo = H._algo("dc_hier_signsgd", "fused", "flat", t_e=prob["t_e"])
+    init_fn, step = hier.make_hier_step(topo, algo, bundle)
+    state = jax.jit(init_fn)(prob["w0"], jax.random.PRNGKey(1))
+    ew = jnp.full((Pn,), 1.0 / Pn)
+    dw = jnp.full((Pn, Dn), 1.0 / Dn)
+    mask = jnp.ones((Pn, Dn))
+    batch = {"train": {"x": prob["xs"][0], "y": prob["ys"][0]}}
+    txt = jax.jit(step).lower(state, batch, ew, dw,
+                              mask).compile().as_text()
+    return state, hlo_analysis.analyze_hlo_text(
+        txt, axis_sizes={"pod": Pn, "data": Dn, "model": Mn})
+
+
+state, stats = _compiled_step_stats(problem, H.make_bundle())
 layout = state.params.layout
 assert layout.shards == Mn, layout
 assert any(s.shard_dim is not None for s in layout.slots)
 
-ew = jnp.full((Pn,), 1.0 / Pn)
-dw = jnp.full((Pn, Dn), 1.0 / Dn)
-mask = jnp.ones((Pn, Dn))
-batch = {"train": {"x": problem["xs"][0], "y": problem["ys"][0]}}
-txt = jax.jit(step).lower(state, batch, ew, dw, mask).compile().as_text()
-stats = hlo_analysis.analyze_hlo_text(
-    txt, axis_sizes={"pod": Pn, "data": Dn, "model": Mn})
-
-model_ag = hlo_analysis.collective_bytes(stats, op="all-gather",
-                                         axis="model")
-assert model_ag == 0, (
-    f"whole-leaf gather: {model_ag:.0f} all-gather bytes over the model "
-    f"axis in the fused/flat step ({stats['per_axis_op_bytes']})")
+hlo_analysis.assert_axis_free(stats, op="all-gather", axis="model")
 ag_total = hlo_analysis.collective_bytes(stats, op="all-gather")
 payload_bound = 4 * layout.n_words        # the whole 1-bit uplink, uint32
 assert 0 < ag_total <= payload_bound, (ag_total, payload_bound)
 print(f"HLO: zero model-axis all-gather bytes; uplink all-gather "
       f"{ag_total:.0f} B <= packed payload bound {payload_bound} B")
+
+# ---- 4. uneven TP leaves stay SHARDED as padded blocks ----------------
+uneven = H.make_problem(Pn, Dn, hid=H.UNEVEN_HID)
+ref_u, _ = H.run_hier(topo, uneven, "dc_hier_signsgd", "ag_packed",
+                      "tree")
+got_u, _ = H.run_hier(topo, uneven, "dc_hier_signsgd", "fused", "flat")
+H.assert_trees_equal(ref_u, got_u, "multichip/fused/flat/uneven")
+print("uneven TP leaf bitwise parity OK (jnp route)")
+
+# the per-rank kernel route must sweep the uneven last block's zero
+# shard tail under the don't-care contract (kernels/ops.py) -- rerun
+# the cell through interpret-mode Pallas like the even cell above
+os.environ["REPRO_FUSED_PALLAS"] = "interpret"
+small_u = H.make_problem(Pn, Dn, rounds=1, t_e=2, hid=H.UNEVEN_HID)
+ref_uk, _ = H.run_hier(topo, small_u, "dc_hier_signsgd", "ag_packed",
+                       "tree")
+got_uk, _ = H.run_hier(topo, small_u, "dc_hier_signsgd", "fused", "flat")
+H.assert_trees_equal(ref_uk, got_uk, "multichip/fused/flat/uneven/kernel")
+del os.environ["REPRO_FUSED_PALLAS"]
+print("uneven TP leaf bitwise parity OK (kernel route, interpret)")
+
+state_u, stats_u = _compiled_step_stats(uneven, H.make_bundle())
+lay_u = state_u.params.layout
+assert lay_u.shards == Mn, lay_u
+padded = [s for s in lay_u.slots if s.shard_pad > 0]
+assert len(padded) == 2, lay_u.slots      # w (65%2) and w2 (65%2)
+assert all(s.shard_dim is not None for s in padded)
+hlo_analysis.assert_axis_free(stats_u, op="all-gather", axis="model")
+ag_u = hlo_analysis.collective_bytes(stats_u, op="all-gather")
+assert 0 < ag_u <= 4 * lay_u.n_words, (ag_u, 4 * lay_u.n_words)
+print(f"uneven HLO: zero model-axis all-gather bytes; uplink "
+      f"{ag_u:.0f} B <= packed payload bound {4 * lay_u.n_words} B")
 print("sharded fused check OK")

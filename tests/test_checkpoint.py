@@ -149,7 +149,8 @@ def test_sharded_flat_conversions(tmp_path):
     """Model-axis-sharded layouts round-trip flat<->flat and convert to
     and from tree checkpoints bit-exactly (blocks reassembled along
     shard_dim, per-bucket copies collapsed); restoring a sharded flat
-    checkpoint into a differently-sharded flat run raises loudly."""
+    checkpoint into a DIFFERENTLY-sharded flat run goes through the
+    tree form transparently (logical leaves agree)."""
     t, leaves = _sharded_flat_tree(7)
     path = store.save(tmp_path / "a", 1, t)
     meta = json.loads((path / "manifest.json").read_text())
@@ -167,9 +168,99 @@ def test_sharded_flat_conversions(tmp_path):
     as_flat = store.restore(tmp_path / "b", 2, t)       # tree -> flat
     np.testing.assert_array_equal(np.asarray(as_flat["params"].buf),
                                   np.asarray(t["params"].buf))
+    # sharded ckpt -> UNSHARDED flat run: tree-form conversion, exact
     unsharded = flatbuf.from_tree(leaves, batch_dims=1)
-    with pytest.raises(IOError, match="layout mismatch"):
-        store.restore(tmp_path / "a", 1, dict(t, params=unsharded))
+    re_un = store.restore(tmp_path / "a", 1, dict(t, params=unsharded))
+    for a, b in zip(jax.tree.leaves(re_un["params"].tree()),
+                    jax.tree.leaves(leaves)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _uneven_sharded_flat_tree(seed=0, shards=2):
+    """FlatState with an UNEVEN model-sharded leaf (33 % 2 != 0): the
+    padded-shard layout stores it as zero-tailed blocks."""
+    from jax.sharding import PartitionSpec as P
+    k = jax.random.PRNGKey(seed)
+    leaves = {"w": jax.random.normal(k, (2, 4, 8)),
+              "b": jax.random.normal(jax.random.fold_in(k, 1), (2, 33))}
+    specs = {"w": P(None, "model"), "b": P("model")}
+    fs = flatbuf.from_tree(
+        leaves, batch_dims=1,
+        sharding=flatbuf.ModelSharding(shards, "model", specs))
+    assert fs.layout.shards == shards
+    b_slot = fs.layout.slots[0]              # canonical order: b first
+    assert (b_slot.shard_dim, b_slot.shard_pad) == (0, 1)
+    return {"params": fs, "step": jnp.asarray(seed, jnp.int32)}, leaves
+
+
+def test_uneven_sharded_flat_roundtrip(tmp_path):
+    """An uneven sharded FlatState round-trips flat<->flat bit-exactly,
+    converts to and from tree checkpoints exactly (the shard zero tail
+    never transfers), and the manifest records the LOGICAL global
+    shape."""
+    t, leaves = _uneven_sharded_flat_tree(3)
+    path = store.save(tmp_path / "a", 1, t)
+    meta = json.loads((path / "manifest.json").read_text())
+    slot_b = meta["flat_state"]["params"]["slots"][0]
+    assert slot_b["key"] == "b"
+    assert slot_b["global_shape"] == [33]    # logical, not padded 34
+    assert slot_b["shard_pad"] == 1
+    out = store.restore(tmp_path / "a", 1, t)           # flat -> flat
+    np.testing.assert_array_equal(np.asarray(out["params"].buf),
+                                  np.asarray(t["params"].buf))
+    as_tree = store.restore(tmp_path / "a", 1,          # flat -> tree
+                            dict(t, params=leaves))
+    for k in leaves:
+        np.testing.assert_array_equal(np.asarray(as_tree["params"][k]),
+                                      np.asarray(leaves[k]))
+    store.save(tmp_path / "b", 2, dict(t, params=leaves))
+    as_flat = store.restore(tmp_path / "b", 2, t)       # tree -> flat
+    np.testing.assert_array_equal(np.asarray(as_flat["params"].buf),
+                                  np.asarray(t["params"].buf))
+
+
+def test_uneven_restore_from_old_copy_manifest(tmp_path):
+    """A checkpoint written by the OLD layout rule (uneven leaf stored
+    as a per-bucket COPY, manifest without global_shape/shard_pad)
+    still restores into the padded-shard layout via tree conversion."""
+    from jax.sharding import PartitionSpec as P
+    t, leaves = _uneven_sharded_flat_tree(5)
+    # rebuild the old copy-style layout by hand: w sharded (8 % 2 == 0),
+    # b replicated -> copied whole into both buckets (what the old rule
+    # did to the uneven leaf)
+    copy_style = flatbuf.make_layout(
+        leaves, batch_dims=1, sharding=flatbuf.ModelSharding(
+            2, "model", {"w": P(None, "model"), "b": P()}))
+    assert copy_style.shards == 2
+    assert [s.shard_dim for s in copy_style.slots] == [None, 1]
+    buckets = [flatbuf.flatten_tree(copy_style.bucket(), bt, batch_dims=1)
+               for bt in flatbuf.bucket_trees(copy_style, leaves, 1)]
+    legacy_fs = flatbuf.FlatState(jnp.concatenate(buckets, axis=-1),
+                                  copy_style, batch_dims=1)
+    path = store.save(tmp_path, 1, dict(t, params=legacy_fs))
+    # age the manifest: strip the fields old checkpoints did not have
+    manifest = json.loads((path / "manifest.json").read_text())
+    for slot in manifest["flat_state"]["params"]["slots"]:
+        slot.pop("global_shape")
+        slot.pop("shard_pad")
+    (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    restored = store.restore(tmp_path, 1, t)   # old copy -> padded shard
+    np.testing.assert_array_equal(np.asarray(restored["params"].buf),
+                                  np.asarray(t["params"].buf))
+    for a, b in zip(jax.tree.leaves(restored["params"].tree()),
+                    jax.tree.leaves(leaves)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_mismatch_error_names_leaf_and_field(tmp_path):
+    """A genuinely incompatible flat layout raises naming the offending
+    leaf path and field, not a whole-slot-table dump."""
+    t, leaves = _uneven_sharded_flat_tree(0)
+    store.save(tmp_path, 1, t)
+    other = flatbuf.from_tree(
+        {"w": leaves["w"], "b": jnp.zeros((2, 34))}, batch_dims=1)
+    with pytest.raises(IOError, match=r"leaf 'params/b'.*expects \(34,\)"):
+        store.restore(tmp_path, 1, dict(t, params=other))
 
 
 def test_flat_restore_validates_layout(tmp_path):

@@ -84,6 +84,28 @@ def test_readme_matrix_matches_parity_parametrization():
                     f"{method}/{transport}")
 
 
+def test_padded_shard_rule_documented():
+    """The uneven-TP-leaf contract is pinned: the architecture doc's
+    bucket-coordinate-space section documents the padded-shard rule
+    (shard_pad, pad/unpad boundary helpers) and the README transport
+    matrix advertises it."""
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "padded-shard rule" in arch
+    assert "shard_pad" in arch
+    assert "pad_tree" in arch and "unpad_tree" in arch
+    readme = (ROOT / "README.md").read_text()
+    assert "padded-shard rule" in readme
+    # the old caveat is gone from the living docs (ROADMAP keeps it
+    # only as a struck-through history line): no doc may still describe
+    # UNEVEN leaves as part of the per-bucket-copy fallback
+    for doc in DOC_FILES:
+        if doc.name == "ROADMAP.md":
+            continue
+        text = doc.read_text()
+        assert "uneven or zero-size" not in text, doc
+        assert "replicated / uneven / zero-size" not in text, doc
+
+
 def test_readme_tier1_command():
     """The README's verify command matches ROADMAP's tier-1 gate."""
     readme = (ROOT / "README.md").read_text()

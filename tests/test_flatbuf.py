@@ -179,7 +179,8 @@ def test_flat_state_pytree_node():
 
 def _shard_specs(tree, batch_dims):
     """Model axis on every leaf's first post-batch dim (where one
-    exists): divisible dims shard, uneven/zero/scalar leaves must fall
+    exists): nonzero dims shard -- uneven extents as zero-padded blocks
+    (shard_pad) -- while zero-size dims and scalar leaves must fall
     back to per-bucket copies."""
     return {k: (P("model", *([None] * (v.ndim - batch_dims - 1)))
                 if v.ndim > batch_dims else P())
@@ -192,10 +193,10 @@ def _shard_specs(tree, batch_dims):
        st.sampled_from([1, 2, 4]),
        st.integers(0, 2))
 def test_sharded_roundtrip(sizes, dtype_idxs, shards, batch_dims):
-    """Sharded layouts (shard counts 1/2/4, mixed dtypes, uneven,
-    scalar and zero-size leaves): flatten/unflatten restores every leaf
-    bit-exactly, pack matches pack-of-flat wordwise, and the bucket
-    geometry invariants hold."""
+    """Sharded layouts (shard counts 1/2/4, mixed dtypes, UNEVEN dims
+    drawn as sharded padded-block slots, scalar and zero-size leaves):
+    flatten/unflatten restores every leaf bit-exactly, pack matches
+    pack-of-flat wordwise, and the bucket geometry invariants hold."""
     batch = (2, 3)[:batch_dims]
     tree = _edge_tree(sizes, dtype_idxs, batch=batch)
     specs = _shard_specs(tree, batch_dims)
@@ -204,16 +205,24 @@ def test_sharded_roundtrip(sizes, dtype_idxs, shards, batch_dims):
                               sharding=sharding)
     base = flatbuf.make_layout(tree, batch_dims=batch_dims)
     assert lay.shards in (1, shards)
-    assert lay.n == base.n                  # copies are not new coords
+    assert lay.n == base.n                  # pads/copies: no new coords
     assert lay.n_pad == lay.shards * lay.bucket_pad
     assert lay.bucket_pad % flatbuf.TILE == 0
     offset = 0
-    for slot in lay.slots:                  # per-BUCKET placement
+    for slot, k in zip(lay.slots, sorted(tree)):  # per-BUCKET placement
         assert slot.offset == offset
         assert slot.offset % flatbuf.PACK == 0
-        if slot.shard_dim is not None:
-            g = slot.global_shape(lay.shards)
-            assert g[slot.shard_dim] == slot.shape[slot.shard_dim] * lay.shards
+        leaf_shape = tuple(tree[k].shape[batch_dims:])
+        assert slot.global_shape(lay.shards) == leaf_shape
+        if lay.shards > 1 and len(leaf_shape) and leaf_shape[0] > 0:
+            # every nonzero spec'd dim stays SHARDED -- never a copy
+            assert slot.shard_dim == 0
+            ext = leaf_shape[0]
+            blk = -(-ext // lay.shards)
+            assert slot.shape[0] == blk
+            assert slot.shard_pad == blk * lay.shards - ext
+        else:
+            assert slot.shard_dim is None and slot.shard_pad == 0
         offset += slot.padded
 
     buf = flatbuf.flatten_tree(lay, tree, batch_dims=batch_dims)
@@ -253,14 +262,83 @@ def test_sharded_copies_and_blocks_land_in_buckets(sizes, seed):
             np.asarray(buf[m * bp:(m + 1) * bp]), np.asarray(local))
 
 
-def test_sharding_normalizes_when_nothing_divides():
-    """A sharding under which no leaf divides collapses to shards=1 --
-    callers can pass the mesh sharding unconditionally."""
+def test_uneven_dims_shard_and_normalization_needs_no_shardable_leaf():
+    """Uneven extents now SHARD (padded blocks) instead of collapsing
+    the layout; only a sharding under which no leaf can shard at all
+    (scalars, zero-size dims) normalizes back to shards=1 -- callers
+    can still pass the mesh sharding unconditionally."""
     tree = {"a": jnp.zeros((33,)), "s": jnp.zeros(())}
     lay = flatbuf.make_layout(tree, sharding=flatbuf.ModelSharding(
         2, "model", _shard_specs(tree, 0)))
-    assert lay.shards == 1
-    assert lay == flatbuf.make_layout(tree)
+    assert lay.shards == 2                   # 33 shards as 17+17 (pad 1)
+    a = lay.slots[0]
+    assert (a.shard_dim, a.shape, a.shard_pad) == (0, (17,), 1)
+    assert a.global_shape(2) == (33,)
+    empty = {"z": jnp.zeros((0, 3)), "s": jnp.zeros(())}
+    lay0 = flatbuf.make_layout(empty, sharding=flatbuf.ModelSharding(
+        2, "model", _shard_specs(empty, 0)))
+    assert lay0.shards == 1
+    assert lay0 == flatbuf.make_layout(empty)
+
+
+def test_uneven_sharded_blocks_zero_tail_and_bucket_trees():
+    """Padded-shard geometry end to end: bucket m of an uneven leaf is
+    block m of the zero-extended leaf (don't-care tail), the reference
+    flatten/pack place it at the bucket offsets, and unflatten drops
+    the tail exactly."""
+    tree = {"a": jnp.arange(1, 6, dtype=jnp.float32),       # 5 over 2
+            "b": jnp.arange(1, 8, dtype=jnp.float32)}       # 7 over 2
+    lay = flatbuf.make_layout(tree, sharding=flatbuf.ModelSharding(
+        2, "model", _shard_specs(tree, 0)))
+    assert [(s.shape, s.shard_pad) for s in lay.slots] == [
+        ((3,), 1), ((4,), 1)]
+    assert lay.n == 5 + 7                    # pads are not real coords
+    bts = flatbuf.bucket_trees(lay, tree)
+    np.testing.assert_array_equal(np.asarray(bts[0]["a"]), [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(bts[1]["a"]), [4, 5, 0.0])
+    np.testing.assert_array_equal(np.asarray(bts[1]["b"]), [5, 6, 7, 0.0])
+    buf = flatbuf.flatten_tree(lay, tree)
+    bp = lay.bucket_pad
+    # bucket 1 holds the tail blocks at the same slot offsets
+    np.testing.assert_array_equal(np.asarray(buf[bp:bp + 3]), [4, 5, 0.0])
+    back = flatbuf.unflatten_tree(lay, buf)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    words = flatbuf.pack_tree(lay, tree)
+    expect = signs.pack_signs(signs.sgn(buf))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(expect))
+    # pad_tree/unpad_tree are the shard_map boundary forms
+    pt = flatbuf.pad_tree(lay, tree)
+    assert pt["a"].shape == (6,) and pt["b"].shape == (8,)
+    np.testing.assert_array_equal(np.asarray(pt["a"]), [1, 2, 3, 4, 5, 0])
+    ut = flatbuf.unpad_tree(lay, pt)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(ut[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_copy_fallback_warns_once_per_leaf_path():
+    """The zero-size-dim copy fallback warns keyed on the LEAF PATH:
+    two different leaves of the same shape each warn, re-laying the
+    same tree out does not re-warn, and uneven sharded leaves do not
+    warn at all (they are first-class now)."""
+    import warnings as _w
+    tree = {"za": jnp.zeros((0, 3)), "zb": jnp.zeros((0, 3)),
+            "odd": jnp.zeros((5,))}
+    sharding = flatbuf.ModelSharding(2, "model", _shard_specs(tree, 0))
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        flatbuf.make_layout(tree, sharding=sharding)
+    msgs = [str(r.message) for r in rec]
+    assert sum("'za'" in m for m in msgs) == 1
+    assert sum("'zb'" in m for m in msgs) == 1      # same shape, own warn
+    assert not any("odd" in m for m in msgs)        # uneven: no fallback
+    assert all("zero-size" in m for m in msgs)
+    with _w.catch_warnings(record=True) as rec2:
+        _w.simplefilter("always")
+        flatbuf.make_layout(tree, sharding=sharding)  # same paths: deduped
+    assert not rec2
 
 
 def test_sharded_from_tree_and_with_dtype():

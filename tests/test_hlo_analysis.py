@@ -1,0 +1,73 @@
+"""Per-axis collective accounting of benchmarks/hlo_analysis.py.
+
+Regression for the double-counting bug: an UNATTRIBUTED collective
+(unparsed replica_groups, or no axis_sizes) used to count toward EVERY
+axis filter, inflating e.g. both the data-axis and model-axis all-gather
+totals at once.  It now lands exactly once in the explicit
+``unattributed`` bucket, and the strict ``assert_axis_free`` helper
+refuses to pass a per-axis zero check while any of the op's bytes are
+unattributed.
+"""
+import pytest
+
+from benchmarks import hlo_analysis
+
+# 2x2 (data, model) mesh: devices 0..3 = (d, m) row-major, so group
+# {0,1} varies along 'model' and {0,2} along 'data'.  The second
+# all-gather carries an unparsable replica_groups attribute.
+HLO = """\
+HloModule test
+
+ENTRY %main (p0: f32[8,16]) -> f32[16,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ag.model = f32[16,16]{1,0} all-gather(f32[8,16]{1,0} %p0), channel_id=1, replica_groups={{0,1},{2,3}}, dimensions={0}
+  %ag.mystery = f32[16,16]{1,0} all-gather(f32[8,16]{1,0} %p0), channel_id=2, replica_groups=<opaque>, dimensions={0}
+  ROOT %ar.data = f32[16,16]{1,0} all-reduce(f32[16,16]{1,0} %ag.model), channel_id=3, replica_groups={{0,2},{1,3}}, to_apply=%add
+}
+"""
+
+AXES = {"data": 2, "model": 2}
+P0_BYTES = 8 * 16 * 4
+AG_OUT_BYTES = 16 * 16 * 4
+
+
+@pytest.fixture(scope="module")
+def stats():
+    return hlo_analysis.analyze_hlo_text(HLO, axis_sizes=AXES)
+
+
+def test_attributed_axes_label_correctly(stats):
+    assert stats["per_axis_op_bytes"]["all-gather@model"] == P0_BYTES
+    assert stats["per_axis_op_bytes"]["all-reduce@data"] == AG_OUT_BYTES
+
+
+def test_unattributed_counts_once_not_per_axis(stats):
+    cb = hlo_analysis.collective_bytes
+    # the mystery gather lands ONLY in the unattributed bucket ...
+    assert stats["per_axis_op_bytes"]["all-gather@unattributed"] == P0_BYTES
+    assert cb(stats, op="all-gather", axis="unattributed") == P0_BYTES
+    # ... and no longer inflates the named-axis filters
+    assert cb(stats, op="all-gather", axis="model") == P0_BYTES
+    assert cb(stats, op="all-gather", axis="data") == 0
+    # unfiltered totals still see every byte exactly once
+    assert cb(stats, op="all-gather") == 2 * P0_BYTES
+    assert sum(stats["per_axis_bytes"].values()) == (
+        2 * P0_BYTES + AG_OUT_BYTES)
+
+
+def test_assert_axis_free_is_strict(stats):
+    # attributed-zero + unattributed-zero for the op -> passes
+    hlo_analysis.assert_axis_free(stats, op="all-reduce", axis="model")
+    # data-axis all-gather bytes are 0, but the unattributed gather
+    # could hide axis traffic: the strict check must fail, not pass
+    # vacuously
+    with pytest.raises(AssertionError, match="unattributed"):
+        hlo_analysis.assert_axis_free(stats, op="all-gather", axis="data")
+    with pytest.raises(AssertionError, match="model"):
+        hlo_analysis.assert_axis_free(stats, op="all-gather", axis="model")
+
+
+def test_no_axis_sizes_means_unattributed():
+    stats = hlo_analysis.analyze_hlo_text(HLO, axis_sizes=None)
+    keys = set(stats["per_axis_op_bytes"])
+    assert keys == {"all-gather@unattributed", "all-reduce@unattributed"}

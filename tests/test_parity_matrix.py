@@ -205,7 +205,9 @@ def _run_check(script: str, want: str):
 @pytest.mark.slow
 def test_parity_matrix_multidevice():
     """The full matrix on an 8-CPU 2x2x2 mesh: cross-transport /
-    cross-layout bitwise, oracle, straggler masks, EF/momentum, FSDP.
+    cross-layout bitwise, oracle, straggler masks, EF/momentum, FSDP,
+    plus the UNEVEN-TP-leaf cell (odd hidden dim: the flat cells run
+    the padded-shard layout and must stay bitwise vs tree state).
     The flat cells run the model-axis-SHARDED layout there (model=2)."""
     _run_check("parity_matrix_check.py", "parity matrix OK")
 
@@ -215,5 +217,7 @@ def test_fused_multichip_sharded():
     """The multi-chip fused acceptance cell (8-CPU 2x2x2 mesh): sharded
     flat layout engaged, bitwise parity on the jnp AND per-rank kernel
     (interpret) routes, and NO model-axis all-gather in the optimized
-    HLO of the fused/flat train step (benchmarks.hlo_analysis)."""
+    HLO of the fused/flat train step -- strictly (unattributed
+    collectives fail the check), for the even AND the uneven
+    (padded-shard) cells (benchmarks.hlo_analysis.assert_axis_free)."""
     _run_check("sharded_fused_check.py", "sharded fused check OK")
