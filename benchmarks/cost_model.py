@@ -40,10 +40,25 @@ EFF_FLOPS = 2.0e9
 DISPATCH_US = 350.0                          # per grad_fn/vote Python step
 
 
-def round_cost_us(method: str, t_e: int) -> float:
-    """Wall-time estimate of ONE ref_fed global round (all edges)."""
-    grad_calls = Q_EDGES * DEVS * t_e
-    anchor_calls = Q_EDGES * DEVS if method == "dc_hier_signsgd" else 0
+def participating_clients(clients_per_device: int = 1,
+                          rate: float = 1.0) -> int:
+    """Expected per-round participating client count of the fleet:
+    Q_EDGES * DEVS physical slices x K virtual clients x Bernoulli(p)
+    participation (at least one client votes -- an all-abstaining fleet
+    costs nothing and prices nothing)."""
+    return max(1, int(round(Q_EDGES * DEVS * clients_per_device * rate)))
+
+
+def round_cost_us(method: str, t_e: int, clients_per_device: int = 1,
+                  rate: float = 1.0) -> float:
+    """Wall-time estimate of ONE ref_fed global round (all edges).
+
+    Grad work (local steps + the DC anchor) scales with the
+    PARTICIPATING client count, not the fleet size: masked-out virtual
+    clients take no local step and send no uplink."""
+    part = participating_clients(clients_per_device, rate)
+    grad_calls = part * t_e
+    anchor_calls = part if method == "dc_hier_signsgd" else 0
     flops = 6.0 * D_PARAMS * BATCH * (grad_calls + anchor_calls)
     vote_steps = Q_EDGES * t_e
     return ((flops / EFF_FLOPS) * 1e6
@@ -98,6 +113,25 @@ def fig3_rows(te_values) -> list:
                              round_cost_us(m, te),
                              f"final_loss={_loss_proxy(c)} "
                              f"src=cost_model"))
+    return rows
+
+
+def clients_rows(cells=((64, 0.1),)) -> list:
+    """Virtual-client scale-out rows (``--fast`` CI profile): K clients
+    per device with Bernoulli(p) participation.  The per-round uplink is
+    priced for the PARTICIPATING clients only (1 bit/coordinate/local
+    step + the DC anchor, paper Table II per client), so the derived
+    column makes the participation saving directly visible."""
+    from repro.core.signs import uplink_bits
+    rows = []
+    for k, p in cells:
+        part = participating_clients(k, p)
+        for m in ("hier_signsgd", "dc_hier_signsgd"):
+            bits = part * uplink_bits(m, D_PARAMS, 15)
+            rows.append((f"clients/K{k}_p{p}/{m}",
+                         round_cost_us(m, 15, k, p),
+                         f"uplink_mbits_round={bits / 1e6:.1f} "
+                         f"participants={part} src=cost_model"))
     return rows
 
 

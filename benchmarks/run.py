@@ -10,6 +10,8 @@ BENCH_transports.json.)
   fig2      4-method accuracy, IID & non-IID    (paper Fig. 2)
   fig3      T_E sweep, DC vs plain              (paper Fig. 3)
   fig4      rho sensitivity at T_E=15           (paper Fig. 4)
+  clients   virtual-client scale-out (K=64, p=0.1): participating
+            uplink + round cost (always cost-model priced)
   roofline  3-term roofline per dry-run cell    (deliverable g)
 
 Flags: ``--only fig2`` to run a subset; ``--fast`` is the CI profile --
@@ -30,7 +32,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "table2", "fig2", "fig3", "fig4",
-                             "roofline"])
+                             "clients", "roofline"])
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out-dir", default=None,
                     help="directory for bench_results.{csv,json} "
@@ -56,6 +58,10 @@ def main() -> None:
         rows += (cost_model.fig4_rows(rhos=(0.0, 0.2, 1.0)) if args.fast
                  else paper_figs.fig4_rho_sweep(
                      rhos=(0.0, 0.1, 0.2, 0.5, 1.0)))
+    if want("clients"):
+        # virtual-client scale-out (always cost-model priced: the row
+        # exists to track the participating-uplink accounting)
+        rows += cost_model.clients_rows(cells=((64, 0.1),))
     if want("roofline"):
         try:
             rows += roofline.roofline_rows()

@@ -1,0 +1,209 @@
+"""Virtual-client scale-out: K federated clients per mesh data slice.
+
+The paper targets fleets where each edge server fronts *many* devices
+with unequal data shares ``|D_qk|`` and intermittent availability; a
+mesh has a fixed number of physical ``data`` slices.  This module maps
+``K`` virtual clients onto every (pod, data) slice:
+
+  * **batch carving** -- a device batch ``[P, D, b, ...]`` is carved
+    into ``K`` per-client shards and the client dim is merged into the
+    voter axis: ``[P, D*K, b/K, ...]``.  Virtual client ``c`` of
+    physical slice ``d`` is voter ``d*K + c``; the merged axis shards
+    over ``data`` exactly like the physical one (each slice holds its
+    own K clients), so carving is a local reshape -- no communication.
+  * **participation sampling** -- per-round client masks (Bernoulli or
+    fixed-size), drawn from a scheme pinned to ``(seed, round)`` only.
+  * **data-share weights** -- integer ``|D_qk|`` flow into the edge
+    majority vote, which becomes a *weighted popcount*: the tally range
+    is ``sum(w)`` rather than the voter count ``D`` (transports widen
+    their tally dtypes accordingly, see ``core.votes``), masked-out
+    clients contribute zero tally, and an edge whose quorum is empty
+    abstains entirely (vote 0: ``v_q`` is left unchanged).
+
+Pinned sampling scheme (the checkpoint contract): the participation
+mask of global round ``t`` is a pure function of ``(seed, t)`` via a
+counter-based elementwise hash,
+
+    word(q, d, c) = splitmix32(index ^ splitmix32(seed ^ splitmix32(t)))
+
+(plain uint32 arithmetic over a global client-index iota), NOT
+``jax.random``: threefry is not partition-stable in this jax version
+(``jax_threefry_partitionable=False``), so a sharded train step would
+draw a different quorum than the eager oracle.  The hash is bitwise
+identical under any GSPMD partitioning, eager or jit, independent of
+transport, state layout, mesh shape and the step within the round --
+restoring a checkpoint mid-round resamples the identical mask, and
+every transport/state-layout combination sees the same quorum (the
+derivation is pinned against a numpy reimplementation in
+``tests/test_ref_fed_participation.py``).
+
+``ClientConfig()`` (the default) is *inactive*: ``core.hier`` then runs
+the exact pre-virtual-client code path, so ``K=1`` / full participation
+/ unit weights is bitwise identical to the legacy trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PARTICIPATION_MODES = ("full", "bernoulli", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    """Static virtual-client configuration (closed over, never traced).
+
+    count          -- K virtual clients per physical data slice.
+    participation  -- per-round sampling of the voting quorum:
+                      ``full``      every client votes every round;
+                      ``bernoulli`` each client votes i.i.d. with
+                                    probability ``rate``;
+                      ``fixed``     exactly ``max(1, round(rate*D*K))``
+                                    clients per edge vote (uniformly,
+                                    without replacement).
+    rate           -- target participation fraction (ignored by
+                      ``full``).
+    seed           -- base key of the pinned per-round sampling scheme.
+    weights        -- optional integer data shares ``|D_qk|`` as nested
+                      tuples ``[pods][devices][count]`` (static, so
+                      tally-dtype promotion can be decided at trace
+                      time); ``None`` means unit weights.
+    """
+    count: int = 1
+    participation: str = "full"
+    rate: float = 1.0
+    seed: int = 0
+    weights: tuple | None = None
+
+    def __post_init__(self):
+        if self.count < 1:
+            raise ValueError(f"clients per device must be >= 1: {self.count}")
+        if self.participation not in PARTICIPATION_MODES:
+            raise ValueError(f"unknown participation {self.participation!r}")
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"participation rate must be in (0, 1]: "
+                             f"{self.rate}")
+        if self.weights is not None:
+            flat = [w for q in self.weights for d in q for w in d]
+            if not flat or any(int(w) != w or w < 0 for w in flat):
+                raise ValueError("client weights must be nonnegative "
+                                 f"integers |D_qk|: {self.weights!r}")
+
+    @property
+    def active(self) -> bool:
+        """Whether the virtual-client machinery engages at all; the
+        inactive default keeps ``core.hier`` on the legacy path."""
+        return (self.count > 1 or self.participation != "full"
+                or self.weights is not None)
+
+    def weight_array(self, pods: int, devices: int) -> np.ndarray:
+        """[P, D, K] int32 data shares (ones when ``weights is None``)."""
+        if self.weights is None:
+            return np.ones((pods, devices, self.count), np.int32)
+        w = np.asarray(self.weights, np.int32)
+        if w.shape != (pods, devices, self.count):
+            raise ValueError(
+                f"client weights shape {w.shape} != "
+                f"{(pods, devices, self.count)} (pods, devices, count)")
+        return w
+
+    def weight_bound(self, pods: int, devices: int) -> int:
+        """Static per-edge tally bound ``max_q sum_k |D_qk|`` -- the
+        range of the weighted vote tally (picks the int tally dtype in
+        ``votes.vote_ar_int8``; unit weights give the voter count)."""
+        return int(self.weight_array(pods, devices).sum(axis=(1, 2)).max())
+
+
+def _splitmix32(x: jax.Array) -> jax.Array:
+    """Elementwise uint32 avalanche (the splitmix32 finalizer) -- the
+    counter-based generator behind participation sampling.  Pure
+    elementwise integer ops over a global iota, so the drawn bits are
+    BITWISE identical under any GSPMD partitioning, jit or eager
+    (``jax.random``'s threefry is not partition-stable here: a sharded
+    train step would draw a different quorum than the oracle)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _client_words(cfg: ClientConfig, pods: int, devices: int,
+                  round_index) -> jax.Array:
+    """[P, D, K] uint32 hash words of round ``t`` (the pinned scheme of
+    the module docstring)."""
+    n = pods * devices * cfg.count
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(
+        pods, devices, cfg.count)
+    rnd = jnp.asarray(round_index).astype(jnp.uint32)
+    base = _splitmix32(jnp.uint32(cfg.seed) ^ _splitmix32(rnd))
+    return _splitmix32(idx ^ base)
+
+
+def participation_mask(cfg: ClientConfig, pods: int, devices: int,
+                       round_index) -> jax.Array:
+    """[P, D, K] float {0,1} participation mask of global round ``t``.
+
+    A pure function of ``(cfg.seed, round_index)`` via the pinned
+    counter-hash scheme documented in the module docstring;
+    ``round_index`` may be a traced integer (``step // t_e`` inside the
+    train step), and the drawn mask is bitwise identical eager / jit /
+    sharded.
+    """
+    shape = (pods, devices, cfg.count)
+    if cfg.participation == "full":
+        return jnp.ones(shape, jnp.float32)
+    words = _client_words(cfg, pods, devices, round_index)
+    if cfg.participation == "bernoulli":
+        # top 24 hash bits as a uniform in [0, 2^24): exact threshold
+        thresh = jnp.uint32(int(round(cfg.rate * (1 << 24))))
+        return ((words >> 8) < thresh).astype(jnp.float32)
+    # fixed-size: exactly m of the edge's D*K clients vote -- the m
+    # smallest hash words (stable argsort: hash collisions break by
+    # client index, still deterministic)
+    n = devices * cfg.count
+    m = max(1, int(round(cfg.rate * n)))
+    w = words.reshape(pods, n)
+    ranks = jnp.argsort(jnp.argsort(w, axis=1), axis=1)
+    return (ranks < m).astype(jnp.float32).reshape(shape)
+
+
+def carve_batch(batch, count: int):
+    """Carve [P, D, b, ...] device batches into per-client shards and
+    merge the client dim into the voter axis: [P, D*K, b/K, ...].
+
+    Client ``c`` of slice ``d`` (voter ``d*K + c``) owns rows
+    ``[c*b/K, (c+1)*b/K)`` of the slice batch; the reshape is local
+    under a ``(pod, data, ...)`` sharding.  ``count=1`` is the
+    identity (no reshape is emitted at all)."""
+    if count == 1:
+        return batch
+
+    def carve(x):
+        p, d, b = x.shape[:3]
+        if b % count:
+            raise ValueError(
+                f"per-device batch {b} does not divide into "
+                f"{count} virtual clients")
+        return x.reshape((p, d * count, b // count) + x.shape[3:])
+
+    return jax.tree.map(carve, batch)
+
+
+def participating_shares(dev_weights: jax.Array, weights: jax.Array,
+                         maskf: jax.Array) -> jax.Array:
+    """Per-edge aggregation shares of the *participating* clients.
+
+    dev_weights: [P, D] physical-slice weighting from the caller (the
+    legacy ``|D_qk|/D_q``); weights: [P, D, K] float data shares;
+    maskf: [P, D, K] float {0,1} participation.  Returns [P, D*K]
+    shares ``w_qk m_qk / sum_j w_qj m_qj`` (zero when the whole edge is
+    masked out) -- the anchor pass and the full-precision edge means
+    reweight to exactly the participating data shares.
+    """
+    p, d, k = maskf.shape
+    raw = (dev_weights[:, :, None] * weights * maskf).reshape(p, d * k)
+    tot = jnp.sum(raw, axis=1, keepdims=True)
+    return jnp.where(tot > 0, raw / jnp.where(tot > 0, tot, 1.0), 0.0)

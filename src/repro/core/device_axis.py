@@ -43,12 +43,16 @@ def _dev_shape(w: jax.Array, d: int):
 
 
 def broadcast_devices(topo: Topology, tree: PyTree, compute_specs: PyTree,
-                      dtype=None) -> PyTree:
+                      dtype=None, devices: int | None = None) -> PyTree:
     """[P, *leaf] master -> [P, D, *leaf] device copies (differentiable).
 
     compute_specs: per-leaf PartitionSpec for the *leaf* dims (TP layout).
+    devices: voter-axis extent -- defaults to the mesh's physical
+    ``data`` extent; virtual-client callers (``core.clients``) pass the
+    merged D*K extent, which shards over ``data`` the same way (each
+    physical slice holds its own K client copies).
     """
-    d = topo.devices_per_pod
+    d = devices if devices is not None else topo.devices_per_pod
 
     def lift(w, spec):
         wd = jnp.broadcast_to(w[:, None], _dev_shape(w, d))

@@ -17,6 +17,12 @@ At a round boundary (step % T_E == 0) a prologue first runs
 
 Then the local step: per-device grads -> (+ rho*delta, + EF residual) ->
 sign -> majority vote over the ``data`` axis -> v_q <- v_q - mu * vote.
+With an *active* ``AlgoConfig.clients`` (``core.clients``) the voter
+axis is the merged virtual-client axis [P, D*K, ...]: batches are
+carved per client, a per-round sampled participation mask and integer
+data shares |D_qk| turn the vote into a weighted popcount (empty quorum
+abstains), and the anchor/mean aggregations reweight to the
+participating shares.  The inactive default is bitwise the legacy step.
 With ``transport="fused"`` the sign/vote chain runs over ONE contiguous
 flat buffer (``core.flatbuf`` layout, DC correction fused pre-sign,
 Pallas kernels on TPU) instead of per-leaf tree maps -- bit-identical
@@ -57,6 +63,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import clients as vclients
 from repro.core import device_axis, flatbuf, shardflat, signs, votes
 from repro.core.device_axis import LiftCfg
 from repro.core.topology import Topology
@@ -80,6 +87,12 @@ class AlgoConfig:
                                       # lives AS the core.flatbuf buffer;
                                       # replicated regime only)
     anchor_staleness: int = 1         # 1 = paper's pipelined delta, 0 = fresh
+    clients: vclients.ClientConfig = vclients.ClientConfig()
+                                      # virtual-client scale-out: K clients
+                                      # per data slice, per-round sampling,
+                                      # |D_qk| vote weights (replicated
+                                      # regime only; the inactive default
+                                      # is bitwise the legacy step)
     error_feedback: bool = False      # beyond-paper (replicated regime only)
     momentum: float = 0.0             # beyond-paper signum-style momentum
     compute_dtype: Any = jnp.bfloat16
@@ -114,9 +127,9 @@ class TrainState(NamedTuple):
     params: PyTree                    # [P, ...] per-pod edge models v_q
     delta: PyTree | None              # [P, ...] active correction c - c_q
     delta_next: PyTree | None         # staged delta (anchor_staleness=1)
-    ef: PyTree | None                 # [P, D, ...] error-feedback residual
-    mom: PyTree | None                # [P, D, ...] sign-momentum buffer
-    rng: jax.Array
+    ef: PyTree | None                 # [P, D*K, ...] error-feedback residual
+    mom: PyTree | None                # [P, D*K, ...] sign-momentum buffer
+    rng: jax.Array                    # (K = clients per slice; K=1 default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,8 +153,10 @@ class ModelBundle:
     param_mode: str = "replicated"    # replicated | fsdp
 
 
-def _bcast_pd(topo: Topology, tree: PyTree, specs: PyTree, dtype) -> PyTree:
-    return device_axis.broadcast_devices(topo, tree, specs, dtype)
+def _bcast_pd(topo: Topology, tree: PyTree, specs: PyTree, dtype,
+              devices: int | None = None) -> PyTree:
+    return device_axis.broadcast_devices(topo, tree, specs, dtype,
+                                         devices=devices)
 
 
 def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
@@ -154,6 +169,20 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     batch: {'train': pytree of [P, D, b, ...], 'anchor': optional same}.
     edge_weights: [P] = D_q/N;  dev_weights: [P, D] = |D_qk|/D_q;
     dev_mask: [P, D] float in {0,1} -- vote quorum / straggler mask.
+
+    Virtual clients (``algo.clients``, replicated regime only): when the
+    ClientConfig is *active*, each physical slice hosts K virtual
+    clients -- the device batch is carved into K per-client shards and
+    the client dim merges into the voter axis ([P, D*K, b/K, ...], a
+    local reshape; ``core.clients``).  A per-round participation mask
+    (pinned to (seed, step // T_E)) combines with ``dev_mask`` and with
+    the config's integer data shares |D_qk| into (a) the weighted
+    majority-vote weights -- tally range sum(w), empty quorum abstains
+    -- and (b) the anchor/mean aggregation shares, renormalized to the
+    participating clients each round (``dev_weights`` contributes the
+    physical-slice factor).  The inactive default runs the exact legacy
+    step: K=1 / full participation / unit weights is bitwise identical
+    to the pre-virtual-client trajectory.
 
     sync: 'cond'  -- prologue under lax.cond on step % T_E (the driver);
           'always'/'never' -- statically include/skip the prologue (used by
@@ -168,6 +197,18 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             "state_layout='flat' requires the replicated regime (the FSDP "
             "lift votes per layer shard, so the whole-model buffer never "
             "forms)")
+    cc = algo.clients
+    virtual = cc.active
+    if virtual and fsdp:
+        raise ValueError(
+            "virtual clients (clients count/participation/weights) require "
+            "the replicated regime: the FSDP lift votes per layer shard "
+            "with physical-device masks")
+    # the merged voter axis: K virtual clients per physical data slice
+    # (d_virtual == devices_per_pod on the inactive legacy path)
+    d_virtual = topo.devices_per_pod * cc.count
+    vote_bound = (cc.weight_bound(topo.pods, topo.devices_per_pod)
+                  if virtual else None)
     # DC correction state only exists where it is read: the DC method's
     # pre-sign correction, or the FSDP lift plumbing (which threads delta
     # through the loss for every method).
@@ -176,9 +217,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
 
     # ---------------- gradient machinery -------------------------------
     def per_device_grads(params, batch, rngs):
-        """Replicated regime: explicit [P, D, ...] per-device grads."""
+        """Replicated regime: explicit [P, D, ...] per-(virtual-)device
+        grads (the voter axis is the merged D*K extent when virtual
+        clients are active -- the batch arrives already carved)."""
         v_dev = _bcast_pd(topo, params, bundle.compute_specs,
-                          algo.compute_dtype)
+                          algo.compute_dtype, devices=d_virtual)
 
         def tot(vd):
             losses = vmap2(bundle.loss)(vd, batch, rngs)
@@ -219,22 +262,34 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 g.astype(jnp.float32), rr_pd))
         return treedef.unflatten(qleaves)
 
-    def ef_residual(u_dev, s_dev):
-        """e' = u - scale * s, scale = per-device mean |u| per leaf."""
+    def ef_residual(u_dev, s_dev, part=None):
+        """e' = u - sent, scale = per-device mean |u| per leaf.
+
+        A participating client transmitted ``scale * s``; a client
+        masked out of the round (``part`` 0, virtual path only)
+        transmitted NOTHING, so its residual carries the full
+        direction forward (e' = u) -- the EF compensation contract."""
         def ef_upd(u, s):
             scale = jnp.mean(jnp.abs(u), axis=tuple(range(2, u.ndim)),
                              keepdims=True)
-            return (u - scale * s.astype(u.dtype)).astype(jnp.float32)
+            sent = scale * s.astype(u.dtype)
+            if part is not None:
+                sent = sent * part.reshape(
+                    part.shape + (1,) * (u.ndim - 2)).astype(u.dtype)
+            return (u - sent).astype(jnp.float32)
         return jax.tree.map(ef_upd, u_dev, s_dev)
 
-    def vote_direction(s_dev, mask):
-        """Per-pod vote of a pre-signed tree via the configured transport."""
+    def vote_direction(s_dev, vote_w):
+        """Per-pod vote of a pre-signed tree via the configured
+        transport; ``vote_w`` is the [P, D(*K)] voter mask (legacy) or
+        the combined participation x |D_qk| integer weights."""
         if algo.transport == "fused":
-            return votes.fused_sign_vote(topo, s_dev, None, 0.0, mask,
+            return votes.fused_sign_vote(topo, s_dev, None, 0.0, vote_w,
                                          specs=bundle.compute_specs)
         return jax.tree.map(
             lambda s, cs: votes.majority_vote_dev(
-                topo, s, mask, algo.transport, cs),
+                topo, s, vote_w, algo.transport, cs,
+                weight_bound=vote_bound),
             s_dev, bundle.compute_specs)
 
     # ---------------- anchor (DC) pass ----------------------------------
@@ -323,8 +378,13 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                                     batch_dims=batch_dims, dtype=dtype)
 
     # ---------------- local step direction ------------------------------
-    def local_direction(state, params, delta, batch, rngs, dev_w, maskf):
-        """-> (direction [P,...], new_ef, new_mom, losses)."""
+    def local_direction(state, params, delta, batch, rngs, dev_w, vote_w,
+                        maskf):
+        """-> (direction [P,...], new_ef, new_mom, losses).
+
+        dev_w: [P, D(*K)] aggregation shares (participating shares when
+        virtual); vote_w: voter mask / integer vote weights; maskf: the
+        physical [P, D] float mask (FSDP regime only)."""
         if fsdp:
             transport = (algo.transport if algo.is_sign else "wmean")
             rho = algo.rho if algo.is_dc else 0.0
@@ -355,7 +415,6 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             if algo.error_feedback:
                 u_dev = jax.tree.map(
                     lambda u, e: u.astype(jnp.float32) + e, u_dev, state.ef)
-            mask = maskf > 0.5
             # the fused flat-buffer transport folds the DC correction
             # pre-sign into its single device-side sweep (Alg. 2's
             # sgn(g + rho*delta), same arithmetic => bit-identical); the
@@ -364,24 +423,26 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             fold_dc = (algo.transport == "fused" and algo.is_dc
                        and not algo.error_feedback)
             if algo.is_dc and not fold_dc:
-                d_dev = _bcast_pd(topo, delta, bundle.compute_specs, None)
+                d_dev = _bcast_pd(topo, delta, bundle.compute_specs, None,
+                                  devices=d_virtual)
                 u_dev = jax.tree.map(
                     lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                     u_dev, d_dev)
             if algo.transport == "fused" and not algo.error_feedback:
                 direction = votes.fused_sign_vote(
                     topo, u_dev, delta if fold_dc else None,
-                    algo.rho if fold_dc else 0.0, mask,
+                    algo.rho if fold_dc else 0.0, vote_w,
                     specs=bundle.compute_specs)
                 return direction, new_ef, new_mom, losses
             s_dev = jax.tree.map(signs.sgn, u_dev)
             if algo.error_feedback:
-                new_ef = ef_residual(u_dev, s_dev)
-            direction = vote_direction(s_dev, mask)
+                new_ef = ef_residual(u_dev, s_dev,
+                                     part=(vote_w > 0) if virtual else None)
+            direction = vote_direction(s_dev, vote_w)
         return direction, new_ef, new_mom, losses
 
     # ---------------- flat-state local step -----------------------------
-    def local_step_flat(state, params, delta, batch, rngs, dev_w, maskf,
+    def local_step_flat(state, params, delta, batch, rngs, dev_w, vote_w,
                         mu):
         """state_layout='flat': whole-buffer update, no per-leaf loops.
 
@@ -435,13 +496,13 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                     u.astype(jnp.float32) + e, topo.dev_spec(*cs)),
                 u_dev, shardflat.tree_views(topo, state.ef, cast=False),
                 bundle.compute_specs)
-        mask = maskf > 0.5
         fold_dc = (algo.transport == "fused" and algo.is_dc
                    and not algo.error_feedback)
         if algo.is_dc and not fold_dc:
             d_dev = _bcast_pd(topo, shardflat.tree_views(topo, delta,
                                                          cast=False),
-                              bundle.compute_specs, None)
+                              bundle.compute_specs, None,
+                              devices=d_virtual)
             u_dev = jax.tree.map(
                 lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                 u_dev, d_dev)
@@ -452,26 +513,53 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             new_buf = votes.fused_sign_vote_update(
                 topo, layout, u_dev,
                 delta.buf if fold_dc else None,
-                algo.rho if fold_dc else 0.0, mask, params.buf, mu,
+                algo.rho if fold_dc else 0.0, vote_w, params.buf, mu,
                 mu_static=None if algo.decay else algo.mu)
             return params.replace(new_buf), new_ef, new_mom, losses
         s_dev = jax.tree.map(signs.sgn, u_dev)
         if algo.error_feedback:
             new_ef = state.ef.replace(flatten_buf(
-                layout, ef_residual(u_dev, s_dev), 2, jnp.float32))
-        return descend(vote_direction(s_dev, mask)), new_ef, new_mom, losses
+                layout,
+                ef_residual(u_dev, s_dev,
+                            part=(vote_w > 0) if virtual else None),
+                2, jnp.float32))
+        return descend(vote_direction(s_dev, vote_w)), new_ef, new_mom, losses
 
     # ---------------- the step ------------------------------------------
     def train_step(state: TrainState, batch, edge_weights, dev_weights,
                    dev_mask):
         rng, r_local, r_anchor = jax.random.split(state.rng, 3)
-        pd = (topo.pods, topo.devices_per_pod)
+        pd = (topo.pods, d_virtual)
         rngs_l = jax.random.split(r_local, pd[0] * pd[1])
         rngs_l = rngs_l.reshape(pd + rngs_l.shape[1:])
         rngs_a = jax.random.split(r_anchor, pd[0] * pd[1])
         rngs_a = rngs_a.reshape(pd + rngs_a.shape[1:])
         maskf = dev_mask.astype(jnp.float32)
-        anchor_batch = batch.get("anchor", batch["train"])
+        rnd_index = state.step // t_e
+        if virtual:
+            # per-round participation (pinned to (seed, round), so the
+            # anchor pass and every local step of round t -- and a
+            # checkpoint restored mid-round -- see the same quorum),
+            # combined with the caller's physical straggler mask
+            part = vclients.participation_mask(
+                cc, topo.pods, topo.devices_per_pod, rnd_index)
+            part = topo.constrain(part * maskf[:, :, None],
+                                  topo.client_spec())         # [P, D, K]
+            w_arr = cc.weight_array(topo.pods, topo.devices_per_pod)
+            # weighted popcount weights: pure int32 arithmetic, so
+            # |D_qk| shares above 2^24 never round through float ...
+            vote_w = (jnp.asarray(w_arr, jnp.int32)
+                      * part.astype(jnp.int32)).reshape(pd)
+            # ... and participating aggregation shares for anchor/means
+            shares = vclients.participating_shares(
+                dev_weights, jnp.asarray(w_arr, jnp.float32), part)
+            carve = lambda b: vclients.carve_batch(b, cc.count)
+        else:
+            vote_w = maskf > 0.5
+            shares = dev_weights
+            carve = lambda b: b
+        train_batch = carve(batch["train"])
+        anchor_batch = carve(batch.get("anchor", batch["train"]))
 
         # -- prologue: cloud aggregation + anchor refresh at round start
         def prologue(op):
@@ -480,7 +568,7 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             params = constrain_master(params)
             if algo.is_dc:
                 fresh = compute_delta(params, delta, anchor_batch, rngs_a,
-                                      edge_weights, dev_weights, maskf)
+                                      edge_weights, shares, maskf)
                 if algo.anchor_staleness == 1:
                     delta, delta_next = delta_next, fresh
                 else:
@@ -502,18 +590,17 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         mu = jnp.asarray(
             algo.mu if algo.is_sign else algo.mu_sgd, algo.master_dtype)
         if algo.decay:
-            rnd = (state.step // t_e).astype(algo.master_dtype)
-            mu = mu / jnp.sqrt(rnd + 1.0)
+            mu = mu / jnp.sqrt(rnd_index.astype(algo.master_dtype) + 1.0)
 
         # -- local sign step
         if flat:
             params, new_ef, new_mom, losses = local_step_flat(
-                state, params, delta, batch["train"], rngs_l, dev_weights,
-                maskf, mu)
+                state, params, delta, train_batch, rngs_l, shares,
+                vote_w, mu)
         else:
             direction, new_ef, new_mom, losses = local_direction(
-                state, params, delta, batch["train"], rngs_l, dev_weights,
-                maskf)
+                state, params, delta, train_batch, rngs_l, shares,
+                vote_w, maskf)
             params = jax.tree.map(
                 lambda v, s: v - mu * s.astype(v.dtype), params, direction)
         params = constrain_master(params)
@@ -555,9 +642,10 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 topo.constrain(jnp.zeros((p, layout.n_pad), dt),
                                flat_spec(layout)),
                 flatbuf.with_dtype(layout, dt))
-            d_pp = topo.devices_per_pod
+            # per-voter buffers (EF / momentum) span the merged
+            # virtual-client axis
             zeros_pd = lambda dt: flatbuf.FlatState(
-                topo.constrain(jnp.zeros((p, d_pp, layout.n_pad), dt),
+                topo.constrain(jnp.zeros((p, d_virtual, layout.n_pad), dt),
                                flat_spec(layout, 2)),
                 flatbuf.with_dtype(layout, dt), batch_dims=2)
         else:
@@ -567,7 +655,7 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             zeros_pd = lambda dt: _bcast_pd(
                 topo, jax.tree.map(
                     lambda v: jnp.zeros_like(v, dtype=dt), params_tree),
-                bundle.compute_specs, None)
+                bundle.compute_specs, None, devices=d_virtual)
         delta = zeros_m(algo.delta_dtype) if needs_delta else None
         delta_next = (zeros_m(algo.delta_dtype)
                       if (algo.is_dc and algo.anchor_staleness == 1) else None)

@@ -6,7 +6,13 @@ against (HierSGD and the Hier-Local-QSGD-style ternary-quantized variant).
 
 This module is the ground truth for the distributed implementation in
 ``repro.core.hier`` (tested bit-wise equivalent on small problems) and the
-engine behind the paper-reproduction experiments (Figs. 2-4).
+engine behind the paper-reproduction experiments (Figs. 2-4).  It carries
+the full virtual-client semantics of ``core.clients`` -- per-round client
+participation masks, integer |D_qk| vote weights (weighted popcount with
+empty-quorum abstention), and participating-share reweighting of the
+anchor/mean aggregations -- a "device" here is any client under an edge,
+so K virtual clients per slice are simply K more entries per edge
+(property-tested in tests/test_ref_fed_participation.py).
 
 Everything operates on flat parameter pytrees; per-device gradients come
 from a user-supplied ``grad_fn(params, device_batch, rng) -> grads`` and the
@@ -61,6 +67,19 @@ def _tree_weighted_sum(weights: Sequence[float], trees: Sequence[PyTree]) -> PyT
     return acc
 
 
+def _participating_shares(weights: Sequence[float],
+                          mask: Sequence[bool] | None) -> list[float]:
+    """Per-edge aggregation shares renormalized to the participating
+    clients: w_k m_k / sum_j w_j m_j (python-float arithmetic; all
+    zeros when the whole edge is masked out, so the aggregate is the
+    zero tree)."""
+    m = ([1.0] * len(weights) if mask is None
+         else [1.0 if b else 0.0 for b in mask])
+    raw = [float(w) * mm for w, mm in zip(weights, m)]
+    tot = sum(raw)
+    return [r / tot if tot > 0 else 0.0 for r in raw]
+
+
 def global_round(
     state: FedState,
     cfg: HierConfig,
@@ -71,17 +90,44 @@ def global_round(
     device_weights: Sequence[Sequence[float]],  # |D_qk| / D_q
     rng: jax.Array,
     device_mask: Sequence[Sequence[bool]] | None = None,
+    vote_weights: Sequence[Sequence[int]] | None = None,
+    reweight_participation: bool = False,
 ) -> FedState:
     """Run one global round t (T_E local steps + cloud aggregation).
 
     Transcribes Algorithm 2 exactly; Algorithm 1 is the rho=0 / no-anchor
     special case; baselines replace the sign/vote with full-precision or
     ternary-quantized averaging.
+
+    Virtual-client semantics (mirroring ``core.hier``'s active
+    ``ClientConfig``): a "device" k here is any client under edge q --
+    virtual clients are simply more entries in ``batches[q]``.
+
+    device_mask: per-client participation of THIS round ({0,1}; the
+        distributed impl draws it from the pinned (seed, round) scheme
+        of ``core.clients`` -- one round, one mask).
+    vote_weights: optional integer data shares |D_qk| weighting the
+        majority vote (weighted popcount, combined with the mask; an
+        edge whose whole quorum abstains votes 0, leaving v_q unchanged
+        for the round -- ties still resolve sgn(0)=+1).  ``None`` keeps
+        the unit-weight vote.
+    reweight_participation: renormalize ``device_weights`` to the
+        participating clients for the anchor pass and the
+        full-precision edge means (``device_weights`` may then be
+        UNNORMALIZED raw shares).  False keeps the legacy behavior
+        (mask gates the vote only) bit-for-bit.
     """
     q_edges = len(batches)
     mu = cfg.mu if cfg.method in ("hier_signsgd", "dc_hier_signsgd") else cfg.mu_sgd
     if cfg.decay:
         mu = mu / jnp.sqrt(state.round + 1.0)
+
+    def edge_shares(q):
+        if not reweight_participation:
+            return device_weights[q]
+        return _participating_shares(
+            device_weights[q],
+            None if device_mask is None else device_mask[q])
 
     new_delta = list(state.delta)
     edge_models: list[PyTree] = []
@@ -94,7 +140,7 @@ def global_round(
             for k in range(len(anchor_batches[q])):
                 rng, sub = jax.random.split(rng)
                 g_devs.append(grad_fn(state.w, anchor_batches[q][k], sub))
-            anchors_cq.append(_tree_weighted_sum(device_weights[q], g_devs))
+            anchors_cq.append(_tree_weighted_sum(edge_shares(q), g_devs))
         c_glob = _tree_weighted_sum(edge_weights, anchors_cq)
 
     # ---- T_E local steps per edge (paper: in parallel over q)
@@ -119,13 +165,16 @@ def global_round(
                 mask_q = None
                 if device_mask is not None:
                     mask_q = jnp.asarray(device_mask[q], dtype=jnp.int32)
+                if vote_weights is not None:
+                    vw = jnp.asarray(vote_weights[q], dtype=jnp.int32)
+                    mask_q = vw if mask_q is None else vw * mask_q
                 vote = jax.tree.map(
                     lambda *s: signs.majority_vote(jnp.stack(s), mask_q, axis=0),
                     *sign_devs,
                 )
                 v = jax.tree.map(lambda p, s: p - mu * s.astype(p.dtype), v, vote)
             elif cfg.method == "hier_sgd":
-                g_edge = _tree_weighted_sum(device_weights[q], g_devs)
+                g_edge = _tree_weighted_sum(edge_shares(q), g_devs)
                 v = _tree_axpy(-mu, g_edge, v)
             elif cfg.method == "hier_local_qsgd":
                 q_devs = []
@@ -136,7 +185,7 @@ def global_round(
                     q_devs.append(treedef.unflatten([
                         signs.ternary_quantize(l, r) for l, r in zip(leaves, subs)
                     ]))
-                g_edge = _tree_weighted_sum(device_weights[q], q_devs)
+                g_edge = _tree_weighted_sum(edge_shares(q), q_devs)
                 v = _tree_axpy(-mu, g_edge, v)
             else:
                 raise ValueError(cfg.method)

@@ -15,9 +15,17 @@ DC-HierSignSGD (Kazemi et al., 2026):
 Conventions
 -----------
 ``sgn(0) = +1`` so that every coordinate is representable in one bit.  Vote
-ties (possible with an even voter count, or with masked voters) therefore
-resolve to +1 deterministically; the packed and integer transports are
-bit-identical by construction (tested in tests/test_signs.py).
+ties (possible with an even voter count, with masked voters, or with
+weighted tallies that cancel exactly) therefore resolve to +1
+deterministically; the packed and integer transports are bit-identical by
+construction (tested in tests/test_signs.py).
+
+Weighted votes: the voter ``mask`` generalizes to nonnegative *integer*
+vote weights (the data shares ``|D_qk|`` of ``core.clients``) -- the vote
+becomes the weighted popcount ``sgn(sum_k w_k sgn(g_k))`` with the same
+tie rule.  A weight of 0 abstains; an edge whose whole quorum abstains
+(all weights 0) returns vote 0, so the descent step leaves ``v_q``
+unchanged for that round.
 """
 from __future__ import annotations
 
@@ -69,31 +77,39 @@ def unpack_signs(words: jax.Array, n: int) -> jax.Array:
 
 def majority_vote(signs: jax.Array, mask: jax.Array | None = None,
                   axis: int = 0) -> jax.Array:
-    """Edge-server majority vote  s = sgn(sum_k sgn_k)  over ``axis``.
+    """Edge-server majority vote  s = sgn(sum_k w_k sgn_k)  over ``axis``.
 
     signs: int8 {-1,+1} with voter axis ``axis``.
-    mask:  optional {0,1} per-voter weights broadcastable to ``signs``;
-           a masked-out voter abstains (contributes 0 to the tally).
-    Ties resolve to +1 (consistent with ``sgn``).
+    mask:  optional per-voter weights broadcastable to ``signs`` --
+           {0,1} masks or nonnegative integer data shares ``|D_qk|``
+           (the weighted popcount vote); weight 0 abstains (contributes
+           0 to the tally).
+    Ties resolve to +1 (consistent with ``sgn``); an empty quorum (all
+    weights 0) abstains entirely: vote 0.
     """
     tally = signs.astype(jnp.int32)
-    if mask is not None:
-        m = jnp.asarray(mask)
-        if m.ndim < tally.ndim:   # [K] voter mask -> broadcast over leaf
-            m = m.reshape(m.shape + (1,) * (tally.ndim - m.ndim))
-        tally = tally * m.astype(jnp.int32)
-    return sgn(jnp.sum(tally, axis=axis).astype(jnp.float32))
+    if mask is None:
+        return sgn(jnp.sum(tally, axis=axis).astype(jnp.float32))
+    m = jnp.asarray(mask)
+    if m.ndim < tally.ndim:   # [K] voter weights -> broadcast over leaf
+        m = m.reshape(m.shape + (1,) * (tally.ndim - m.ndim))
+    m = m.astype(jnp.int32)
+    vote = sgn(jnp.sum(tally * m, axis=axis).astype(jnp.float32))
+    n_eff = jnp.sum(m, axis=axis)
+    return jnp.where(n_eff > 0, vote, jnp.int8(0))
 
 
 def majority_vote_packed(words: jax.Array, n: int,
                          mask: jax.Array | None = None) -> jax.Array:
     """Majority vote from bit-packed per-voter words.
 
-    words: (K, ceil(n/32)) uint32 -- one packed sign row per voter.
+    words: (K, ceil(n/32)) uint32 -- one packed sign row per voter;
+    mask: optional (K,) {0,1} voter mask or integer vote weights.
     Returns (n,) int8 vote.  Equivalent to
     ``majority_vote(unpack_signs(words, n), mask, axis=0)`` but computed via
     bit-plane popcount (this is the faithful "edge receives K one-bit
-    uplinks and votes" path).
+    uplinks and votes" path); weighted tallies and the empty-quorum
+    abstention follow the same conventions.
     """
     shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
     bits = (words[..., None] >> shifts) & jnp.uint32(1)      # (K, w, 32)
@@ -106,7 +122,10 @@ def majority_vote_packed(words: jax.Array, n: int,
         pos = jnp.sum(bits, axis=0).astype(jnp.int32)
         k_eff = words.shape[0]
     # vote = sgn(2*pos - k_eff); ties (2*pos == k_eff) -> +1.
-    return jnp.where(2 * pos >= k_eff, jnp.int8(1), jnp.int8(-1))
+    vote = jnp.where(2 * pos >= k_eff, jnp.int8(1), jnp.int8(-1))
+    if mask is not None:
+        vote = jnp.where(k_eff > 0, vote, jnp.int8(0))
+    return vote
 
 
 def ternary_quantize(x: jax.Array, rng: jax.Array) -> jax.Array:

@@ -53,6 +53,14 @@ class Topology:
         """Global batch laid out as [P, D, local_b, ...]."""
         return P(self.pod_axis, self.data_axis, *rest)
 
+    def client_spec(self, *rest) -> P:
+        """Per-(edge, device, virtual-client) state: [P, D, K, ...].
+
+        The K virtual clients of a physical slice (``core.clients``)
+        live unsharded on their slice; merging them into the voter axis
+        ([P, D*K, ...] under :meth:`dev_spec`) is a local reshape."""
+        return P(self.pod_axis, self.data_axis, None, *rest)
+
     def sharding(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 

@@ -99,35 +99,70 @@ SIGN_TRANSPORTS = ("ag_packed", "ar_int8", "fused")
 
 
 def _mask_bcast(mask: jax.Array | None, ndim_leaf: int):
-    """[P, D] voter mask -> broadcastable to [P, D, *leaf]."""
+    """[P, D] voter mask/weights -> broadcastable to [P, D, *leaf]."""
     if mask is None:
         return None
     return mask.reshape(mask.shape + (1,) * ndim_leaf)
 
 
-def vote_ar_int8(topo: Topology, s_dev: jax.Array,
-                 mask: jax.Array | None) -> jax.Array:
-    """sgn(sum_k s_k) via an integer tally reduction over the device axis.
+def _tally_acc(weight_bound: int):
+    """Smallest int dtype holding a tally of range ``weight_bound``
+    (the weighted-vote generalization of the PR 1 D>127 promotion:
+    promote on ``sum(w)``, not on the voter count)."""
+    if weight_bound <= 127:
+        return jnp.int8
+    if weight_bound <= 32767:
+        return jnp.int16
+    return jnp.int32
 
-    The tally rides the wire in int8 while |tally| <= D <= 127 fits; more
-    voters silently wrapped before, so D > 127 now upcasts to int16
-    (regression-tested).
+
+def vote_ar_int8(topo: Topology, s_dev: jax.Array,
+                 mask: jax.Array | None,
+                 weight_bound: int | None = None) -> jax.Array:
+    """sgn(sum_k w_k s_k) via an integer tally reduction over the device
+    axis.
+
+    mask: optional [P, D] voter mask OR nonnegative integer vote weights
+    (``core.clients`` data shares; weight 0 abstains, and an edge whose
+    whole quorum abstains returns vote 0).  The tally rides the wire in
+    int8 while its range ``sum(w) <= 127`` fits (unit weights: the voter
+    count D); wider ranges promote to int16/int32.  ``weight_bound`` is
+    the *static* per-edge range ``max_q sum_k w_qk`` -- required for
+    weighted masks (traced values cannot pick dtypes); ``None`` means
+    unit weights and reproduces the original ``D > 127`` promotion rule
+    (regression-tested).  Passing an integer-dtype weight array without
+    a bound raises -- silently defaulting to the voter count would
+    re-open the wrap this rule exists to prevent.
     """
-    acc = jnp.int8 if s_dev.shape[1] <= 127 else jnp.int16
+    if (weight_bound is None and mask is not None
+            and jnp.issubdtype(mask.dtype, jnp.integer)):
+        raise ValueError(
+            "vote_ar_int8: integer vote weights need an explicit static "
+            "weight_bound (max per-edge sum(w)) to size the tally dtype; "
+            "the voter-count default only covers {0,1} masks")
+    bound = weight_bound if weight_bound is not None else s_dev.shape[1]
+    acc = _tally_acc(bound)
     tally = s_dev.astype(acc)
     m = _mask_bcast(mask, s_dev.ndim - 2)
     if m is not None:
         tally = tally * m.astype(acc)
     tally = jnp.sum(tally, axis=1, dtype=acc)                  # [P, *leaf]
     # with abstentions the tie rule is 2*pos >= n_eff  <=>  tally >= 0
-    return signs.sgn(tally.astype(jnp.int32))
+    vote = signs.sgn(tally.astype(jnp.int32))
+    if mask is not None:
+        n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)
+        n_eff = n_eff.reshape((-1,) + (1,) * (vote.ndim - 1))
+        vote = jnp.where(n_eff > 0, vote, jnp.int8(0))
+    return vote
 
 
 def vote_ag_packed(topo: Topology, s_dev: jax.Array,
                    mask: jax.Array | None, leaf_spec: P) -> jax.Array:
     """Bit-packed all-gather + local popcount vote (1 bit/coord wire).
 
-    s_dev: [P, D, *leaf] int8 signs; leaf minor dim % 32 == 0 required.
+    s_dev: [P, D, *leaf] int8 signs; leaf minor dim % 32 == 0 required;
+    mask: optional [P, D] voter mask or integer vote weights (weighted
+    popcount; an empty quorum abstains -> vote 0).
     The packed words are constrained to be replicated along ``data`` --
     that resharding is the all-gather whose operand is 1/32 the int8 tally
     (and 1/256 the fp32 gradient) -- then every chip votes locally.
@@ -143,14 +178,19 @@ def vote_ag_packed(topo: Topology, s_dev: jax.Array,
     bits = (words[..., None] >> shifts) & jnp.uint32(1)        # [P,D,*l,w,32]
     bits = bits.astype(jnp.int8)
     if mask is not None:
+        # mask may carry integer vote weights (weighted popcount): the
+        # per-voter product runs in int32 so weights cannot wrap
         m = _mask_bcast(mask, bits.ndim - 2)
-        pos = jnp.sum(bits * m.astype(jnp.int8), axis=1, dtype=jnp.int32)
+        pos = jnp.sum(bits.astype(jnp.int32) * m.astype(jnp.int32),
+                      axis=1, dtype=jnp.int32)
         n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)
         n_eff = n_eff.reshape((-1,) + (1,) * (pos.ndim - 1))
     else:
         pos = jnp.sum(bits, axis=1, dtype=jnp.int32)           # [P,*l,w,32]
         n_eff = s_dev.shape[1]
     vote = jnp.where(2 * pos >= n_eff, jnp.int8(1), jnp.int8(-1))
+    if mask is not None:   # empty quorum abstains
+        vote = jnp.where(n_eff > 0, vote, jnp.int8(0))
     return vote.reshape(s_dev.shape[:1] + s_dev.shape[2:])     # [P, *leaf]
 
 
@@ -163,7 +203,12 @@ _UNROLL_VOTERS = 64     # static unroll bound for the popcount accumulation
 
 def _popcount_vote_words(words: jax.Array, mask: jax.Array | None,
                          n_dev: int) -> jax.Array:
-    """[P, D, W] packed words (+ [P, D] mask) -> [P, W*32] int8 vote.
+    """[P, D, W] packed words (+ [P, D] mask/weights) -> [P, W*32] int8 vote.
+
+    ``mask`` may carry integer vote weights (the weighted popcount of
+    ``core.clients``): the per-voter bit-plane is scaled by its weight
+    in int32 and the tie rule compares against the participating weight
+    sum; an empty quorum abstains (vote 0).
 
     For small static D the voter axis is unrolled into an add chain of
     per-voter unpacks, so the [P, D, W, 32] bit tensor (an 8x HBM blow-up
@@ -187,17 +232,20 @@ def _popcount_vote_words(words: jax.Array, mask: jax.Array | None,
             pos = b if pos is None else pos + b
     else:
         bits = (words[..., None] >> shifts) & jnp.uint32(1)    # [P,D,W,32]
-        bits = bits.astype(jnp.int8)
         if mask is not None:
-            m = mask.astype(jnp.int8)[:, :, None, None]
-            pos = jnp.sum(bits * m, axis=1, dtype=jnp.int32)
+            m = mask.astype(jnp.int32)[:, :, None, None]
+            pos = jnp.sum(bits.astype(jnp.int32) * m, axis=1,
+                          dtype=jnp.int32)
         else:
-            pos = jnp.sum(bits, axis=1, dtype=jnp.int32)       # [P,W,32]
+            pos = jnp.sum(bits.astype(jnp.int8), axis=1,
+                          dtype=jnp.int32)                     # [P,W,32]
     if mask is not None:
         n_eff = jnp.sum(mask.astype(jnp.int32), axis=1)[:, None, None]
     else:
         n_eff = n_dev
     vote = jnp.where(2 * pos >= n_eff, jnp.int8(1), jnp.int8(-1))
+    if mask is not None:   # empty quorum abstains
+        vote = jnp.where(n_eff > 0, vote, jnp.int8(0))
     return vote.reshape(vote.shape[0], -1)                     # [P, W*32]
 
 
@@ -290,7 +338,6 @@ def _fused_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
     mode = kops.fused_kernel_mode(topo.mesh.size, shard_mapped=True)
     use_kernel = mode in ("pallas", "interpret")
     interpret = mode == "interpret"
-    n_dev = topo.devices_per_pod
     want_update = v_buf is not None
     fold_mu = (want_update and use_kernel and mu_static is not None
                and v_buf.dtype == jnp.float32)
@@ -344,7 +391,9 @@ def _fused_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
                 words, None, m_l, -1.0, interpret=interpret
             ).astype(jnp.int8)
         else:
-            vote = _popcount_vote_words(words, m_l, n_dev)
+            # post-gather the voter axis holds every (virtual) client:
+            # its extent is the correct unmasked quorum size
+            vote = _popcount_vote_words(words, m_l, words.shape[1])
         if want_update:
             return v_l - kw["mu"] * vote.astype(v_l.dtype)
         return flatbuf.unflatten_tree(bucket, vote, batch_dims=1,
@@ -365,8 +414,11 @@ def fused_sign_vote(topo: Topology, u_dev, delta=None, rho: float = 0.0,
     """Whole-model fused sign transport: pytree in, vote pytree out.
 
     u_dev: pytree of [P, D, *leaf] pre-sign directions (gradients after
-    momentum/EF); delta: optional pytree of [P, *leaf] DC corrections,
-    fused pre-sign as ``u + rho * delta`` exactly like the per-leaf path.
+    momentum/EF; the voter axis may be the merged virtual-client axis
+    [P, D*K, *leaf] of ``core.clients``); delta: optional pytree of
+    [P, *leaf] DC corrections, fused pre-sign as ``u + rho * delta``
+    exactly like the per-leaf path; mask: optional [P, D] voter mask or
+    integer vote weights (weighted popcount, empty quorum abstains).
     Returns the per-pod vote pytree ([P, *leaf] int8), bit-identical to
     ``ag_packed``/``ar_int8`` applied leaf-wise (ties -> +1).
 
@@ -407,8 +459,11 @@ def fused_sign_vote_update(topo: Topology, layout: flatbuf.FlatLayout,
                            mu_static: float | None = None) -> jax.Array:
     """Flat-state fused transport: ``v_buf <- v_buf - mu * vote`` whole-model.
 
-    u_dev: pytree of [P, D, *leaf] pre-sign directions (uniform dtype);
-    delta_buf: optional [P, n_pad] DC correction buffer (delta dtype);
+    u_dev: pytree of [P, D, *leaf] pre-sign directions (uniform dtype;
+    D may be the merged virtual-client axis D*K); delta_buf: optional
+    [P, n_pad] DC correction buffer (delta dtype); mask: optional
+    [P, D] voter mask or integer vote weights (weighted popcount, empty
+    quorum abstains -> that edge's buffer is untouched this step);
     v_buf: [P, n_pad] master buffer; mu: traced step-size scalar;
     mu_static: the Python value of mu when it is step-independent -- lets
     the Pallas route fold the update into the ``vote_update`` kernel
@@ -452,8 +507,13 @@ def fused_sign_vote_update(topo: Topology, layout: flatbuf.FlatLayout,
 
 def majority_vote_dev(topo: Topology, s_dev: jax.Array,
                       mask: jax.Array | None, transport: str,
-                      leaf_spec: P) -> jax.Array:
+                      leaf_spec: P,
+                      weight_bound: int | None = None) -> jax.Array:
     """Vote [P, D, *leaf] -> [P, *leaf]; dispatch on transport + leaf shape.
+
+    ``mask`` may carry integer vote weights (see the per-transport
+    docs); ``weight_bound`` is the static per-edge tally range for the
+    int-tally transport's dtype promotion (None = unit weights).
 
     Per-leaf callers (FSDP lift) route ``fused`` to ``ag_packed`` -- the
     flat-buffer chain only pays off when the whole tree is bucketized.
@@ -461,7 +521,7 @@ def majority_vote_dev(topo: Topology, s_dev: jax.Array,
     if (transport in ("ag_packed", "fused")
             and s_dev.shape[-1] % PACK == 0):
         return vote_ag_packed(topo, s_dev, mask, leaf_spec)
-    return vote_ar_int8(topo, s_dev, mask)
+    return vote_ar_int8(topo, s_dev, mask, weight_bound=weight_bound)
 
 
 def weighted_mean_dev(topo: Topology, g_dev: jax.Array,

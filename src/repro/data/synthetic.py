@@ -29,6 +29,14 @@ class LMStreamCfg:
     seed: int = 0
     skew: float = 1.2          # Zipf exponent of the base distribution
     hetero: float = 1.0        # 0 = IID edges, 1 = fully per-edge skewed
+    clients_per_device: int = 1  # K virtual clients per slice: the train
+                                 # step carves each device batch into K
+                                 # contiguous per-client shards
+                                 # (core.clients.carve_batch), so
+                                 # batch_per_device must divide by K;
+                                 # within-edge clients stay IID (the
+                                 # paper's setting -- heterogeneity is
+                                 # inter-edge)
     frames: int = 0            # audio stub frontend
     frontend_dim: int = 0
     n_patches: int = 0         # vlm stub frontend
@@ -48,7 +56,16 @@ def _edge_logits(cfg: LMStreamCfg) -> np.ndarray:
 
 
 def make_stream(cfg: LMStreamCfg):
-    """Returns batch_at(step) -> batch pytree of [P, D, b, ...]."""
+    """Returns batch_at(step) -> batch pytree of [P, D, b, ...].
+
+    The stream always emits physical-slice batches; virtual-client
+    carving is the train step's local reshape.  Validates the carve
+    contract up front so a bad K fails at stream construction, not
+    steps into a jitted reshape error."""
+    if cfg.batch_per_device % cfg.clients_per_device:
+        raise ValueError(
+            f"batch_per_device={cfg.batch_per_device} does not divide "
+            f"into {cfg.clients_per_device} virtual clients per device")
     logits = jnp.asarray(_edge_logits(cfg))
 
     def batch_at(step: int):

@@ -216,9 +216,12 @@ def fused_vote_update_words(words: jax.Array, v_buf: jax.Array | None,
     """Edge-side half: packed voter words -> vote (+ optional update).
 
     words: [P, D, n_words] uint32 (all D voters' payloads, e.g. after
-    the data-axis gather); v_buf: [P, n_pad] float master buffer, or
-    None to compute a pure vote (v = 0, mu = -1 makes the fused update
-    emit exactly ``MajorityVote``); mask: [P, D] voter mask or None.
+    the data-axis gather; D may be the merged virtual-client axis D*K);
+    v_buf: [P, n_pad] float master buffer, or None to compute a pure
+    vote (v = 0, mu = -1 makes the fused update emit exactly
+    ``MajorityVote``); mask: [P, D] voter mask, nonnegative integer
+    vote weights (weighted popcount; an empty quorum abstains and
+    leaves v untouched), or None.
     ONE ``vote_update`` read-modify-write per pod over the whole-model
     packed-word buffer.
     """

@@ -22,7 +22,11 @@ def sign_pack_ref(g: jax.Array, delta: jax.Array | None, rho: float
 
 def vote_update_ref(packed: jax.Array, v: jax.Array, mu: float,
                     mask: jax.Array | None = None) -> jax.Array:
-    """packed: [K, R, C/32] uint32; v: [R, C] f32 -> v - mu * vote."""
+    """packed: [K, R, C/32] uint32; v: [R, C] f32 -> v - mu * vote.
+
+    mask: optional [K] voter mask or integer vote weights -- the
+    weighted-popcount / empty-quorum-abstains conventions come from
+    ``signs.majority_vote_packed`` (matching the Pallas kernel)."""
     k, r, w = packed.shape
     c = v.shape[-1]
     vote = jax.vmap(

@@ -6,6 +6,12 @@ popcount-votes per coordinate (ties -> +1, abstaining voters masked), and
 applies the sign-descent update in a single read-modify-write of v --
 one HBM pass over the model instead of three (unpack, vote, update).
 
+The voter ``mask`` generalizes to nonnegative integer vote weights (the
+``core.clients`` data shares |D_qk|): each bit-plane is scaled by its
+weight in the int32 tally, the tie rule compares against the
+participating weight sum, and an edge whose whole quorum abstains (all
+weights 0) votes 0 -- the read-modify-write then leaves v unchanged.
+
 Tiling: grid over [R/BR, C/BC]; per step the kernel reads a (K, BR, BC/32)
 uint32 slab + a (BR, BC) f32 block of v (VMEM ~2 MB at K=16).
 
@@ -35,13 +41,15 @@ def _vote_update_kernel(p_ref, v_ref, m_ref, o_ref, *, mu: float,
     shifts = jnp.arange(PACK, dtype=jnp.uint32)
     bits = ((words[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
     if m_ref is not None:
-        m = m_ref[...].astype(jnp.int32)            # [K]
+        m = m_ref[...].astype(jnp.int32)            # [K] mask or weights
         pos = jnp.sum(bits * m[:, None, None, None], axis=0)
         n_eff = jnp.sum(m)
     else:
         pos = jnp.sum(bits, axis=0)                 # [BR, BC/32, 32]
         n_eff = n_voters
     vote = jnp.where(2 * pos >= n_eff, 1.0, -1.0).astype(jnp.float32)
+    if m_ref is not None:   # empty quorum abstains: v is left unchanged
+        vote = jnp.where(n_eff > 0, vote, 0.0).astype(jnp.float32)
     vote = vote.reshape(br, wpb * PACK)
     o_ref[...] = (v_ref[...].astype(jnp.float32) - mu * vote
                   ).astype(o_ref.dtype)

@@ -104,7 +104,8 @@ def analyze(lowered, label, verbose=True, axis_sizes=None,
 
 
 def run_cell(arch_name, shape_name, multi_pod, method, transport,
-             t_e, verbose=True, tag="baseline", state_layout="tree"):
+             t_e, verbose=True, tag="baseline", state_layout="tree",
+             clients=None):
     shape = SHAPES[shape_name]
     cfg = configs.get_config(arch_name)
     ok, why = configs.shape_applicable(cfg, shape)
@@ -124,8 +125,10 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
     n_params = sum(math.prod(a.shape)
                    for a in jax.tree.leaves(built.abstract_params()))
     cell["params"] = n_params
+    from repro.core import clients as vclients
     algo = hier.AlgoConfig(method=method, transport=transport, t_e=t_e,
-                           state_layout=state_layout)
+                           state_layout=state_layout,
+                           clients=clients or vclients.ClientConfig())
     phases = {}
     mesh_tag = "multi" if multi_pod else "single"
     hdir = REPORT_DIR / "hlo"
@@ -161,6 +164,13 @@ def main():
     ap.add_argument("--transport", default="ag_packed")
     ap.add_argument("--state_layout", default="tree",
                     choices=["tree", "flat"])
+    ap.add_argument("--clients_per_device", type=int, default=1,
+                    help="K virtual clients per data slice (per-device "
+                         "batch must divide by K)")
+    ap.add_argument("--participation", default="full",
+                    help="full | bernoulli | fixed (per-round sampled "
+                         "quorum at --participation_rate)")
+    ap.add_argument("--participation_rate", type=float, default=1.0)
     ap.add_argument("--t_e", type=int, default=15)
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--quiet", action="store_true")
@@ -183,10 +193,16 @@ def main():
                       f"[{args.method}/{args.transport}] ==", flush=True)
                 t0 = time.time()
                 try:
+                    from repro.core import clients as vclients
+                    cc = vclients.ClientConfig(
+                        count=args.clients_per_device,
+                        participation=args.participation,
+                        rate=args.participation_rate)
                     cell = run_cell(arch, shape, multi, args.method,
                                     args.transport, args.t_e,
                                     verbose=not args.quiet, tag=args.tag,
-                                    state_layout=args.state_layout)
+                                    state_layout=args.state_layout,
+                                    clients=cc)
                     cell["wall_s"] = round(time.time() - t0, 1)
                     out.write_text(json.dumps(cell, indent=1))
                     print(f"   OK ({cell['wall_s']}s) -> {out.name}",

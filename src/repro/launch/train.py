@@ -24,6 +24,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint import store
 from repro.checkpoint.async_ckpt import AsyncSaver
+from repro.core import clients as vclients
 from repro.core import hier, votes
 from repro.core.topology import Topology, single_device_topology
 from repro.data import synthetic
@@ -61,7 +62,7 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
         vocab=cfg.vocab, seq_len=run.seq_len,
         batch_per_device=run.batch_per_device, pods=topo.pods,
         devices_per_pod=topo.devices_per_pod, seed=run.seed,
-        hetero=run.hetero,
+        hetero=run.hetero, clients_per_device=algo.clients.count,
         frames=cfg.encoder_frames if cfg.family in ("encdec", "audio")
         else 0,
         frontend_dim=cfg.frontend_dim, n_patches=cfg.n_patches,
@@ -147,6 +148,15 @@ def main():
                          "buffer (whole-model fused update)")
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--rho", type=float, default=0.2)
+    ap.add_argument("--clients_per_device", type=int, default=1,
+                    help="K virtual clients per data slice (the device "
+                         "batch is carved into K per-client shards)")
+    ap.add_argument("--participation", default="full",
+                    choices=list(vclients.PARTICIPATION_MODES),
+                    help="per-round client sampling (pinned to "
+                         "(seed, round); bernoulli/fixed use --participation_rate)")
+    ap.add_argument("--participation_rate", type=float, default=1.0)
+    ap.add_argument("--participation_seed", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt", default=None)
@@ -164,6 +174,11 @@ def main():
     algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
                            t_e=args.t_e, transport=args.transport,
                            state_layout=args.state_layout,
+                           clients=vclients.ClientConfig(
+                               count=args.clients_per_device,
+                               participation=args.participation,
+                               rate=args.participation_rate,
+                               seed=args.participation_seed),
                            compute_dtype=jnp.float32 if args.smoke
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,

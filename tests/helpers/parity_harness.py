@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import clients as vclients
 from repro.core import hier, ref_fed
 from repro.core.topology import Topology
 
@@ -138,26 +139,58 @@ def aggregate(params, edge_weights):
         params)
 
 
-def run_oracle(problem, method, mask=None):
-    """ref_fed transcription of Algorithms 1/2 on the same trajectory."""
+def run_oracle(problem, method, mask=None, clients=None):
+    """ref_fed transcription of Algorithms 1/2 on the same trajectory.
+
+    With an active ``clients`` ClientConfig the oracle hosts the same
+    K virtual clients per slice as the distributed step: client c of
+    slice d is oracle client d*K + c, its batch is the matching
+    contiguous shard of the slice batch, the per-round participation
+    mask comes from the SAME pinned (seed, round) scheme, |D_qk| weight
+    the vote, and anchor/mean shares reweight to the participants."""
     pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
     cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
                              method=method)
+    cc = clients or vclients.ClientConfig()
+    k_c = cc.count
     state = ref_fed.init_state(problem["w0"], pods)
     grad_fn = lambda p, b, r: jax.grad(loss_fn)(p, b, r)
     xs, ys = problem["xs"], problem["ys"]
+    b_cl = xs.shape[3] // k_c          # per-client batch rows
+
+    def shard(a, s, q, dv):            # client dv's rows of step s
+        d, c = divmod(dv, k_c)
+        return a[s, q, d, c * b_cl:(c + 1) * b_cl]
+
+    w_int = cc.weight_array(pods, devs).reshape(pods, devs * k_c)
+    vote_w = [list(map(int, w_int[q])) for q in range(pods)]
+    # unnormalized per-client shares: physical dev weight x |D_qk|
+    dev_w = [[w_int[q][dv] * (1.0 / devs) for dv in range(devs * k_c)]
+             for q in range(pods)]
     for t in range(problem["rounds"]):
-        batches = [[[{"x": xs[t * t_e + tau, q, k],
-                      "y": ys[t * t_e + tau, q, k]}
-                     for tau in range(t_e)] for k in range(devs)]
+        batches = [[[{"x": shard(xs, t * t_e + tau, q, dv),
+                      "y": shard(ys, t * t_e + tau, q, dv)}
+                     for tau in range(t_e)] for dv in range(devs * k_c)]
                    for q in range(pods)]
-        anchors = [[{"x": xs[t * t_e, q, k], "y": ys[t * t_e, q, k]}
-                    for k in range(devs)] for q in range(pods)]
+        anchors = [[{"x": shard(xs, t * t_e, q, dv),
+                     "y": shard(ys, t * t_e, q, dv)}
+                    for dv in range(devs * k_c)] for q in range(pods)]
+        mask_t = None if mask is None else np.asarray(mask, bool)
+        if cc.active:
+            part = np.asarray(vclients.participation_mask(
+                cc, pods, devs, t)) > 0.5                    # [P, D, K]
+            if mask_t is not None:
+                part = part & mask_t[:, :, None]
+            mask_t = part.reshape(pods, devs * k_c)
         state = ref_fed.global_round(
             state, cfg, grad_fn, batches, anchors,
-            [1.0 / pods] * pods, [[1.0 / devs] * devs] * pods,
+            [1.0 / pods] * pods,
+            dev_w if cc.active else [[1.0 / devs] * devs] * pods,
             jax.random.PRNGKey(1),
-            device_mask=None if mask is None else mask)
+            device_mask=None if mask_t is None else
+            [list(row) for row in mask_t],
+            vote_weights=vote_w if cc.active else None,
+            reweight_participation=cc.active)
     return jax.tree.map(np.asarray, state.w)
 
 
@@ -165,6 +198,43 @@ def run_oracle(problem, method, mask=None):
 
 SIGN_TRANSPORTS = ("ag_packed", "ar_int8", "fused")
 LAYOUTS = ("tree", "flat")
+
+# virtual-client axis: K x participation regime (ISSUE 5); "full" uses
+# explicit unit weights so the ACTIVE machinery runs (the K=1 cell is
+# then the headline bitwise-equals-legacy migration check)
+CLIENT_REGIMES = ("full", "sampled", "fixed", "weighted",
+                  "sampled_weighted")
+
+
+def _share_weights(pods, devs, k):
+    """Deterministic unequal |D_qk| in 1..5 (static nested tuples)."""
+    return tuple(tuple(tuple((q + 2 * d + 3 * c) % 5 + 1
+                             for c in range(k)) for d in range(devs))
+                 for q in range(pods))
+
+
+def client_cfg(pods: int, devs: int, k: int, regime: str,
+               seed: int = 11) -> vclients.ClientConfig:
+    """The shared ClientConfig of a (K, participation-regime) cell."""
+    if regime == "full":
+        return vclients.ClientConfig(
+            count=k, weights=tuple(tuple(tuple(1 for _ in range(k))
+                                         for _ in range(devs))
+                                   for _ in range(pods)))
+    if regime == "sampled":
+        return vclients.ClientConfig(count=k, participation="bernoulli",
+                                     rate=0.5, seed=seed)
+    if regime == "fixed":
+        return vclients.ClientConfig(count=k, participation="fixed",
+                                     rate=0.5, seed=seed)
+    if regime == "weighted":
+        return vclients.ClientConfig(count=k,
+                                     weights=_share_weights(pods, devs, k))
+    if regime == "sampled_weighted":
+        return vclients.ClientConfig(count=k, participation="bernoulli",
+                                     rate=0.5, seed=seed,
+                                     weights=_share_weights(pods, devs, k))
+    raise ValueError(regime)
 
 
 def matrix_cells():

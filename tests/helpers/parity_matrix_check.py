@@ -72,6 +72,25 @@ for kw in ({"error_feedback": True}, {"momentum": 0.9}):
                 ref, got, f"{kw}/{transport}/{layout}")
     print(f"dc_hier_signsgd  {kw} parity OK")
 
+# ---- virtual clients: K=4 sampled + weighted (tree/flat, fused) -------
+# each physical data slice hosts 4 virtual clients (voter axis 2*4=8),
+# Bernoulli(0.5) per-round participation from the pinned (seed, round)
+# scheme, unequal integer |D_qk| vote weights; the fused transport runs
+# the weighted popcount on the merged client axis under the SHARDED
+# flat layout (model=2) and must stay bitwise vs the per-leaf path
+cc = H.client_cfg(Pn, Dn, 4, "sampled_weighted")
+ref_c, ew = None, None
+for transport, layout in (("ag_packed", "tree"), ("fused", "tree"),
+                          ("fused", "flat"), ("ar_int8", "flat")):
+    got, ew = H.run_hier(topo, problem, "dc_hier_signsgd", transport,
+                         layout, clients=cc)
+    ref_c = got if ref_c is None else ref_c
+    H.assert_trees_equal(ref_c, got, f"clients/{transport}/{layout}")
+oracle = H.run_oracle(problem, "dc_hier_signsgd", clients=cc)
+H.assert_trees_equal(H.aggregate(ref_c, ew), oracle, "clients-oracle",
+                     exact=False, atol=1e-5)
+print("dc_hier_signsgd  K=4 sampled-weighted client cell OK")
+
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
 # cells run the padded-block layout (LeafSlot.shard_pad) and must stay

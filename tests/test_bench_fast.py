@@ -17,6 +17,11 @@ EXPECT_FIG3 = {f"fig3/{tag}/te{te}/{m}"
                for tag in ("iid", "noniid") for te in (5, 15)
                for m in ("hier_signsgd", "dc_hier_signsgd")}
 EXPECT_FIG4 = {f"fig4/rho{r}" for r in (0.0, 0.2, 1.0)}
+# virtual-client scale-out: K=64 clients/device, Bernoulli(0.1)
+# participation -- the nightly row tracking the participating-uplink
+# accounting (uplink scales with sampled K, not the fleet size)
+EXPECT_CLIENTS = {f"clients/K64_p0.1/{m}"
+                  for m in ("hier_signsgd", "dc_hier_signsgd")}
 
 
 def test_fast_profile_is_fast_and_schema_stable(tmp_path):
@@ -39,7 +44,7 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
     assert rows and all(set(row) == {"name", "us_per_call", "derived"}
                         for row in rows)
     names = {row["name"] for row in rows}
-    for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4):
+    for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4, EXPECT_CLIENTS):
         assert expect <= names, expect - names
     by_name = {row["name"]: row for row in rows}
     for name in EXPECT_FIG2 | EXPECT_FIG3 | EXPECT_FIG4:
@@ -47,6 +52,12 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
         assert row["us_per_call"] > 0
         key = "final_acc=" if name.startswith("fig2") else "final_loss="
         assert key in row["derived"], row
+        assert "src=cost_model" in row["derived"], row
+    for name in EXPECT_CLIENTS:
+        row = by_name[name]
+        assert row["us_per_call"] > 0
+        assert "uplink_mbits_round=" in row["derived"], row
+        assert "participants=" in row["derived"], row
         assert "src=cost_model" in row["derived"], row
     # table2 rows ride along unchanged
     assert any(n.startswith("table2/") for n in names)

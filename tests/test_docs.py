@@ -106,6 +106,29 @@ def test_padded_shard_rule_documented():
         assert "replicated / uneven / zero-size" not in text, doc
 
 
+def test_virtual_client_participation_documented():
+    """The virtual-client/participation contract is pinned: the README
+    table lists every sampling mode the config accepts, both docs carry
+    the weighted-popcount + empty-quorum-abstains vote semantics, and
+    the architecture doc records the pinned (seed, round) sampling
+    scheme and the tally-dtype promotion rule."""
+    from repro.core.clients import PARTICIPATION_MODES
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    for mode in PARTICIPATION_MODES:
+        assert f"`{mode}`" in readme, f"README participation table: {mode}"
+    assert "--clients_per_device" in readme
+    for text, name in ((readme, "README"), (arch, "architecture.md")):
+        assert "weighted popcount" in text, name
+        assert "abstains" in text, name
+        assert "sum(w)" in text, name           # tally-range contract
+    assert "splitmix32" in readme and "splitmix32" in arch
+    assert "partition-stable" in arch            # why not jax.random
+    assert "d*K + c" in readme and "d*K + c" in arch  # voter coordinates
+    assert "weight_bound" in arch                # static promotion rule
+    assert "sgn(0) = +1" in readme               # weighted-tie convention
+
+
 def test_readme_tier1_command():
     """The README's verify command matches ROADMAP's tier-1 gate."""
     readme = (ROOT / "README.md").read_text()

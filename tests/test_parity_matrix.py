@@ -7,6 +7,9 @@ through every supported train-step combination:
   * transports: ag_packed | ar_int8 | fused          (sign methods)
   * state layouts: tree | flat
   * regimes: replicated | fsdp  (flat is replicated-only by design)
+  * virtual clients: K in {1, 4} x participation in {full, sampled(0.5),
+    weighted |D_qk|}  (replicated-only; K=1/full/unit-weight must be
+    BITWISE the legacy trajectory -- the migration safety net)
 
 Sign transports and state layouts must agree BITWISE (ties -> +1 by
 construction, update arithmetic per-coordinate identical); the paper
@@ -114,6 +117,131 @@ def test_flat_rejects_fsdp(topo):
                             bundle)
     with pytest.raises(ValueError):
         hier.AlgoConfig(state_layout="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Virtual-client axis: K clients per data slice x participation regime
+# ---------------------------------------------------------------------------
+
+CLIENT_CELLS = [(1, "full"), (1, "sampled"), (4, "full"), (4, "sampled"),
+                (4, "fixed"), (4, "weighted"), (4, "sampled_weighted")]
+
+
+def test_client_k1_equivalence(topo, problem, refs):
+    """HEADLINE migration check: K=1 / full participation / unit
+    weights through the ACTIVE virtual-client machinery (carving,
+    participation mask, weighted popcount, participating shares) is
+    bitwise identical to the legacy cell on every transport x layout.
+    (The inactive default ClientConfig compiles the legacy step
+    verbatim, which the unchanged matrix above already covers.)"""
+    cc = H.client_cfg(1, 1, 1, "full")
+    assert cc.active          # unit weights force the virtual path
+    for method in ("hier_signsgd", "dc_hier_signsgd", "hier_sgd"):
+        ref, _ = _ref(refs, topo, problem, method)
+        transports = (H.SIGN_TRANSPORTS
+                      if method != "hier_sgd" else ("ag_packed",))
+        for transport in transports:
+            for layout in H.LAYOUTS:
+                got, _ = H.run_hier(topo, problem, method, transport,
+                                    layout, clients=cc)
+                H.assert_trees_equal(
+                    ref, got, f"k1-equiv/{method}/{transport}/{layout}")
+
+
+@pytest.mark.parametrize("k,regime", CLIENT_CELLS)
+def test_client_matrix_vs_oracle(topo, problem, k, regime):
+    """Every (K, participation) cell matches the extended ref_fed
+    oracle (same pinned per-round masks, |D_qk| vote weights and
+    participating shares), and the (fused, flat) cell is bitwise
+    identical to the (ag_packed, tree) cell."""
+    cc = H.client_cfg(1, 1, k, regime)
+    ref, ew = H.run_hier(topo, problem, "dc_hier_signsgd", clients=cc)
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", "flat",
+                        clients=cc)
+    H.assert_trees_equal(ref, got, f"clients/K{k}/{regime}/fused-flat")
+    oracle = H.run_oracle(problem, "dc_hier_signsgd", clients=cc)
+    H.assert_trees_equal(H.aggregate(ref, ew), oracle,
+                         f"clients-oracle/K{k}/{regime}", exact=False,
+                         atol=1e-5)
+
+
+def test_client_sampled_weighted_cross_transport(topo, problem):
+    """The hardest cell -- K=4, Bernoulli(0.5) participation, unequal
+    |D_qk| -- is bitwise identical across ALL transports and state
+    layouts (identical pinned masks and weighted tallies everywhere)."""
+    cc = H.client_cfg(1, 1, 4, "sampled_weighted")
+    ref = None
+    for transport in H.SIGN_TRANSPORTS:
+        for layout in H.LAYOUTS:
+            got, _ = H.run_hier(topo, problem, "dc_hier_signsgd",
+                                transport, layout, clients=cc)
+            ref = got if ref is None else ref
+            H.assert_trees_equal(
+                ref, got, f"clients-x/{transport}/{layout}")
+
+
+def test_client_reweighted_mean_vs_oracle(topo, problem):
+    """Full-precision methods reweight the edge mean to the
+    participating shares -- pinned against the oracle's renormalized
+    weighted sum."""
+    cc = H.client_cfg(1, 1, 4, "sampled_weighted")
+    got, ew = H.run_hier(topo, problem, "hier_sgd", clients=cc)
+    oracle = H.run_oracle(problem, "hier_sgd", clients=cc)
+    H.assert_trees_equal(H.aggregate(got, ew), oracle,
+                         "clients-oracle/hier_sgd", exact=False, atol=1e-5)
+
+
+@pytest.mark.parametrize("kw", [{"error_feedback": True},
+                                {"momentum": 0.9}],
+                         ids=["ef", "momentum"])
+def test_client_options_cross_layout(topo, problem, kw):
+    """Beyond-paper options stay transport/layout-invariant under
+    sampled participation too (EF exercises the participation-aware
+    residual: abstaining clients transmitted nothing)."""
+    cc = H.client_cfg(1, 1, 4, "sampled")
+    ref, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "ag_packed",
+                        "tree", clients=cc, **kw)
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused",
+                        "flat", clients=cc, **kw)
+    H.assert_trees_equal(ref, got, f"client-options/{kw}")
+
+
+def test_client_ef_abstaining_carries_residual(topo, problem):
+    """EF semantics under participation: a client masked out of the
+    round transmitted NOTHING, so its residual carries the full
+    direction forward (e' = u) -- not u - scale*sgn(u) as if its sign
+    had been sent.  Forced via the physical straggler mask with the
+    virtual path active: the quorum is empty, so params are untouched
+    and the residual equals the raw per-client gradients."""
+    cc = H.client_cfg(1, 1, 2, "full")
+    algo = H._algo("hier_signsgd", "ag_packed", "tree",
+                   t_e=problem["t_e"], error_feedback=True, clients=cc)
+    init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
+    state = jax.jit(init_fn)(problem["w0"], jax.random.PRNGKey(1))
+    ew = jnp.ones((1,))
+    dw = jnp.ones((1, 1))
+    batch = {"train": {"x": problem["xs"][0], "y": problem["ys"][0]}}
+    st2, _ = jax.jit(step)(state, batch, ew, dw, jnp.zeros((1, 1)))
+    import numpy as np
+    for k in problem["w0"]:   # empty quorum: v_q untouched, bitwise
+        np.testing.assert_array_equal(np.asarray(st2.params[k]),
+                                      np.asarray(state.params[k]))
+    # e' == u: the per-client grads of the carved batch at w0
+    def gfn(c):
+        b = {"x": problem["xs"][0, 0, 0, c * 4:(c + 1) * 4],
+             "y": problem["ys"][0, 0, 0, c * 4:(c + 1) * 4]}
+        return jax.grad(H.loss_fn)(problem["w0"], b, None)
+    for k in problem["w0"]:
+        u = np.stack([np.asarray(gfn(c)[k]) for c in range(2)])[None]
+        np.testing.assert_allclose(np.asarray(st2.ef[k]), u, rtol=2e-6,
+                                   atol=1e-7)
+
+
+def test_clients_reject_fsdp(topo):
+    bundle = H.make_bundle("fsdp")
+    algo = hier.AlgoConfig(clients=H.client_cfg(1, 1, 2, "sampled"))
+    with pytest.raises(ValueError, match="replicated"):
+        hier.make_hier_step(topo, algo, bundle)
 
 
 def _count_vote_updates(topo, problem, layout, monkeypatch):

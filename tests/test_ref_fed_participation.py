@@ -1,0 +1,252 @@
+"""Property suite for the extended ``ref_fed`` oracle: virtual clients,
+per-round participation masks and weighted majority votes.
+
+The oracle is the ground truth of the whole repo, so its new semantics
+are pinned here *independently* of the distributed implementation:
+
+  * unit-weight full-participation arguments reproduce the legacy
+    oracle BITWISE (the migration safety net at the oracle level);
+  * the weighted vote is invariant to permuting the clients within an
+    edge (integer tallies are exactly commutative);
+  * a round in which every client is masked out leaves ``v_q``
+    unchanged (the empty quorum abstains -- vote 0);
+  * weighted ties follow the documented ``sgn(0) = +1`` convention.
+
+Plus the pinned participation-sampling scheme of ``core.clients``: the
+mask of round t is a pure function of (seed, t) -- identical across
+transports, state layouts and the step-within-round, so a checkpoint
+restored mid-round resamples the identical quorum.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clients as vclients
+from repro.core import ref_fed, signs
+
+DIM = 6
+
+
+def _grad_fn(targets):
+    """Deterministic linear grads g_k = w - target_k (rng unused), so
+    trajectories are exactly reproducible and permutation properties
+    are well-defined."""
+    def grad_fn(params, batch, rng):
+        return {"w": params["w"] - targets[batch["k"]]}
+    return grad_fn
+
+
+def _targets(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, DIM)).astype(np.float32))
+
+
+def _round(n_clients, seed, method="hier_signsgd", **kw):
+    """One oracle round over a single edge with n_clients clients."""
+    targets = _targets(n_clients, seed)
+    cfg = ref_fed.HierConfig(mu=1e-2, t_e=3, rho=1.0, method=method)
+    state = ref_fed.init_state({"w": jnp.zeros(DIM)}, 1)
+    batches = [[[{"k": k} for _ in range(cfg.t_e)]
+                for k in range(n_clients)]]
+    anchors = [[{"k": k} for k in range(n_clients)]]
+    dw = kw.pop("device_weights", [[1.0 / n_clients] * n_clients])
+    state = ref_fed.global_round(
+        state, cfg, _grad_fn(targets), batches, anchors, [1.0], dw,
+        jax.random.PRNGKey(0), **kw)
+    return np.asarray(state.w["w"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 5),
+       st.sampled_from(["hier_signsgd", "dc_hier_signsgd", "hier_sgd"]))
+def test_unit_full_participation_equals_legacy_oracle(n, seed, method):
+    """Unit weights + full participation through the NEW argument
+    surface is bitwise the legacy oracle call."""
+    legacy = _round(n, seed, method)
+    grown = _round(
+        n, seed, method,
+        device_mask=[[True] * n],
+        vote_weights=[[1] * n],
+        device_weights=[[1.0 / n] * n],
+        reweight_participation=True)
+    np.testing.assert_array_equal(legacy, grown)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 7))
+def test_vote_invariant_to_client_permutation(n, seed):
+    """Permuting the clients of an edge (batches, weights, mask
+    together) cannot change the weighted vote: integer tallies are
+    exactly commutative."""
+    rng = np.random.default_rng(seed + 100)
+    perm = rng.permutation(n)
+    weights = [int(w) for w in rng.integers(1, 6, n)]
+    mask = [bool(b) for b in rng.integers(0, 2, n)]
+    targets = _targets(n, seed)
+
+    def run(order):
+        cfg = ref_fed.HierConfig(mu=1e-2, t_e=3, method="hier_signsgd")
+        state = ref_fed.init_state({"w": jnp.zeros(DIM)}, 1)
+        batches = [[[{"k": int(k)} for _ in range(cfg.t_e)]
+                    for k in order]]
+        anchors = [[{"k": int(k)} for k in order]]
+        state = ref_fed.global_round(
+            state, cfg, _grad_fn(targets), batches, anchors, [1.0],
+            [[1.0 * weights[k] for k in order]], jax.random.PRNGKey(0),
+            device_mask=[[mask[k] for k in order]],
+            vote_weights=[[weights[k] for k in order]],
+            reweight_participation=True)
+        return np.asarray(state.w["w"])
+
+    np.testing.assert_array_equal(run(range(n)), run(perm))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 5),
+       st.sampled_from(["hier_signsgd", "dc_hier_signsgd"]))
+def test_all_clients_masked_round_is_identity(n, seed, method):
+    """An edge whose whole quorum abstains takes NO local steps: the
+    empty vote is 0, so v_q (here: the single-edge w) is unchanged."""
+    got = _round(n, seed, method,
+                 device_mask=[[False] * n],
+                 vote_weights=[[1] * n],
+                 reweight_participation=True)
+    np.testing.assert_array_equal(got, np.zeros(DIM, np.float32))
+
+
+def test_weighted_ties_follow_sgn_zero_convention():
+    """Weighted tallies that cancel exactly vote +1 (sgn(0) = +1); a
+    quorum of weight zero abstains (vote 0) instead."""
+    s = jnp.asarray([[1], [-1], [-1]], jnp.int8)        # 3 voters, 1 coord
+    # 2*(+1) + 1*(-1) + 1*(-1) = 0 -> tie -> +1
+    assert int(signs.majority_vote(s, jnp.asarray([2, 1, 1]))[0]) == 1
+    # 1*(+1) + 3*(-1) + 0*(-1) = -2 -> -1 (masked voter carries no weight)
+    assert int(signs.majority_vote(s, jnp.asarray([1, 3, 0]))[0]) == -1
+    # empty quorum -> abstain
+    assert int(signs.majority_vote(s, jnp.asarray([0, 0, 0]))[0]) == 0
+    # same conventions through the packed bit-plane path
+    words = signs.pack_signs(s.reshape(3, 1, 1).repeat(32, axis=2)
+                             .reshape(3, 32))
+    np.testing.assert_array_equal(
+        np.asarray(signs.majority_vote_packed(words, 32,
+                                              jnp.asarray([2, 1, 1]))), 1)
+    np.testing.assert_array_equal(
+        np.asarray(signs.majority_vote_packed(words, 32,
+                                              jnp.asarray([0, 0, 0]))), 0)
+    # and through a full oracle round: two equal-weight clients with
+    # opposite gradient signs tie every coordinate -> vote +1 -> w
+    # moves by exactly -mu per step
+    targets = jnp.stack([jnp.full((DIM,), 1.0), jnp.full((DIM,), -1.0)])
+    cfg = ref_fed.HierConfig(mu=1e-2, t_e=1, method="hier_signsgd")
+    state = ref_fed.init_state({"w": jnp.zeros(DIM)}, 1)
+    state = ref_fed.global_round(
+        state, cfg, _grad_fn(targets), [[[{"k": 0}], [{"k": 1}]]],
+        [[{"k": 0}, {"k": 1}]], [1.0], [[0.5, 0.5]],
+        jax.random.PRNGKey(0), device_mask=[[True, True]],
+        vote_weights=[[3, 3]], reweight_participation=True)
+    np.testing.assert_allclose(np.asarray(state.w["w"]),
+                               np.full(DIM, -1e-2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pinned participation sampling (core.clients)
+# ---------------------------------------------------------------------------
+
+def _splitmix32_np(x):
+    """Independent numpy transcription of the pinned counter hash."""
+    x = np.uint32(x)
+    with np.errstate(over="ignore"):
+        x = np.uint32((np.uint32(x ^ (x >> np.uint32(16)))
+                       * np.uint32(0x7FEB352D)))
+        x = np.uint32((np.uint32(x ^ (x >> np.uint32(15)))
+                       * np.uint32(0x846CA68B)))
+    return np.uint32(x ^ (x >> np.uint32(16)))
+
+
+def _mask_np(seed, rate, pods, devs, k, t):
+    idx = np.arange(pods * devs * k, dtype=np.uint32)
+    words = _splitmix32_np(
+        idx ^ _splitmix32_np(np.uint32(seed) ^ _splitmix32_np(np.uint32(t))))
+    return ((words >> np.uint32(8))
+            < np.uint32(round(rate * (1 << 24)))).astype(np.float32
+                                                         ).reshape(pods,
+                                                                   devs, k)
+
+
+def test_participation_mask_scheme_is_pinned():
+    """The mask of round t is EXACTLY the splitmix32 counter hash of
+    (seed, t, client index) -- the checkpoint contract, transcribed
+    here independently in numpy: any change to the derivation breaks
+    mid-round restores and must fail this test.  (The scheme is
+    deliberately NOT jax.random: threefry is not partition-stable in
+    this jax version, so a sharded train step would draw a different
+    quorum than the eager oracle.)"""
+    cfg = vclients.ClientConfig(count=3, participation="bernoulli",
+                                rate=0.4, seed=9)
+    for t in (0, 1, 7):
+        ref = _mask_np(9, 0.4, 2, 2, 3, t)
+        got = vclients.participation_mask(cfg, 2, 2, t)
+        np.testing.assert_array_equal(np.asarray(got), ref)
+        # pure function: recomputation is identical (restore mid-round)
+        np.testing.assert_array_equal(
+            np.asarray(vclients.participation_mask(cfg, 2, 2, t)),
+            np.asarray(got))
+        # ... and jit/sharding cannot perturb it (elementwise uint32
+        # ops over an iota partition exactly)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(vclients.participation_mask,
+                               static_argnums=(0, 1, 2))(cfg, 2, 2,
+                                                         jnp.asarray(t))),
+            ref)
+    fixed = vclients.ClientConfig(count=4, participation="fixed",
+                                  rate=0.5, seed=9)
+    for t in (0, 3):
+        m = np.asarray(vclients.participation_mask(fixed, 2, 2, t))
+        assert m.shape == (2, 2, 4)
+        # exactly round(rate * D * K) participants per edge, every round
+        np.testing.assert_array_equal(m.reshape(2, -1).sum(axis=1), 4)
+        # the m smallest hash words of the edge vote
+        words = np.asarray(vclients._client_words(fixed, 2, 2, t)
+                           ).reshape(2, 8)
+        for q in range(2):
+            chosen = np.sort(np.argsort(words[q], kind="stable")[:4])
+            np.testing.assert_array_equal(
+                np.flatnonzero(m.reshape(2, 8)[q]), chosen)
+
+
+def test_participation_mask_depends_only_on_round():
+    """Inside the train step the mask key is step // T_E: every local
+    step of a round (and a restart from a mid-round checkpoint) draws
+    the identical quorum; different rounds resample."""
+    cfg = vclients.ClientConfig(count=8, participation="bernoulli",
+                                rate=0.5, seed=3)
+    t_e = 5
+
+    @jax.jit
+    def mask_at(step):
+        return vclients.participation_mask(cfg, 1, 2, step // t_e)
+
+    r0 = np.asarray(mask_at(jnp.asarray(0)))
+    for step in (1, 4):
+        np.testing.assert_array_equal(np.asarray(mask_at(jnp.asarray(step))),
+                                      r0)
+    r1 = np.asarray(mask_at(jnp.asarray(t_e)))
+    assert not np.array_equal(r0, r1)
+
+
+def test_client_config_validation():
+    import pytest
+    with pytest.raises(ValueError, match="participation"):
+        vclients.ClientConfig(participation="sometimes")
+    with pytest.raises(ValueError, match="rate"):
+        vclients.ClientConfig(participation="bernoulli", rate=0.0)
+    with pytest.raises(ValueError, match="clients per device"):
+        vclients.ClientConfig(count=0)
+    with pytest.raises(ValueError, match="nonnegative"):
+        vclients.ClientConfig(count=1, weights=(((-1,),),))
+    with pytest.raises(ValueError, match="shape"):
+        vclients.ClientConfig(count=2, weights=(((1,),),)).weight_array(1, 1)
+    cfg = vclients.ClientConfig(count=2, weights=(((3, 4), (1, 2)),))
+    assert cfg.active and cfg.weight_bound(1, 2) == 10
+    assert not vclients.ClientConfig().active

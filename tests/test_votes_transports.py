@@ -68,6 +68,57 @@ def test_ar_int8_upcasts_beyond_127_voters(topo):
         np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(ref_p))
 
 
+def test_weighted_vote_transports_identical(topo):
+    """Integer |D_qk| vote weights: all three transports compute the
+    same weighted popcount as the signs-level oracle, and an edge whose
+    whole quorum carries weight 0 abstains (vote 0)."""
+    rng = np.random.default_rng(11)
+    s = jnp.asarray(rng.choice([-1, 1], size=(3, 5, 64)), jnp.int8)
+    w = jnp.asarray(rng.integers(0, 6, (3, 5)), jnp.int32)
+    w = w.at[2].set(0)                      # pod 2: empty quorum
+    bound = int(np.max(np.sum(np.asarray(w), axis=1)))
+    v1 = votes.vote_ar_int8(topo, s, w, weight_bound=bound)
+    v2 = votes.vote_ag_packed(topo, s, w, P(None))
+    v3 = votes.fused_sign_vote(topo, {"leaf": s.astype(jnp.float32)},
+                               mask=w)["leaf"]
+    for p in range(3):
+        ref = signs.majority_vote(s[p], w[p], axis=0)
+        np.testing.assert_array_equal(np.asarray(v1[p]), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(v2[p]), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(v3[p]), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(v1[2]), 0)
+
+
+def test_weighted_tally_promotes_beyond_int8(topo):
+    """Regression (boundary): the int tally promotes on sum(w), not on
+    the voter count -- two voters of weight 64 are a 128-range tally
+    that would wrap int8 (128 -> -128 -> vote -1)."""
+    s = jnp.ones((1, 2, 64), jnp.int8)      # both vote +1
+    w = jnp.asarray([[64, 64]], jnp.int32)  # sum(w) = 128 > 127
+    np.testing.assert_array_equal(
+        np.asarray(votes.vote_ar_int8(topo, s, w, weight_bound=128)), 1)
+    # at the boundary sum(w) = 127 the tally still rides int8 exactly
+    w127 = jnp.asarray([[64, 63]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(votes.vote_ar_int8(topo, s, w127, weight_bound=127)), 1)
+    assert votes._tally_acc(127) == jnp.int8
+    assert votes._tally_acc(128) == jnp.int16
+    assert votes._tally_acc(32768) == jnp.int32
+    # integer weights WITHOUT a bound must fail loudly -- the
+    # voter-count default would silently re-open the int8 wrap
+    with pytest.raises(ValueError, match="weight_bound"):
+        votes.vote_ar_int8(topo, s, w)
+    # randomized: mixed signs, weights large enough to break int8
+    rng = np.random.default_rng(5)
+    s = jnp.asarray(rng.choice([-1, 1], size=(2, 9, 33)), jnp.int8)
+    w = jnp.asarray(rng.integers(0, 40, (2, 9)), jnp.int32)
+    bound = int(np.max(np.sum(np.asarray(w), axis=1)))
+    got = votes.vote_ar_int8(topo, s, w, weight_bound=bound)
+    for p in range(2):
+        ref = signs.majority_vote(s[p], w[p], axis=0)
+        np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(ref))
+
+
 def test_fused_vote_many_voters(topo):
     """D > 64 takes _popcount_vote_words's reduction branch (the voter
     unroll is capped) -- results must still match the oracle and the
