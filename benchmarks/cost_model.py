@@ -127,7 +127,11 @@ def clients_rows(cells=((64, 0.1),)) -> list:
     for k, p in cells:
         part = participating_clients(k, p)
         for m in ("hier_signsgd", "dc_hier_signsgd"):
-            bits = part * uplink_bits(m, D_PARAMS, 15)
+            # the fleet uplink is the per-slice expectation from
+            # signs.uplink_bits (ONE accounting, shared with Table II)
+            # scaled by the physical slice count
+            bits = Q_EDGES * DEVS * uplink_bits(m, D_PARAMS, 15, clients=k,
+                                                participation_rate=p)
             rows.append((f"clients/K{k}_p{p}/{m}",
                          round_cost_us(m, 15, k, p),
                          f"uplink_mbits_round={bits / 1e6:.1f} "

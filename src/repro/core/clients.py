@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 PARTICIPATION_MODES = ("full", "bernoulli", "fixed")
+CLIENT_MODES = ("merged", "stream")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,18 +72,32 @@ class ClientConfig:
                       tuples ``[pods][devices][count]`` (static, so
                       tally-dtype promotion can be decided at trace
                       time); ``None`` means unit weights.
+    mode           -- how the K clients execute inside the train step:
+                      ``merged``  (default) the client dim merges into
+                                  the voter axis ([P, D*K, b/K, ...]) --
+                                  every client's sign plane is live at
+                                  once, memory O(K * model);
+                      ``stream``  clients loop inside the step: each
+                                  client's signs are packed and folded
+                                  into a persistent weighted tally
+                                  buffer, memory O(model/32 + tally).
+                      Bitwise-identical trajectories (``stream`` is
+                      asserted against ``merged`` on the parity matrix).
     """
     count: int = 1
     participation: str = "full"
     rate: float = 1.0
     seed: int = 0
     weights: tuple | None = None
+    mode: str = "merged"
 
     def __post_init__(self):
         if self.count < 1:
             raise ValueError(f"clients per device must be >= 1: {self.count}")
         if self.participation not in PARTICIPATION_MODES:
             raise ValueError(f"unknown participation {self.participation!r}")
+        if self.mode not in CLIENT_MODES:
+            raise ValueError(f"unknown client mode {self.mode!r}")
         if not 0.0 < self.rate <= 1.0:
             raise ValueError(f"participation rate must be in (0, 1]: "
                              f"{self.rate}")
@@ -190,6 +205,43 @@ def carve_batch(batch, count: int):
         return x.reshape((p, d * count, b // count) + x.shape[3:])
 
     return jax.tree.map(carve, batch)
+
+
+def validate_batch_carve(batch_per_device: int, count: int,
+                         flag: str = "clients_per_device") -> None:
+    """Early (CLI-level) form of :func:`carve_batch`'s divisibility
+    check: raise a clean ``ValueError`` before any tracing happens, so
+    launchers can reject a bad ``--clients_per_device`` with a readable
+    message instead of a mid-trace shape error."""
+    if count > 1 and batch_per_device % count:
+        raise ValueError(
+            f"per-device batch {batch_per_device} does not divide into "
+            f"{count} virtual clients (--{flag})")
+
+
+def client_slice(batch, count: int, c):
+    """Client ``c``'s shard of an *uncarved* [P, D, b, ...] batch.
+
+    The streamed sweep's counterpart of :func:`carve_batch`: client
+    ``c`` of slice ``d`` owns rows ``[c*b/K, (c+1)*b/K)`` -- exactly the
+    rows voter ``d*K + c`` sees after the merged reshape -- but only ONE
+    client's [P, D, b/K, ...] shard is ever materialized (``c`` may be a
+    traced loop index; the slice is a ``dynamic_slice`` on the batch-row
+    dim, no [P, D*K, ...] reshape)."""
+    if count == 1:
+        return batch
+
+    def take(x):
+        b = x.shape[2]
+        if b % count:
+            raise ValueError(
+                f"per-device batch {b} does not divide into "
+                f"{count} virtual clients")
+        rows = b // count
+        return jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(c, jnp.int32) * rows, rows, axis=2)
+
+    return jax.tree.map(take, batch)
 
 
 def participating_shares(dev_weights: jax.Array, weights: jax.Array,

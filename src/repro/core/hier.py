@@ -23,6 +23,12 @@ carved per client, a per-round sampled participation mask and integer
 data shares |D_qk| turn the vote into a weighted popcount (empty quorum
 abstains), and the anchor/mean aggregations reweight to the
 participating shares.  The inactive default is bitwise the legacy step.
+``ClientConfig.mode="stream"`` runs the same round as a ``fori_loop``
+over clients inside the step (``local_step_stream``): each client's
+weighted sign plane folds into a persistent integer tally
+(``votes.tally_*``) and the majority threshold is deferred until after
+the loop -- O(model/32 + tally) live sign-plane memory instead of
+O(K*model), bitwise identical to the merged axis on every cell.
 With ``transport="fused"`` the sign/vote chain runs over ONE contiguous
 flat buffer (``core.flatbuf`` layout, DC correction fused pre-sign,
 Pallas kernels on TPU) instead of per-leaf tree maps -- bit-identical
@@ -207,6 +213,15 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     # the merged voter axis: K virtual clients per physical data slice
     # (d_virtual == devices_per_pod on the inactive legacy path)
     d_virtual = topo.devices_per_pod * cc.count
+    # streamed client sweep: loop the K clients inside the step instead
+    # of widening the voter axis -- O(model/32 + tally) live memory,
+    # bitwise identical to merged (the deferred-threshold tally
+    # contract, see core.votes)
+    stream = virtual and cc.mode == "stream"
+    # merged full-precision aggregations re-associate their voter-axis
+    # reduction to the streamed fold order (weighted_mean_dev clients=),
+    # so BOTH modes share one trajectory per config
+    k_merge = cc.count if virtual else 1
     vote_bound = (cc.weight_bound(topo.pods, topo.devices_per_pod)
                   if virtual else None)
     # DC correction state only exists where it is read: the DC method's
@@ -216,12 +231,15 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     vmap2 = lambda f: jax.vmap(jax.vmap(f))
 
     # ---------------- gradient machinery -------------------------------
-    def per_device_grads(params, batch, rngs):
+    def per_device_grads(params, batch, rngs, devices=None):
         """Replicated regime: explicit [P, D, ...] per-(virtual-)device
         grads (the voter axis is the merged D*K extent when virtual
-        clients are active -- the batch arrives already carved)."""
+        clients are active -- the batch arrives already carved; the
+        streamed sweep instead passes ``devices=devices_per_pod`` and a
+        single client's [P, D, b/K, ...] batch slice)."""
         v_dev = _bcast_pd(topo, params, bundle.compute_specs,
-                          algo.compute_dtype, devices=d_virtual)
+                          algo.compute_dtype,
+                          devices=d_virtual if devices is None else devices)
 
         def tot(vd):
             losses = vmap2(bundle.loss)(vd, batch, rngs)
@@ -311,6 +329,48 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             c_q, _ = pod_direction_fsdp(params, delta_shaped, batch,
                                         rngs, maskf, dev_w.astype(jnp.float32),
                                         "wmean", 0.0)
+        elif stream:
+            # streamed anchor: the same zeros-init K-term fold as the
+            # local sweep (and as merged's weighted_mean_dev clients=
+            # re-association), one client's grads live at a time.
+            # dev_w arrives UNmerged here: [P, D, K] participating shares.
+            pt = master_views(params) if flat else params
+            p, d = topo.pods, topo.devices_per_pod
+            rngs3 = rngs.reshape((p, d, cc.count) + rngs.shape[2:])
+            if flat:
+                acc0 = topo.constrain(
+                    jnp.zeros((p, d, params.layout.n_pad), jnp.float32),
+                    flat_spec(params.layout, 2))
+            else:
+                acc0 = jax.tree.map(
+                    lambda v, cs: topo.constrain(
+                        jnp.zeros((p, d) + v.shape[1:], jnp.float32),
+                        topo.dev_spec(*cs)),
+                    pt, bundle.compute_specs)
+
+            def abody(c_idx, acc):
+                b_c = vclients.client_slice(batch, cc.count, c_idx)
+                r_c = jax.lax.dynamic_index_in_dim(rngs3, c_idx, axis=2,
+                                                   keepdims=False)
+                g_c, _ = per_device_grads(pt, b_c, r_c, devices=d)
+                sh_c = jax.lax.dynamic_index_in_dim(dev_w, c_idx, axis=2,
+                                                    keepdims=False)
+                if flat:
+                    g_buf = flatten_buf(params.layout, g_c, 2, jnp.float32)
+                    return acc + g_buf * sh_c[:, :, None]
+                return jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) * sh_c.reshape(
+                        sh_c.shape + (1,) * (g.ndim - 2)), acc, g_c)
+
+            acc = jax.lax.fori_loop(0, cc.count, abody, acc0)
+            if flat:
+                c_q = jnp.sum(acc, axis=1)
+                c = votes.pod_weighted_average(topo, c_q, edge_w)
+                delta = (c - c_q).astype(algo.delta_dtype)
+                return constrain_master(flatbuf.FlatState(
+                    delta,
+                    flatbuf.with_dtype(params.layout, algo.delta_dtype)))
+            c_q = jax.tree.map(lambda a: jnp.sum(a, axis=1), acc)
         elif flat:
             # the anchor stays flat: one weighted-mean + one pod
             # all-reduce over the whole-model buffer, and the delta the
@@ -318,7 +378,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             # correction u + rho*delta is one fused elementwise op).
             g_dev, _ = per_device_grads(master_views(params), batch, rngs)
             g_buf = flatten_buf(params.layout, g_dev, 2, jnp.float32)
-            c_q = votes.weighted_mean_dev(topo, g_buf, dev_w)
+            c_q = votes.weighted_mean_dev(topo, g_buf, dev_w,
+                                          clients=k_merge)
             c = votes.pod_weighted_average(topo, c_q, edge_w)
             delta = (c - c_q).astype(algo.delta_dtype)
             return constrain_master(flatbuf.FlatState(
@@ -327,7 +388,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             g_dev, _ = per_device_grads(params, batch, rngs)
             c_q = jax.tree.map(
                 lambda g: votes.weighted_mean_dev(
-                    topo, g.astype(jnp.float32), dev_w), g_dev)
+                    topo, g.astype(jnp.float32), dev_w, clients=k_merge),
+                g_dev)
         c = pod_avg(c_q, edge_w)
         delta = jax.tree.map(lambda a, b: (a - b).astype(algo.delta_dtype),
                              c, c_q)
@@ -399,10 +461,12 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         if algo.method == "hier_sgd":
             direction = jax.tree.map(
                 lambda g: votes.weighted_mean_dev(
-                    topo, g.astype(jnp.float32), dev_w), g_dev)
+                    topo, g.astype(jnp.float32), dev_w, clients=k_merge),
+                g_dev)
         elif algo.method == "hier_local_qsgd":
             direction = jax.tree.map(
-                lambda g: votes.weighted_mean_dev(topo, g, dev_w),
+                lambda g: votes.weighted_mean_dev(topo, g, dev_w,
+                                                  clients=k_merge),
                 quantize_dev(g_dev, rngs))
         else:  # sign methods
             u_dev = g_dev
@@ -464,7 +528,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
 
         if algo.method == "hier_sgd":
             g_buf = flatten_buf(layout, g_dev, 2, jnp.float32)
-            dir_buf = votes.weighted_mean_dev(topo, g_buf, dev_w)
+            dir_buf = votes.weighted_mean_dev(topo, g_buf, dev_w,
+                                              clients=k_merge)
             new_params = params.replace(
                 params.buf - mu * dir_buf.astype(params.buf.dtype))
             return new_params, new_ef, new_mom, losses
@@ -474,7 +539,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             # path), then one whole-buffer weighted mean + update
             q_buf = flatten_buf(layout, quantize_dev(g_dev, rngs), 2,
                                 jnp.float32)
-            dir_buf = votes.weighted_mean_dev(topo, q_buf, dev_w)
+            dir_buf = votes.weighted_mean_dev(topo, q_buf, dev_w,
+                                              clients=k_merge)
             new_params = params.replace(
                 params.buf - mu * dir_buf.astype(params.buf.dtype))
             return new_params, new_ef, new_mom, losses
@@ -525,6 +591,229 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 2, jnp.float32))
         return descend(vote_direction(s_dev, vote_w)), new_ef, new_mom, losses
 
+    # ---------------- streamed-client local step ------------------------
+    def local_step_stream(state, params, delta, batch, rngs, shares3,
+                          vote_w3, mu):
+        """ClientConfig.mode='stream': fori_loop over the K virtual
+        clients with only ONE client's gradient live at a time.
+
+        Per client the (DC-corrected) direction is sign-compressed and
+        accumulated into a persistent signed tally (``votes`` tally
+        machinery, Pallas ``tally_acc`` RMW on the fused path); the sign
+        threshold is deferred to after the loop, where ``t >= 0``
+        reproduces merged's ``2*pos >= n_eff`` tie rule exactly --
+        integer tallies, so the trajectory is bitwise identical to the
+        merged voter-axis step in BOTH state layouts.  shares3/vote_w3
+        arrive UNmerged: [P, D, K].  Returns the *updated* params like
+        ``local_step_flat``.
+        """
+        k = cc.count
+        p, d = topo.pods, topo.devices_per_pod
+        layout = params.layout if flat else None
+        params_tree = master_views(params) if flat else params
+        rngs3 = rngs.reshape((p, d, k) + rngs.shape[2:])
+        fuse = (algo.is_sign and algo.transport == "fused"
+                and not algo.error_feedback)
+        fold_dc = fuse and algo.is_dc
+        acc_dt = votes.tally_dtype(vote_bound)
+
+        # the shared DC correction broadcasts ONCE (physical device axis
+        # only); clients re-read it each iteration
+        delta_tree = None
+        if algo.is_dc and not fold_dc and algo.is_sign:
+            dt = (shardflat.tree_views(topo, delta, cast=False)
+                  if flat else delta)
+            delta_tree = _bcast_pd(topo, dt, bundle.compute_specs, None,
+                                   devices=d)
+
+        # per-voter state views sliced per client inside the loop
+        def views3(fs_or_tree):
+            t = (shardflat.tree_views(topo, fs_or_tree, cast=False)
+                 if flat else fs_or_tree)
+            return jax.tree.map(
+                lambda x: x.reshape((p, d, k) + x.shape[2:]), t)
+
+        ef3 = views3(state.ef) if algo.error_feedback else None
+        mom3 = views3(state.mom) if algo.momentum > 0.0 else None
+
+        def take_c(tree, c_idx):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, c_idx, axis=2, keepdims=False), tree)
+
+        def put_c(tree3, tree_c, c_idx):
+            return jax.tree.map(
+                lambda x3, xc: jax.lax.dynamic_update_index_in_dim(
+                    x3, xc, c_idx, axis=2), tree3, tree_c)
+
+        # the persistent accumulator: an integer sign tally for sign
+        # methods (flat words buffer on the pure-fused path, per-leaf
+        # otherwise), an f32 share-weighted sum for the mean methods
+        tally_flat = tally_tree = acc = None
+        vlayout = None
+        if not algo.is_sign:
+            if flat:
+                acc = topo.constrain(
+                    jnp.zeros((p, d, layout.n_pad), jnp.float32),
+                    flat_spec(layout, 2))
+            else:
+                acc = jax.tree.map(
+                    lambda v, cs: topo.constrain(
+                        jnp.zeros((p, d) + v.shape[1:], jnp.float32),
+                        topo.dev_spec(*cs)),
+                    params_tree, bundle.compute_specs)
+        elif fuse:
+            if flat:
+                vlayout = layout
+            else:
+                # a layout over the per-device direction shapes (only
+                # shapes matter -- packing is dtype-blind past the sign)
+                template = jax.tree.map(
+                    lambda v: jax.ShapeDtypeStruct(
+                        (p, d) + v.shape[1:], jnp.float32), params_tree)
+                if topo.model_shards > 1:
+                    lay = flatbuf.make_layout(
+                        template, batch_dims=2,
+                        sharding=shardflat.model_sharding(
+                            topo, bundle.compute_specs))
+                    vlayout = lay if lay.shards > 1 else None
+                if vlayout is None:
+                    vlayout = flatbuf.make_layout(template, batch_dims=2)
+            tally_flat = topo.constrain(
+                jnp.zeros((p, d, vlayout.n_pad), acc_dt),
+                shardflat.buf_spec(topo, vlayout, 2))
+        else:
+            tally_tree = jax.tree.map(
+                lambda v, cs: topo.constrain(
+                    jnp.zeros((p, d) + v.shape[1:], acc_dt),
+                    topo.dev_spec(*cs)),
+                params_tree, bundle.compute_specs)
+
+        losses0 = jnp.zeros((p, d, k), jnp.float32)
+
+        def body(c_idx, carry):
+            tally_f, tally_t, acc_c, ef_c, mom_c, loss_c = carry
+            b_c = vclients.client_slice(batch, k, c_idx)
+            r_c = jax.lax.dynamic_index_in_dim(rngs3, c_idx, axis=2,
+                                               keepdims=False)
+            g_c, losses = per_device_grads(params_tree, b_c, r_c, devices=d)
+            loss_c = jax.lax.dynamic_update_index_in_dim(
+                loss_c, losses.astype(jnp.float32), c_idx, axis=2)
+            sh_c = jax.lax.dynamic_index_in_dim(shares3, c_idx, axis=2,
+                                                keepdims=False)
+            w_c = jax.lax.dynamic_index_in_dim(vote_w3, c_idx, axis=2,
+                                               keepdims=False)
+
+            if not algo.is_sign:
+                if algo.method == "hier_local_qsgd":
+                    g_c = quantize_dev(g_c, r_c)
+                if flat:
+                    g_buf = flatten_buf(layout, g_c, 2, jnp.float32)
+                    acc_c = acc_c + g_buf * sh_c[:, :, None]
+                else:
+                    acc_c = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32)
+                        * sh_c.reshape(sh_c.shape + (1,) * (g.ndim - 2)),
+                        acc_c, g_c)
+                return (tally_f, tally_t, acc_c, ef_c, mom_c, loss_c)
+
+            u_c = g_c
+            if algo.momentum > 0.0:
+                m_new = jax.tree.map(
+                    lambda m, g: algo.momentum * m
+                    + (1.0 - algo.momentum) * g.astype(m.dtype),
+                    take_c(mom_c, c_idx), g_c)
+                mom_c = put_c(mom_c, m_new, c_idx)
+                u_c = m_new
+            if algo.error_feedback:
+                e_c = take_c(ef_c, c_idx)
+                if flat:
+                    u_c = jax.tree.map(
+                        lambda u, e, cs: topo.constrain(
+                            u.astype(jnp.float32) + e, topo.dev_spec(*cs)),
+                        u_c, e_c, bundle.compute_specs)
+                else:
+                    u_c = jax.tree.map(
+                        lambda u, e: u.astype(jnp.float32) + e, u_c, e_c)
+            if delta_tree is not None:
+                u_c = jax.tree.map(
+                    lambda u, dl: u + algo.rho * dl.astype(u.dtype),
+                    u_c, delta_tree)
+            if fuse:
+                tally_f = votes.fused_sign_tally_accumulate(
+                    topo, vlayout, u_c,
+                    delta if (fold_dc and not flat) else None,
+                    delta.buf if (fold_dc and flat) else None,
+                    algo.rho if fold_dc else 0.0, w_c, tally_f)
+            else:
+                s_c = jax.tree.map(signs.sgn, u_c)
+                if algo.error_feedback:
+                    ef_c = put_c(ef_c,
+                                 ef_residual(u_c, s_c, part=(w_c > 0)),
+                                 c_idx)
+                tally_t = jax.tree.map(
+                    lambda t, s: votes.tally_add_signs(t, s, w_c),
+                    tally_t, s_c)
+            return (tally_f, tally_t, acc_c, ef_c, mom_c, loss_c)
+
+        tally_flat, tally_tree, acc, ef3, mom3, losses3 = jax.lax.fori_loop(
+            0, k, body, (tally_flat, tally_tree, acc, ef3, mom3, losses0))
+        losses = losses3.reshape(p, d * k)
+
+        new_ef, new_mom = state.ef, state.mom
+        if ef3 is not None:
+            ef_t = jax.tree.map(
+                lambda x: x.reshape((p, d * k) + x.shape[3:]), ef3)
+            new_ef = (state.ef.replace(
+                flatten_buf(layout, ef_t, 2, jnp.float32))
+                if flat else ef_t)
+        if mom3 is not None:
+            mom_t = jax.tree.map(
+                lambda x: x.reshape((p, d * k) + x.shape[3:]), mom3)
+            new_mom = (state.mom.replace(
+                flatten_buf(layout, mom_t, 2, jnp.float32))
+                if flat else mom_t)
+
+        if not algo.is_sign:
+            if flat:
+                dir_buf = jnp.sum(acc, axis=1)
+                new_params = params.replace(
+                    params.buf - mu * dir_buf.astype(params.buf.dtype))
+            else:
+                direction = jax.tree.map(lambda a: jnp.sum(a, axis=1), acc)
+                new_params = jax.tree.map(
+                    lambda v, s: v - mu * s.astype(v.dtype), params,
+                    direction)
+            return new_params, new_ef, new_mom, losses
+
+        # deferred threshold: t >= 0 -> +1 (== merged's 2*pos >= n_eff),
+        # empty quorum (n_eff == 0) abstains
+        n_eff = jnp.sum(vote_w3.astype(jnp.int32), axis=(1, 2))
+        if fuse:
+            if flat:
+                new_buf = votes.fused_tally_finish(
+                    topo, vlayout, tally_flat, n_eff, params.buf, mu)
+                new_params = params.replace(new_buf)
+            else:
+                direction = votes.fused_tally_finish(
+                    topo, vlayout, tally_flat, n_eff, None, None)
+                new_params = jax.tree.map(
+                    lambda v, s: v - mu * s.astype(v.dtype), params,
+                    direction)
+        else:
+            direction = jax.tree.map(
+                lambda t, cs: votes.tally_vote_dev(topo, t, n_eff, cs),
+                tally_tree, bundle.compute_specs)
+            if flat:
+                dir_buf = flatten_buf(layout, direction, 1,
+                                      params.buf.dtype)
+                new_params = params.replace(params.buf - mu * dir_buf)
+            else:
+                new_params = jax.tree.map(
+                    lambda v, s: v - mu * s.astype(v.dtype), params,
+                    direction)
+        return new_params, new_ef, new_mom, losses
+
     # ---------------- the step ------------------------------------------
     def train_step(state: TrainState, batch, edge_weights, dev_weights,
                    dev_mask):
@@ -548,18 +837,27 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             w_arr = cc.weight_array(topo.pods, topo.devices_per_pod)
             # weighted popcount weights: pure int32 arithmetic, so
             # |D_qk| shares above 2^24 never round through float ...
-            vote_w = (jnp.asarray(w_arr, jnp.int32)
-                      * part.astype(jnp.int32)).reshape(pd)
+            vote_w3 = (jnp.asarray(w_arr, jnp.int32)
+                       * part.astype(jnp.int32))                # [P, D, K]
+            vote_w = vote_w3.reshape(pd)
             # ... and participating aggregation shares for anchor/means
             shares = vclients.participating_shares(
                 dev_weights, jnp.asarray(w_arr, jnp.float32), part)
-            carve = lambda b: vclients.carve_batch(b, cc.count)
+            if stream:
+                # the streamed sweep slices clients itself -- the batch
+                # stays [P, D, b, ...] and weights stay [P, D, K]
+                shares3 = shares.reshape(
+                    topo.pods, topo.devices_per_pod, cc.count)
+                carve = lambda b: b
+            else:
+                carve = lambda b: vclients.carve_batch(b, cc.count)
         else:
             vote_w = maskf > 0.5
             shares = dev_weights
             carve = lambda b: b
         train_batch = carve(batch["train"])
         anchor_batch = carve(batch.get("anchor", batch["train"]))
+        agg_shares = shares3 if stream else shares
 
         # -- prologue: cloud aggregation + anchor refresh at round start
         def prologue(op):
@@ -568,7 +866,7 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             params = constrain_master(params)
             if algo.is_dc:
                 fresh = compute_delta(params, delta, anchor_batch, rngs_a,
-                                      edge_weights, shares, maskf)
+                                      edge_weights, agg_shares, maskf)
                 if algo.anchor_staleness == 1:
                     delta, delta_next = delta_next, fresh
                 else:
@@ -593,7 +891,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             mu = mu / jnp.sqrt(rnd_index.astype(algo.master_dtype) + 1.0)
 
         # -- local sign step
-        if flat:
+        if stream:
+            params, new_ef, new_mom, losses = local_step_stream(
+                state, params, delta, train_batch, rngs_l, shares3,
+                vote_w3, mu)
+        elif flat:
             params, new_ef, new_mom, losses = local_step_flat(
                 state, params, delta, train_batch, rngs_l, shares,
                 vote_w, mu)

@@ -146,14 +146,31 @@ def ternary_quantize(x: jax.Array, rng: jax.Array) -> jax.Array:
 # global round, for a d-dimensional model and T_E local steps.
 # ---------------------------------------------------------------------------
 
-def uplink_bits(method: str, d: int, t_e: int) -> int:
-    """Device->edge uplink bits per global round (Table II)."""
+def uplink_bits(method: str, d: int, t_e: int, clients: int = 1,
+                participation_rate: float = 1.0) -> int | float:
+    """Device->edge uplink bits per global round (Table II).
+
+    With K virtual clients per physical slice (``core.clients``) each
+    PARTICIPATING client sends its own full per-client stream (1 bit
+    per coordinate per local step for the sign methods, plus the DC
+    anchor) and a masked-out client sends nothing, so the expected
+    per-slice uplink is ``clients * participation_rate * base``.  The
+    legacy single-client call (``clients=1``, full participation)
+    returns the exact integer Table II entry; the virtual-client form
+    is an expectation and may be fractional.  Consistency with the
+    dry-run pricing (``benchmarks/cost_model.clients_rows``) is pinned
+    by tests/test_signs.py.
+    """
     if method == "hier_sgd":
-        return 32 * t_e * d
-    if method == "hier_local_qsgd":          # sign+support bits + scale
-        return t_e * (2 * d + 32)
-    if method == "hier_signsgd":
-        return t_e * d
-    if method == "dc_hier_signsgd":          # + one full-precision anchor
-        return t_e * d + 32 * d
-    raise ValueError(f"unknown method {method!r}")
+        base = 32 * t_e * d
+    elif method == "hier_local_qsgd":        # sign+support bits + scale
+        base = t_e * (2 * d + 32)
+    elif method == "hier_signsgd":
+        base = t_e * d
+    elif method == "dc_hier_signsgd":        # + one full-precision anchor
+        base = t_e * d + 32 * d
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    if clients == 1 and participation_rate >= 1.0:
+        return base
+    return clients * participation_rate * base

@@ -249,6 +249,75 @@ def _popcount_vote_words(words: jax.Array, mask: jax.Array | None,
     return vote.reshape(vote.shape[0], -1)                     # [P, W*32]
 
 
+# ---------------------------------------------------------------------------
+# Streamed virtual-client tally (ClientConfig.mode="stream")
+# ---------------------------------------------------------------------------
+#
+# The streamed client sweep never widens the voter axis: each client's
+# signs are folded into a persistent SIGNED tally  t += w_c * sgn(u_c)
+# (in the ``_tally_acc(weight_bound)`` dtype -- every partial sum is
+# bounded by the running participating-weight sum, so the accumulator
+# can never transiently overflow), and the sign threshold is DEFERRED
+# until after the client loop:  t = 2*pos - n_eff, so ``t >= 0`` is
+# exactly the merged path's ``2*pos >= n_eff`` tie rule and the two
+# modes are bitwise identical by integer associativity.
+
+def tally_dtype(weight_bound: int):
+    """Accumulator dtype of the streamed tally -- the SAME promotion
+    rule as ``vote_ar_int8`` (``_tally_acc``): the signed tally has
+    range ``sum(w)``, so it promotes on the weight bound, not on the
+    client count."""
+    return _tally_acc(weight_bound)
+
+
+def tally_add_signs(tally: jax.Array, s: jax.Array,
+                    weights: jax.Array) -> jax.Array:
+    """One client's weighted sign contribution: ``tally + w * s``.
+
+    tally: [P, D, *leaf] signed tally (``tally_dtype`` ints); s:
+    [P, D, *leaf] int8 signs of ONE client; weights: [P, D] nonnegative
+    integer vote weights of that client this round (0 = abstains).
+    The product runs in int32 and narrows back to the tally dtype --
+    exact, since every partial tally is bounded by ``weight_bound``.
+    """
+    w = weights.astype(jnp.int32).reshape(
+        weights.shape + (1,) * (s.ndim - 2))
+    return tally + (s.astype(jnp.int32) * w).astype(tally.dtype)
+
+
+def tally_accumulate_words(words: jax.Array, weights: jax.Array,
+                           tally: jax.Array) -> jax.Array:
+    """Tally-accumulate variant of ``_popcount_vote_words``: fold ONE
+    client's packed sign words into the signed tally.
+
+    words: [P, D, W] uint32 (the client's 1-bit uplink payload);
+    weights: [P, D] integer vote weights; tally: [P, D, W*32] signed
+    tally.  Per coordinate ``tally += w * (2*bit - 1)`` -- the same
+    weighted popcount as the merged transports, deferred: summing these
+    contributions over clients gives ``t = 2*pos - n_eff``.
+    """
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = ((words[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    sgn_c = 2 * bits - 1                                       # [P,D,W,32]
+    add = sgn_c * weights.astype(jnp.int32)[:, :, None, None]
+    return tally + add.reshape(tally.shape).astype(tally.dtype)
+
+
+def tally_vote(tally: jax.Array, n_eff: jax.Array) -> jax.Array:
+    """Deferred threshold of the streamed sweep: signed tally -> vote.
+
+    tally: [P, *leaf] edge tally (summed over devices; int); n_eff:
+    [P] int32 participating weight sum.  ``t >= 0 -> +1`` is exactly
+    the merged tie rule ``2*pos >= n_eff`` (t = 2*pos - n_eff), so
+    weighted ties still resolve to sgn(0) = +1; an empty quorum
+    (n_eff == 0) abstains with vote 0.
+    """
+    t = tally.astype(jnp.int32)
+    vote = jnp.where(t >= 0, jnp.int8(1), jnp.int8(-1))
+    n = n_eff.reshape((-1,) + (1,) * (vote.ndim - 1))
+    return jnp.where(n > 0, vote, jnp.int8(0))
+
+
 def _fused_kernel_bufs(layout, u_dev, delta_tree, delta_buf, rho):
     """Fold rule + flat views for the Pallas route (shared by the vote-
     only and the flat-state vote+update entry points; the correction may
@@ -525,10 +594,213 @@ def majority_vote_dev(topo: Topology, s_dev: jax.Array,
 
 
 def weighted_mean_dev(topo: Topology, g_dev: jax.Array,
-                      dev_weights: jax.Array) -> jax.Array:
-    """Full-precision edge aggregation  sum_k (|D_qk|/D_q) g_k  -> [P, *leaf]."""
-    w = dev_weights.reshape(dev_weights.shape + (1,) * (g_dev.ndim - 2))
-    return jnp.sum(g_dev * w.astype(g_dev.dtype), axis=1)
+                      dev_weights: jax.Array, clients: int = 1) -> jax.Array:
+    """Full-precision edge aggregation  sum_k (|D_qk|/D_q) g_k  -> [P, *leaf].
+
+    clients: with K > 1 merged virtual clients the voter-axis reduction
+    is re-associated as a zeros-initialized ``fori_loop`` fold over each
+    slice's K clients (multiply INSIDE the loop body, so XLA emits the
+    same mul+add per iteration) followed by the device sum -- the EXACT
+    float op order the streamed client sweep
+    (``ClientConfig.mode="stream"``) produces with its ``fori_loop``
+    accumulator, so the two modes stay bitwise identical on the
+    full-precision aggregations (anchor pass, mean methods) too.  A
+    Python-unrolled chain is NOT equivalent: XLA compiles the unrolled
+    adds (and a hoisted multiply) with different rounding than the loop
+    body.  ``clients=1`` is the original single ``jnp.sum``.
+    """
+    if clients <= 1:
+        w = dev_weights.reshape(dev_weights.shape + (1,) * (g_dev.ndim - 2))
+        return jnp.sum(g_dev * w.astype(g_dev.dtype), axis=1)
+    p, dk = g_dev.shape[:2]
+    g3 = g_dev.reshape((p, dk // clients, clients) + g_dev.shape[2:])
+    w3 = dev_weights.reshape(p, dk // clients, clients)
+
+    def body(c, acc):
+        g_c = jax.lax.dynamic_index_in_dim(g3, c, axis=2, keepdims=False)
+        w_c = jax.lax.dynamic_index_in_dim(w3, c, axis=2, keepdims=False)
+        w_c = w_c.reshape(w_c.shape + (1,) * (g_c.ndim - 2))
+        return acc + g_c * w_c.astype(g_c.dtype)
+
+    acc = jax.lax.fori_loop(
+        0, clients, body,
+        jnp.zeros(g3.shape[:2] + g3.shape[3:], g_dev.dtype))
+    return jnp.sum(acc, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Streamed client sweep: per-leaf and fused tally entry points
+# ---------------------------------------------------------------------------
+
+def tally_vote_dev(topo: Topology, tally: jax.Array, n_eff: jax.Array,
+                   leaf_spec: P) -> jax.Array:
+    """[P, D, *leaf] streamed per-device tally -> [P, *leaf] int8 vote.
+
+    The data-axis reduction of the streamed sweep: the int tally is the
+    per-step uplink payload (ONE device-axis reduction per local step,
+    not per client), summed in int32 and thresholded by
+    :func:`tally_vote`.  Integer associativity makes the result bitwise
+    identical to the merged-axis weighted popcount of any transport.
+    """
+    t = topo.constrain(tally, topo.dev_spec(*leaf_spec))
+    ts = jnp.sum(t.astype(jnp.int32), axis=1)                  # [P, *leaf]
+    return tally_vote(ts, n_eff)
+
+
+def fused_sign_tally_accumulate(topo: Topology, layout: flatbuf.FlatLayout,
+                                u_dev, delta_tree, delta_buf,
+                                rho: float, weights: jax.Array,
+                                tally: jax.Array) -> jax.Array:
+    """Streamed-client device-side half of the fused transport: fold ONE
+    client's (DC-corrected) signs into the persistent tally buffer.
+
+    u_dev: pytree of [P, D, *leaf] pre-sign directions of the CURRENT
+    client (physical device axis D, never the merged D*K); delta_tree /
+    delta_buf: optional DC correction ([P, *leaf] tree or [P, n_pad]
+    buffer), fused pre-sign exactly like :func:`fused_sign_vote`;
+    weights: [P, D] integer vote weights of this client this round;
+    tally: [P, D, n_pad] signed tally (``tally_dtype(weight_bound)``).
+    Returns the updated tally.  No collective runs here -- the data
+    exchange of the streamed sweep happens once per local step in
+    :func:`fused_tally_finish`.
+
+    On TPU the pack -> weighted sign -> tally read-modify-write is ONE
+    Pallas sweep (``kernels.tally_acc``, aliased in place when
+    compiled); elsewhere the bit-identical jnp route packs via
+    ``flatbuf.pack_tree`` and accumulates with
+    :func:`tally_accumulate_words`.  A sharded layout (``layout.shards
+    > 1``) runs the same per-rank program under shard_map on each
+    rank's bucket.
+    """
+    if layout.shards > 1:
+        return _tally_acc_shard_map(topo, layout, u_dev, delta_tree,
+                                    delta_buf, rho, weights, tally)
+    mode = kops.fused_kernel_mode(topo.mesh.size)
+    if mode in ("pallas", "interpret"):
+        u_buf, d_buf = _fused_kernel_bufs(layout, u_dev, delta_tree,
+                                          delta_buf, rho)
+        return kops.fused_tally_acc_flat(u_buf, d_buf, rho, weights, tally,
+                                         interpret=(mode == "interpret"))
+    if delta_buf is not None and rho:
+        delta_tree = flatbuf.unflatten_tree(layout, delta_buf, batch_dims=1,
+                                            cast=False)
+    words = flatbuf.pack_tree(layout, u_dev, batch_dims=2, delta=delta_tree,
+                              rho=rho, delta_batch_dims=1)
+    return tally_accumulate_words(words, weights, tally)
+
+
+def _tally_acc_shard_map(topo: Topology, layout: flatbuf.FlatLayout, u_dev,
+                         delta_tree, delta_buf, rho: float,
+                         weights: jax.Array, tally: jax.Array) -> jax.Array:
+    """Per-client accumulate of the sharded streamed fused path.
+
+    One shard_map program with ZERO collectives: rank (p, d, m) packs
+    its own model-axis bucket of this client's directions and folds the
+    weighted signs into its local [1, 1, bucket_pad] tally block.
+    """
+    bucket = layout.bucket()
+    u_dev = flatbuf.pad_tree(layout, u_dev, 2)
+    if delta_tree is not None:
+        delta_tree = flatbuf.pad_tree(layout, delta_tree, 1)
+    mode = kops.fused_kernel_mode(topo.mesh.size, shard_mapped=True)
+    use_kernel = mode in ("pallas", "interpret")
+    interpret = mode == "interpret"
+
+    names = ["u", "t", "w"]
+    args = [u_dev, tally, weights]
+    in_specs = [shardflat.leaf_specs(topo, layout, 2),
+                shardflat.buf_spec(topo, layout, 2),
+                P(topo.pod_axis, topo.data_axis)]
+    if delta_tree is not None and rho:
+        names.append("dt")
+        args.append(delta_tree)
+        in_specs.append(shardflat.leaf_specs(topo, layout, 1))
+    if delta_buf is not None and rho:
+        names.append("db")
+        args.append(delta_buf)
+        in_specs.append(shardflat.buf_spec(topo, layout, 1))
+
+    def program(*local):
+        kw = dict(zip(names, local))
+        u_l, t_l, w_l = kw["u"], kw["t"], kw["w"]
+        dt_l, db_l = kw.get("dt"), kw.get("db")
+        if use_kernel:
+            u2, d2 = _fused_kernel_bufs(bucket, u_l, dt_l, db_l, rho)
+            return kops.fused_tally_acc_flat(u2, d2, rho, w_l, t_l,
+                                             interpret=interpret)
+        if db_l is not None:
+            dt_l = flatbuf.unflatten_tree(bucket, db_l, batch_dims=1,
+                                          cast=False)
+        words = flatbuf.pack_tree(bucket, u_l, batch_dims=2, delta=dt_l,
+                                  rho=rho, delta_batch_dims=1)
+        return tally_accumulate_words(words, w_l, t_l)
+
+    fn = shard_map(program, mesh=topo.mesh, in_specs=tuple(in_specs),
+                   out_specs=shardflat.buf_spec(topo, layout, 2),
+                   check_rep=False)
+    return fn(*args)
+
+
+def fused_tally_finish(topo: Topology, layout: flatbuf.FlatLayout,
+                       tally: jax.Array, n_eff: jax.Array,
+                       v_buf: jax.Array | None, mu):
+    """Edge-side half of the streamed fused transport: reduce the
+    per-device tallies over ``data`` ONCE per local step, defer-threshold
+    into the vote, and optionally apply ``v <- v - mu*vote``.
+
+    tally: [P, D, n_pad] accumulated signed tallies (all K clients
+    folded in); n_eff: [P] int32 participating weight sum of the round.
+    With ``v_buf`` (flat state) returns the updated [P, n_pad] buffer;
+    without it returns the vote as a [P, *leaf] int8 pytree -- mirroring
+    :func:`fused_sign_vote_update` / :func:`fused_sign_vote`.
+
+    A sharded layout runs as ONE shard_map program whose only
+    collective is the data-axis all-gather of the (already
+    client-reduced) local tallies -- the streamed analogue of the
+    merged path's packed-word gather.
+    """
+    if layout.shards > 1:
+        bucket = layout.bucket()
+        want_update = v_buf is not None
+        names = ["t", "n"]
+        args = [tally, n_eff]
+        in_specs = [shardflat.buf_spec(topo, layout, 2), P(topo.pod_axis)]
+        if want_update:
+            names += ["v", "mu"]
+            args += [v_buf, mu]
+            in_specs += [shardflat.buf_spec(topo, layout, 1), P()]
+
+        def program(*local):
+            kw = dict(zip(names, local))
+            # the ONE per-step collective of the streamed sweep
+            t = jax.lax.all_gather(kw["t"], topo.data_axis, axis=1,
+                                   tiled=True)
+            ts = jnp.sum(t.astype(jnp.int32), axis=1)          # [1, n_l]
+            vote = tally_vote(ts, kw["n"])
+            if want_update:
+                return kw["v"] - kw["mu"] * vote.astype(kw["v"].dtype)
+            return flatbuf.unflatten_tree(bucket, vote, batch_dims=1,
+                                          cast=False)
+
+        out_specs = (shardflat.buf_spec(topo, layout, 1) if want_update
+                     else shardflat.leaf_specs(topo, layout, 1))
+        fn = shard_map(program, mesh=topo.mesh, in_specs=tuple(in_specs),
+                       out_specs=out_specs, check_rep=False)
+        out = fn(*args)
+        if want_update:
+            return topo.constrain(out, shardflat.buf_spec(topo, layout, 1))
+        return flatbuf.unpad_tree(layout, out, 1)
+    # the device->edge uplink: gather the int tallies over 'data'
+    t = topo.constrain(tally, P(topo.pod_axis, topo.data_axis, None))
+    t = topo.constrain(t, P(topo.pod_axis, None, None))
+    ts = jnp.sum(t.astype(jnp.int32), axis=1)                  # [P, n_pad]
+    vote = tally_vote(ts, n_eff)
+    vote = topo.constrain(vote, P(topo.pod_axis, None))
+    if v_buf is None:
+        return flatbuf.unflatten_tree(layout, vote, batch_dims=1,
+                                      cast=False)
+    return topo.constrain(v_buf - mu * vote.astype(v_buf.dtype),
+                          P(topo.pod_axis, None))
 
 
 # ---------------------------------------------------------------------------

@@ -44,8 +44,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref, sign_pack as _sp, ternary_quant as _tq
-from repro.kernels import vote_update as _vu
+from repro.kernels import ref, sign_pack as _sp, tally_acc as _ta
+from repro.kernels import ternary_quant as _tq, vote_update as _vu
 
 PACK = 32
 
@@ -275,6 +275,39 @@ def _sign_pack_slabs(u_buf: jax.Array, d_buf: jax.Array | None, rho: float,
     packed = _sp.sign_pack(g2, d2, rho, block_r=br, block_c=block_c,
                            interpret=interpret, slab_rows=rows)
     return packed.reshape(p, d, rows, block_c // PACK), rows, block_c
+
+
+def fused_tally_acc_flat(u_buf: jax.Array, d_buf: jax.Array | None,
+                         rho: float, weights: jax.Array,
+                         tally: jax.Array, *, interpret: bool) -> jax.Array:
+    """Streamed-client local step: fold ONE client's signs into the tally.
+
+    u_buf: [P, D, n_pad] float pre-sign directions of the current
+    client (physical device axis, NOT the merged D*K); d_buf: [P, n_pad]
+    correction or None (same fold rules as ``fused_pack_flat``);
+    weights: [P, D] integer vote weights of this client; tally:
+    [P, D, n_pad] signed tally (int8/int16/int32 per
+    ``core.votes.tally_dtype``).  ONE ``tally_acc`` read-modify-write
+    sweep over all P*D rows -- the client's sign plane never reaches
+    HBM, and the delta block is re-read per voter through its BlockSpec
+    exactly like ``fused_pack_flat``.
+    """
+    p, d, n = u_buf.shape
+    assert tally.shape == (p, d, n), (tally.shape, u_buf.shape)
+    block_c = _ta.BLOCK_C
+    rows = n // block_c
+    assert n % block_c == 0, (n, block_c)
+    g2 = u_buf.reshape(p * d * rows, block_c)
+    t2 = tally.reshape(p * d * rows, block_c)
+    d2 = None
+    if d_buf is not None and rho:
+        d2 = d_buf.astype(u_buf.dtype).reshape(p * rows, block_c)
+    br = _row_block(rows, _ta.BLOCK_R)
+    w2 = weights.reshape(p * d, 1)
+    out = _ta.tally_acc(g2, d2, w2, t2, rho=rho, block_r=br,
+                        block_c=block_c, interpret=interpret,
+                        slab_rows=rows)
+    return out.reshape(p, d, n)
 
 
 def fused_vote_update_flat(u_buf: jax.Array, d_buf: jax.Array | None,

@@ -35,6 +35,24 @@ def vote_update_ref(packed: jax.Array, v: jax.Array, mu: float,
     return v - mu * vote.astype(v.dtype)
 
 
+def tally_acc_ref(u_buf: jax.Array, d_buf: jax.Array | None, rho: float,
+                  weights: jax.Array, tally: jax.Array) -> jax.Array:
+    """Streamed-client tally accumulate oracle (``kernels.tally_acc``).
+
+    u_buf: [P, D, n] float pre-sign directions of ONE client; d_buf:
+    [P, n] shared correction or None; weights: [P, D] integer vote
+    weights; tally: [P, D, n] signed int tally.  Returns
+    ``tally + w * sgn(u + rho*delta)`` with the product in int32 and
+    the sign computed in f32 exactly like the kernel (and like
+    ``sign_pack_ref``: ``x >= 0 -> +1``)."""
+    u = u_buf.astype(jnp.float32)
+    if d_buf is not None and rho:
+        u = u + rho * d_buf[:, None].astype(jnp.float32)
+    s = jnp.where(u >= 0, jnp.int32(1), jnp.int32(-1))
+    add = weights.astype(jnp.int32)[:, :, None] * s
+    return (tally.astype(jnp.int32) + add).astype(tally.dtype)
+
+
 def ternary_quant_ref(x: jax.Array, u: jax.Array, norm: jax.Array
                       ) -> jax.Array:
     """Stochastic ternary quantizer given uniforms u and global l2 norm."""

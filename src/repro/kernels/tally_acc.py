@@ -1,0 +1,111 @@
+"""Streamed-client tally accumulate: tally += w * sgn(g + rho*delta) (TPU).
+
+The streamed virtual-client sweep (``ClientConfig.mode="stream"``,
+``core.hier``) loops clients inside the step instead of widening the
+voter axis: per client this kernel fuses the device-side compressor of
+``sign_pack`` (gradient + stale correction -> sign bit) with the
+edge-side weighted popcount of ``vote_update`` into ONE
+read-modify-write of the persistent signed tally -- the client's sign
+plane is never materialized in HBM, only the running tally (one int8/
+int16/int32 per coordinate, dtype picked from the static weight bound
+by ``core.votes.tally_dtype``) is live across the client loop.
+
+The signed tally ``t = sum_c w_c * sgn(u_c) = 2*pos - n_eff`` defers the
+sign threshold until after the loop (``core.votes.tally_vote``), where
+``t >= 0`` reproduces the merged path's ``2*pos >= n_eff`` tie rule
+exactly -- integer arithmetic, so the streamed trajectory is bitwise
+identical to the merged-axis transports.
+
+Tiling: grid over [R/BR, C/BC] like ``sign_pack``; per step the kernel
+reads a (BR, BC) f32 block of g (+ the shared correction block via the
+same slab-row BlockSpec trick) and read-modify-writes the (BR, BC)
+tally block in place (aliased when compiled).  The per-voter weight
+arrives as a [n_slabs, 1] int32 array indexed per row-block through its
+BlockSpec -- no scalar re-tracing per client.
+
+Single-device program: on multi-chip meshes it runs per-rank inside the
+streamed fused transport's ``shard_map`` program (``core.votes``) on the
+rank's model-axis bucket; the data-axis exchange happens once per local
+step on the reduced tallies, not per client.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 64
+BLOCK_C = 4096
+
+
+def _tally_acc_kernel(g_ref, d_ref, w_ref, t_ref, o_ref, *, rho: float):
+    g = g_ref[...].astype(jnp.float32)
+    if d_ref is not None:
+        g = g + rho * d_ref[...].astype(jnp.float32)
+    s = jnp.where(g >= 0, jnp.int32(1), jnp.int32(-1))
+    w = w_ref[0, 0]                                 # this slab's weight
+    o_ref[...] = (t_ref[...].astype(jnp.int32) + w * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rho", "block_r", "block_c",
+                                    "interpret", "slab_rows"))
+def tally_acc(g: jax.Array, delta: jax.Array | None, w: jax.Array,
+              tally: jax.Array, *, rho: float = 0.0,
+              block_r: int = BLOCK_R, block_c: int = BLOCK_C,
+              interpret: bool = False,
+              slab_rows: int | None = None) -> jax.Array:
+    """g, tally: [R, C] (R % block_r == 0, C % block_c == 0); w:
+    [R/slab_rows, 1] int32 per-voter weights (one weight per contiguous
+    ``slab_rows``-row voter slab; ``slab_rows=None`` means one voter owns
+    all R rows); delta: optional [R/replicas, C] shared correction,
+    re-read per voter through its BlockSpec exactly like ``sign_pack``'s
+    ``slab_rows`` path.  Returns the updated tally (int8/int16/int32),
+    aliased over the input when compiled.
+    """
+    r, c = g.shape
+    assert r % block_r == 0 and c % block_c == 0, (g.shape, block_r, block_c)
+    assert tally.shape == (r, c), (tally.shape, g.shape)
+    slab = r if slab_rows is None else slab_rows
+    assert slab % block_r == 0 and r % slab == 0, (slab, block_r, r)
+    rb = slab // block_r                   # row blocks per voter slab
+    assert w.shape == (r // slab, 1), (w.shape, r, slab)
+    grid = (r // block_r, c // block_c)
+
+    in_specs = [pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))]
+    args = [g]
+    if delta is not None:
+        if delta.shape[0] == r:
+            dmap = lambda i, j: (i, j)
+        else:
+            assert r % delta.shape[0] == 0, (r, delta.shape)
+            reps = r // delta.shape[0]     # voters sharing each slab
+            dmap = lambda i, j: ((i // (reps * rb)) * rb + i % rb, j)
+        in_specs.append(pl.BlockSpec((block_r, block_c), dmap))
+        args.append(delta)
+        kernel = functools.partial(_tally_acc_kernel, rho=rho)
+    else:
+        kernel = functools.partial(
+            lambda g_ref, w_ref, t_ref, o_ref, *, rho: _tally_acc_kernel(
+                g_ref, None, w_ref, t_ref, o_ref, rho=rho), rho=rho)
+    in_specs.append(pl.BlockSpec((1, 1), lambda i, j, _rb=rb: (i // _rb, 0)))
+    args.append(w.astype(jnp.int32))
+    in_specs.append(pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)))
+    args.append(tally)
+
+    # the tally aliases in place: a true read-modify-write (one HBM pass
+    # over the tally when the caller donates it).  Interpret mode keeps
+    # out-of-place semantics -- identical values either way.
+    t_index = len(args) - 1
+    alias = {} if interpret else {"input_output_aliases": {t_index: 0}}
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(tally.shape, tally.dtype),
+        interpret=interpret,
+        **alias,
+    )(*args)

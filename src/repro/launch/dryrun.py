@@ -167,6 +167,9 @@ def main():
     ap.add_argument("--clients_per_device", type=int, default=1,
                     help="K virtual clients per data slice (per-device "
                          "batch must divide by K)")
+    ap.add_argument("--client_mode", default="merged",
+                    help="merged | stream (streamed in-step client loop, "
+                         "O(model/32 + tally) live sign-plane memory)")
     ap.add_argument("--participation", default="full",
                     help="full | bernoulli | fixed (per-round sampled "
                          "quorum at --participation_rate)")
@@ -180,6 +183,26 @@ def main():
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
+
+    # surface the carve constraint as a clean CLI error for every
+    # requested train cell, instead of a jit-time traceback
+    if args.clients_per_device > 1:
+        from repro.core import clients as vclients
+        for multi in meshes:
+            topo = mesh_mod.make_topology(multi_pod=multi)
+            pd = topo.pods * topo.devices_per_pod
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                if shape.kind != "train":
+                    continue
+                try:
+                    vclients.validate_batch_carve(
+                        shape.global_batch // pd, args.clients_per_device,
+                        flag="clients_per_device")
+                except ValueError as e:
+                    ap.error(f"{shape_name} on the "
+                             f"{'multi' if multi else 'single'}-pod mesh: "
+                             f"{e}")
 
     REPORT_DIR.mkdir(parents=True, exist_ok=True)
     n_fail = 0
@@ -197,7 +220,8 @@ def main():
                     cc = vclients.ClientConfig(
                         count=args.clients_per_device,
                         participation=args.participation,
-                        rate=args.participation_rate)
+                        rate=args.participation_rate,
+                        mode=args.client_mode)
                     cell = run_cell(arch, shape, multi, args.method,
                                     args.transport, args.t_e,
                                     verbose=not args.quiet, tag=args.tag,

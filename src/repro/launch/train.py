@@ -151,6 +151,11 @@ def main():
     ap.add_argument("--clients_per_device", type=int, default=1,
                     help="K virtual clients per data slice (the device "
                          "batch is carved into K per-client shards)")
+    ap.add_argument("--client_mode", default="merged",
+                    choices=list(vclients.CLIENT_MODES),
+                    help="merged: widen the voter axis to D*K; stream: "
+                         "loop clients inside the step in O(model/32 + "
+                         "tally) memory (bitwise identical)")
     ap.add_argument("--participation", default="full",
                     choices=list(vclients.PARTICIPATION_MODES),
                     help="per-round client sampling (pinned to "
@@ -163,6 +168,14 @@ def main():
     ap.add_argument("--multi_pod", action="store_true",
                     help="use the production 2x16x16 mesh")
     args = ap.parse_args()
+
+    # surface the carve constraint as a clean CLI error instead of a
+    # jit-time traceback out of clients.carve_batch / client_slice
+    try:
+        vclients.validate_batch_carve(args.batch, args.clients_per_device,
+                                      flag="clients_per_device")
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -178,7 +191,8 @@ def main():
                                count=args.clients_per_device,
                                participation=args.participation,
                                rate=args.participation_rate,
-                               seed=args.participation_seed),
+                               seed=args.participation_seed,
+                               mode=args.client_mode),
                            compute_dtype=jnp.float32 if args.smoke
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,

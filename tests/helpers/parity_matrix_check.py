@@ -91,6 +91,25 @@ H.assert_trees_equal(H.aggregate(ref_c, ew), oracle, "clients-oracle",
                      exact=False, atol=1e-5)
 print("dc_hier_signsgd  K=4 sampled-weighted client cell OK")
 
+# ---- streamed client sweep on the 8-device mesh -----------------------
+# the same K=4 sampled-weighted cell run with mode="stream" (the in-step
+# fori_loop over clients accumulating the persistent integer tally) must
+# be bitwise the merged reference on every transport x layout ABOVE --
+# including the fused cell under the model-SHARDED flat layout, where
+# the per-rank tally accumulates in the shard_map bucket coordinate
+# space and the one data-axis all-gather happens after the client loop
+import dataclasses  # noqa: E402
+sc = dataclasses.replace(cc, mode="stream")
+for transport, layout in (("ag_packed", "tree"), ("fused", "tree"),
+                          ("fused", "flat"), ("ar_int8", "flat")):
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", transport,
+                        layout, clients=sc)
+    H.assert_trees_equal(ref_c, got, f"stream/{transport}/{layout}")
+got, _ = H.run_hier(topo, problem, "hier_sgd", clients=sc)
+merged_m, _ = H.run_hier(topo, problem, "hier_sgd", clients=cc)
+H.assert_trees_equal(merged_m, got, "stream/hier_sgd/mean")
+print("dc_hier_signsgd  K=4 streamed sweep == merged OK (incl. sharded)")
+
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
 # cells run the padded-block layout (LeafSlot.shard_pad) and must stay

@@ -129,6 +129,34 @@ def test_virtual_client_participation_documented():
     assert "sgn(0) = +1" in readme               # weighted-tie convention
 
 
+def test_streamed_client_sweep_documented():
+    """The streamed-sweep contract is pinned: the README matrix carries
+    a `stream` column with every method checked (both modes run every
+    cell bitwise), both docs state the O(model/32 + tally) memory
+    bound, and the architecture doc records the deferred-threshold
+    bitwise contract and the decision rule."""
+    from repro.core.clients import CLIENT_MODES
+    assert set(CLIENT_MODES) == {"merged", "stream"}
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    matrix = _readme_matrix()
+    for method in {m for m, _, _ in H.matrix_cells()}:
+        row = matrix[method]
+        assert row.get("stream") == "✓", (
+            f"README matrix: {method} must advertise client mode "
+            f"'stream' (tested by test_stream_matches_merged_matrix)")
+    assert "--client_mode" in readme
+    for text, name in ((readme, "README"), (arch, "architecture.md")):
+        assert "O(model/32 + tally)" in text, name
+        assert "bitwise" in text, name
+    assert "fori_loop" in arch
+    assert "tally_dtype" in arch                 # promotion rule shared
+    assert "deferred" in arch                    # threshold after loop
+    assert "fused_tally_finish" in arch          # one collective/step
+    assert "bench_clients.py" in readme and "bench_clients.py" in arch
+    assert "BENCH_clients.json" in readme
+
+
 def test_readme_tier1_command():
     """The README's verify command matches ROADMAP's tier-1 gate."""
     readme = (ROOT / "README.md").read_text()

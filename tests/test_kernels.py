@@ -95,3 +95,47 @@ def test_kernel_pipeline_roundtrip():
     vote = signs.majority_vote(s, axis=0)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(1.0 - 0.1 * vote), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [4096, 8192])
+@pytest.mark.parametrize("rho", [0.0, 0.2])
+@pytest.mark.parametrize("acc_dtype", [jnp.int8, jnp.int16, jnp.int32])
+def test_fused_tally_acc_matches_ref(n, rho, acc_dtype):
+    """Streamed-client accumulate (pack->popcount->tally RMW fused into
+    one pass) vs the pure-jnp oracle, swept over tally dtypes and the
+    shared-correction fold."""
+    p, d = 2, 3
+    key = jax.random.PRNGKey(8)
+    u = jax.random.normal(key, (p, d, n))
+    db = (jax.random.normal(jax.random.fold_in(key, 1), (p, n))
+          if rho else None)
+    w = jax.random.randint(jax.random.fold_in(key, 2), (p, d), 0, 5)
+    tally = jax.random.randint(jax.random.fold_in(key, 3), (p, d, n),
+                               -20, 20).astype(acc_dtype)
+    got = ops.fused_tally_acc_flat(u, db, rho, w, tally, interpret=True)
+    expect = ref.tally_acc_ref(u, db, rho, w, tally)
+    assert got.dtype == acc_dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_fused_tally_acc_accumulates_to_merged_vote():
+    """Folding K clients through the kernel then thresholding the tally
+    equals the merged weighted vote of the same K sign planes."""
+    from repro.core import votes
+    p, d, k, n = 1, 2, 6, 4096
+    key = jax.random.PRNGKey(9)
+    us = jax.random.normal(key, (k, p, d, n))
+    ws = jax.random.randint(jax.random.fold_in(key, 1), (k, p, d), 0, 3)
+    tally = jnp.zeros((p, d, n), jnp.int8)
+    for c in range(k):
+        tally = ops.fused_tally_acc_flat(us[c], None, 0.0, ws[c], tally,
+                                         interpret=True)
+    n_eff = jnp.sum(ws.astype(jnp.int32), axis=(0, 2))
+    vote = votes.tally_vote(jnp.sum(tally.astype(jnp.int32), axis=1),
+                            n_eff)
+    s_merged = signs.sgn(us.transpose(1, 0, 2, 3).reshape(p, k * d, n))
+    w_merged = ws.transpose(1, 0, 2).reshape(p, k * d)
+    from repro.core.topology import single_device_topology
+    merged = votes.vote_ar_int8(single_device_topology(), s_merged,
+                                w_merged, weight_bound=int(n_eff.max()))
+    np.testing.assert_array_equal(np.asarray(vote), np.asarray(merged))

@@ -22,6 +22,7 @@ program, and helpers/sharded_fused_check.py is the dedicated
 multi-chip fused acceptance cell (bitwise parity on both routes plus
 the no-model-axis-gather HLO assert).
 """
+import dataclasses
 import pathlib
 import subprocess
 import sys
@@ -235,6 +236,81 @@ def test_client_ef_abstaining_carries_residual(topo, problem):
         u = np.stack([np.asarray(gfn(c)[k]) for c in range(2)])[None]
         np.testing.assert_allclose(np.asarray(st2.ef[k]), u, rtol=2e-6,
                                    atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Streamed client sweep: mode="stream" loops clients inside the step,
+# folding each sign plane into a persistent integer tally -- it must be
+# BITWISE identical to the merged voter axis everywhere it exists.
+# ---------------------------------------------------------------------------
+
+
+def _stream(cc):
+    return dataclasses.replace(cc, mode="stream")
+
+
+@pytest.mark.parametrize("method,transport,layout", H.matrix_cells())
+def test_stream_matches_merged_matrix(topo, problem, method, transport,
+                                      layout):
+    """HEADLINE streamed contract: every matrix cell (sign AND mean
+    methods, all transports x layouts) is bitwise identical between the
+    merged voter axis and the streamed in-step client loop, under the
+    hardest regime (K=4, Bernoulli(0.5) participation, unequal |D_qk|
+    weights).  The merged cell stays the pinned reference."""
+    cc = H.client_cfg(1, 1, 4, "sampled_weighted")
+    ref, _ = H.run_hier(topo, problem, method, transport, layout,
+                        clients=cc)
+    got, _ = H.run_hier(topo, problem, method, transport, layout,
+                        clients=_stream(cc))
+    H.assert_trees_equal(ref, got,
+                         f"stream/{method}/{transport}/{layout}")
+
+
+@pytest.mark.parametrize("regime", H.CLIENT_REGIMES)
+def test_stream_matches_merged_regimes(topo, problem, regime):
+    """Every participation regime streams bitwise -- the per-round pinned
+    masks, |D_qk| weights and participating shares are computed once and
+    sliced per client inside the loop."""
+    cc = H.client_cfg(1, 1, 4, regime)
+    ref, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", "flat",
+                        clients=cc)
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", "flat",
+                        clients=_stream(cc))
+    H.assert_trees_equal(ref, got, f"stream-regime/{regime}")
+
+
+@pytest.mark.parametrize("layout", H.LAYOUTS)
+@pytest.mark.parametrize("kw", [{"error_feedback": True},
+                                {"momentum": 0.9}, {"decay": True}],
+                         ids=["ef", "momentum", "decay"])
+def test_stream_options(topo, problem, layout, kw):
+    """Per-client EF residuals and momentum live on the [P, D, K] voter
+    axis in BOTH modes; the streamed loop slices and writes back one
+    client at a time and must land on the identical state (EF under
+    fused transport drops to the per-leaf tally route, mirroring the
+    merged fallback to the tree vote)."""
+    cc = H.client_cfg(1, 1, 4, "sampled")
+    ref, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", layout,
+                        clients=cc, **kw)
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "fused", layout,
+                        clients=_stream(cc), **kw)
+    H.assert_trees_equal(ref, got, f"stream-options/{kw}/{layout}")
+
+
+def test_stream_k1_equivalence(topo, problem, refs):
+    """K=1 through the ACTIVE streamed machinery (a fori_loop of one
+    client) is still bitwise the legacy trajectory."""
+    cc = _stream(H.client_cfg(1, 1, 1, "full"))
+    assert cc.active and cc.mode == "stream"
+    for method in ("dc_hier_signsgd", "hier_sgd"):
+        ref, _ = _ref(refs, topo, problem, method)
+        got, _ = H.run_hier(topo, problem, method, clients=cc)
+        H.assert_trees_equal(ref, got, f"stream-k1/{method}")
+
+
+def test_stream_mode_validated():
+    with pytest.raises(ValueError, match="mode"):
+        dataclasses.replace(H.client_cfg(1, 1, 4, "full"), mode="bogus")
 
 
 def test_clients_reject_fsdp(topo):

@@ -82,3 +82,25 @@ def test_uplink_bits_table_ii():
     # the paper's headline: sign methods are ~32x cheaper than FP32
     assert signs.uplink_bits("hier_sgd", d, te) / signs.uplink_bits(
         "hier_signsgd", d, te) == 32
+
+
+def test_uplink_bits_clients_consistent_with_cost_model():
+    """ONE uplink accounting: signs.uplink_bits with (clients, rate) is
+    the per-slice expectation, and the cost model's fleet pricing is
+    exactly Q_EDGES*DEVS times it -- which in turn equals the legacy
+    per-client formula scaled by the participating client count
+    whenever Q*D*K*rate is integral."""
+    from benchmarks import cost_model as cm
+    d, te = cm.D_PARAMS, 15
+    # legacy back-compat: clients=1 / full participation returns the
+    # unscaled Table II int
+    for m in ("hier_signsgd", "dc_hier_signsgd", "hier_sgd"):
+        base = signs.uplink_bits(m, d, te)
+        assert isinstance(base, int)
+        assert signs.uplink_bits(m, d, te, clients=1,
+                                 participation_rate=1.0) == base
+        for k, p in ((64, 0.1), (4, 0.5), (1024, 0.25)):
+            fleet = cm.Q_EDGES * cm.DEVS * signs.uplink_bits(
+                m, d, te, clients=k, participation_rate=p)
+            part = cm.participating_clients(k, p)
+            assert fleet == pytest.approx(part * base)

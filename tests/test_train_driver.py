@@ -78,3 +78,23 @@ def test_fault_injection_device_loss(topo):
     # membership dipped during the outage and recovered
     assert min(h["live"] for h in hist) < 1.0
     assert hist[-1]["live"] == 1.0
+
+
+def test_cli_rejects_bad_client_carve():
+    """A per-device batch that does not divide into --clients_per_device
+    is rejected at the CLI (exit 2, readable argparse error) BEFORE any
+    model build or tracing -- not a mid-trace shape error."""
+    import pathlib
+    import subprocess
+    import sys
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--smoke",
+         "--batch", "5", "--clients_per_device", "4", "--steps", "1"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+    assert r.returncode == 2, (r.returncode, r.stderr[-2000:])
+    assert "does not divide into" in r.stderr
+    assert "--clients_per_device" in r.stderr
+    assert "Traceback" not in r.stderr

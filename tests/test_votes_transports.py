@@ -159,3 +159,87 @@ def test_weighted_mean_dev(topo):
     out = votes.weighted_mean_dev(topo, g, w)
     ref = 0.5 * g[0, 0] + 0.25 * g[0, 1] + 0.25 * g[0, 2]
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref))
+
+
+# -- streamed-tally machinery (ClientConfig.mode="stream") ------------------
+
+def test_streamed_tally_dtype_matches_vote_ar_int8_promotion():
+    """The streamed accumulator promotes EXACTLY where the merged int
+    tally (``vote_ar_int8`` / ``_tally_acc``) does: on the weight bound
+    sum(w), not on the client count -- 127 rides int8, 128 promotes to
+    int16, 32767 still rides int16, 32768 promotes to int32."""
+    assert votes.tally_dtype(127) == jnp.int8
+    assert votes.tally_dtype(128) == jnp.int16
+    assert votes.tally_dtype(32767) == jnp.int16
+    assert votes.tally_dtype(32768) == jnp.int32
+    for bound in (1, 2, 127, 128, 129, 255, 32767, 32768, 10**6):
+        assert votes.tally_dtype(bound) == votes._tally_acc(bound)
+
+
+def test_streamed_tally_no_wrap_at_promotion_boundaries():
+    """Unanimous +1 clients whose weights sum to the boundary: the
+    promoted dtype carries the tally exactly (an int8 tally would wrap
+    128 unanimous +1 weight to -128 -> vote -1)."""
+    for weights, bound in (((64, 63), 127), ((64, 64), 128),
+                           ((16384, 16383), 32767), ((16384, 16384), 32768)):
+        dt = votes.tally_dtype(bound)
+        tally = jnp.zeros((1, 1, 64), dt)
+        s = jnp.ones((1, 1, 64), jnp.int8)
+        for w in weights:
+            tally = votes.tally_add_signs(tally, s,
+                                          jnp.full((1, 1), w, jnp.int32))
+        assert tally.dtype == dt
+        assert int(np.asarray(tally).max()) == sum(weights)  # no wrap
+        vote = votes.tally_vote(jnp.sum(tally.astype(jnp.int32), axis=1),
+                                jnp.asarray([sum(weights)], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(vote), 1)
+
+
+def test_streamed_deferred_threshold_tie_and_abstain():
+    """Weighted tie resolves sgn(0) = +1 after the deferred threshold
+    (t = 0 <=> merged's 2*pos == n_eff), and an empty quorum abstains."""
+    s_pos = jnp.ones((1, 1, 32), jnp.int8)
+    tally = jnp.zeros((1, 1, 32), jnp.int8)
+    tally = votes.tally_add_signs(tally, s_pos, jnp.full((1, 1), 3))
+    tally = votes.tally_add_signs(tally, -s_pos, jnp.full((1, 1), 3))
+    t_edge = jnp.sum(tally.astype(jnp.int32), axis=1)
+    vote = votes.tally_vote(t_edge, jnp.asarray([6], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(vote), 1)   # sgn(0) = +1
+    # merged reference on the same two voters
+    s2 = jnp.concatenate([s_pos, -s_pos], axis=1)
+    topo = single_device_topology()
+    merged = votes.vote_ar_int8(topo, s2, jnp.asarray([[3, 3]]),
+                                weight_bound=6)
+    np.testing.assert_array_equal(np.asarray(vote), np.asarray(merged))
+    # empty quorum: zero weights -> n_eff 0 -> abstain (vote 0)
+    abstain = votes.tally_vote(jnp.zeros((1, 32), jnp.int32),
+                               jnp.asarray([0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(abstain), 0)
+
+
+def test_streamed_tally_matches_merged_weighted_vote(topo):
+    """Client-at-a-time tally accumulation (both the int8-sign and the
+    packed-words entry points) reproduces the merged weighted popcount
+    bitwise, including zero-weight (abstaining) clients."""
+    rng = np.random.default_rng(11)
+    p, d, k, n = 2, 3, 5, 96
+    s = jnp.asarray(rng.choice([-1, 1], size=(p, d * k, n)), jnp.int8)
+    w = jnp.asarray(rng.integers(0, 4, (p, d * k)), jnp.int32)
+    bound = int(np.asarray(w).reshape(p, d, k).sum(axis=2).max())
+    merged = votes.vote_ar_int8(topo, s, w, weight_bound=bound)
+
+    s3 = s.reshape(p, d, k, n)
+    w3 = w.reshape(p, d, k)
+    dt = votes.tally_dtype(bound)
+    tally_s = jnp.zeros((p, d, n), dt)
+    tally_w = jnp.zeros((p, d, n), dt)
+    for c in range(k):
+        s_c = s3[:, :, c]
+        tally_s = votes.tally_add_signs(tally_s, s_c, w3[:, :, c])
+        words = jax.vmap(jax.vmap(signs.pack_signs))(s_c)
+        tally_w = votes.tally_accumulate_words(words, w3[:, :, c], tally_w)
+    np.testing.assert_array_equal(np.asarray(tally_s), np.asarray(tally_w))
+    n_eff = jnp.sum(w.astype(jnp.int32), axis=1)
+    vote = votes.tally_vote(jnp.sum(tally_s.astype(jnp.int32), axis=1),
+                            n_eff)
+    np.testing.assert_array_equal(np.asarray(vote), np.asarray(merged))
