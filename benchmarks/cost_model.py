@@ -38,6 +38,7 @@ ZETA_IID = 0.05
 # is dominated by dispatch overhead in the ref_fed loop.
 EFF_FLOPS = 2.0e9
 DISPATCH_US = 350.0                          # per grad_fn/vote Python step
+CLOUD_PERIOD = 2                             # mtgc eta refresh cadence
 
 
 def participating_clients(clients_per_device: int = 1,
@@ -58,7 +59,11 @@ def round_cost_us(method: str, t_e: int, clients_per_device: int = 1,
     clients take no local step and send no uplink."""
     part = participating_clients(clients_per_device, rate)
     grad_calls = part * t_e
-    anchor_calls = part if method == "dc_hier_signsgd" else 0
+    # DC's anchor pass and the scaffold/mtgc control-variate refresh are
+    # the same extra fleet-wide gradient evaluation at w^(t)
+    anchor_calls = part if method in ("dc_hier_signsgd",
+                                      "scaffold_hier_signsgd",
+                                      "mtgc_hier_signsgd") else 0
     flops = 6.0 * D_PARAMS * BATCH * (grad_calls + anchor_calls)
     vote_steps = Q_EDGES * t_e
     return ((flops / EFF_FLOPS) * 1e6
@@ -74,6 +79,15 @@ def _bound(method: str, rho: float, zeta: float, t_e: int) -> float:
     if method == "dc_hier_signsgd":
         return (2 * (1 - rho) * zeta + noise
                 + ((3 + 8 * rho) * t_e / 2 - 1) * L_SMOOTH * MU)
+    if method == "scaffold_hier_signsgd":
+        # control variates cancel the heterogeneity bias term entirely
+        # but pay a larger client-drift constant than DC
+        return noise + (5.5 * t_e - 1) * L_SMOOTH * MU
+    if method == "mtgc_hier_signsgd":
+        # two-timescale correction: the cloud term is stale by up to
+        # cloud_period rounds, leaving a zeta residual DC does not have
+        return (2 * zeta / CLOUD_PERIOD + noise
+                + (2.5 * t_e - 1) * L_SMOOTH * MU)
     if method == "hier_sgd":        # unbiased: drift term only
         return 0.5 * zeta + (t_e - 1) * L_SMOOTH * MU_SGD * 0.1
     if method == "hier_local_qsgd":  # + quantizer variance inflation
@@ -136,6 +150,49 @@ def clients_rows(cells=((64, 0.1),)) -> list:
                          round_cost_us(m, 15, k, p),
                          f"uplink_mbits_round={bits / 1e6:.1f} "
                          f"participants={part} src=cost_model"))
+    return rows
+
+
+def downlink_bits(method: str, d: int, t_e: int = 15,
+                  cloud_period: int = CLOUD_PERIOD) -> float:
+    """Per-round edge->device downlink bits per client for the
+    drift-correction method axis.
+
+    Every method broadcasts the fp32 edge model once per round (the
+    T_E local steps re-use it); the corrections add:
+
+      * dc:       the shared anchor delta c - c_q        (+32d)
+      * scaffold: the shared c_global control variate    (+32d)
+                  (c_local never travels -- it is born device-side)
+      * mtgc:     the per-client gamma term every round  (+32d) and the
+                  cloud-timescale eta term amortized over cloud_period
+                  rounds                                 (+32d/period)
+    """
+    base = 32.0 * d
+    if method == "hier_signsgd":
+        return base
+    if method == "dc_hier_signsgd":
+        return base + 32.0 * d
+    if method == "scaffold_hier_signsgd":
+        return base + 32.0 * d
+    if method == "mtgc_hier_signsgd":
+        return base + 32.0 * d + 32.0 * d / cloud_period
+    raise ValueError(method)
+
+
+def methods_rows(t_e: int = 15, cloud_period: int = CLOUD_PERIOD) -> list:
+    """Drift-correction method-axis rows (``--fast`` CI profile): the
+    Thm-style stationarity proxy under severe heterogeneity next to the
+    per-client downlink each correction costs."""
+    rows = []
+    for m in ("hier_signsgd", "dc_hier_signsgd", "scaffold_hier_signsgd",
+              "mtgc_hier_signsgd"):
+        c = _bound(m, 0.2, ZETA_NONIID, t_e)
+        down = downlink_bits(m, D_PARAMS, t_e, cloud_period)
+        rows.append((f"methods/{m}", round_cost_us(m, t_e),
+                     f"final_loss={_loss_proxy(c)} "
+                     f"downlink_kb_round={down / 8e3:.1f} "
+                     f"src=cost_model"))
     return rows
 
 

@@ -12,6 +12,8 @@ BENCH_transports.json.)
   fig4      rho sensitivity at T_E=15           (paper Fig. 4)
   clients   virtual-client scale-out (K=64, p=0.1): participating
             uplink + round cost (always cost-model priced)
+  methods   drift-correction method axis: Thm-style loss proxy +
+            per-client downlink (dc / scaffold / mtgc accounting)
   roofline  3-term roofline per dry-run cell    (deliverable g)
 
 Flags: ``--only fig2`` to run a subset; ``--fast`` is the CI profile --
@@ -32,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "table2", "fig2", "fig3", "fig4",
-                             "clients", "roofline"])
+                             "clients", "methods", "roofline"])
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out-dir", default=None,
                     help="directory for bench_results.{csv,json} "
@@ -62,6 +64,12 @@ def main() -> None:
         # virtual-client scale-out (always cost-model priced: the row
         # exists to track the participating-uplink accounting)
         rows += cost_model.clients_rows(cells=((64, 0.1),))
+    if want("methods"):
+        # drift-correction method axis (always cost-model priced): the
+        # Thm-style stationarity proxy next to each correction's
+        # per-client downlink bytes (dc anchor vs scaffold c_global vs
+        # mtgc two-term)
+        rows += cost_model.methods_rows()
     if want("roofline"):
         try:
             rows += roofline.roofline_rows()

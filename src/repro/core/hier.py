@@ -34,9 +34,16 @@ flat buffer (``core.flatbuf`` layout, DC correction fused pre-sign,
 Pallas kernels on TPU) instead of per-leaf tree maps -- bit-identical
 votes, one gather (see the transport matrix in ``core.votes``).
 
-Methods: hier_signsgd | dc_hier_signsgd | hier_sgd | hier_local_qsgd,
-plus beyond-paper options (error feedback, sign-momentum) in the
-replicated regime.
+Methods: hier_signsgd | dc_hier_signsgd | scaffold_hier_signsgd |
+mtgc_hier_signsgd | hier_sgd | hier_local_qsgd, plus beyond-paper
+options (error feedback, sign-momentum) in the replicated regime.
+The scaffold/mtgc methods put alternative drift corrections in the same
+pre-sign slot as DC: SCAFFOLD per-client control variates
+(sgn(g + rho*(c_global - c_local_qk))) and MTGC's multi-timescale terms
+(sgn(g + rho*(gamma_qk + eta_q)), edge term every round / cloud term
+every ``cloud_period`` rounds) -- state in the corr_cl/corr_edge slots,
+refreshed fresh at each round boundary (``compute_corrections``),
+replicated regime only.
 
 Regimes:
   * replicated: per-device grads are explicit ([P, D, ...] arrays) --
@@ -76,7 +83,11 @@ from repro.core.topology import Topology
 
 PyTree = Any
 
-SIGN_METHODS = ("hier_signsgd", "dc_hier_signsgd")
+SIGN_METHODS = ("hier_signsgd", "dc_hier_signsgd", "scaffold_hier_signsgd",
+                "mtgc_hier_signsgd")
+# methods whose clients apply a per-client control-variate / multi-
+# timescale correction in the pre-sign slot (state: corr_cl + corr_edge)
+CLIENT_CORRECTION_METHODS = ("scaffold_hier_signsgd", "mtgc_hier_signsgd")
 ALL_METHODS = SIGN_METHODS + ("hier_sgd", "hier_local_qsgd")
 
 
@@ -93,6 +104,13 @@ class AlgoConfig:
                                       # lives AS the core.flatbuf buffer;
                                       # replicated regime only)
     anchor_staleness: int = 1         # 1 = paper's pipelined delta, 0 = fresh
+                                      # (DC only; scaffold/mtgc corrections
+                                      # are always refreshed fresh at the
+                                      # round boundary)
+    cloud_period: int = 2             # MTGC slow timescale: the cloud-level
+                                      # eta term refreshes every cloud_period
+                                      # rounds (the edge-level gamma term
+                                      # refreshes every round)
     clients: vclients.ClientConfig = vclients.ClientConfig()
                                       # virtual-client scale-out: K clients
                                       # per data slice, per-round sampling,
@@ -108,11 +126,16 @@ class AlgoConfig:
 
     def __post_init__(self):
         if self.method not in ALL_METHODS:
-            raise ValueError(f"unknown method {self.method!r}")
+            raise ValueError(
+                f"unknown method {self.method!r} (choose from "
+                f"{', '.join(ALL_METHODS)})")
         if self.transport not in votes.SIGN_TRANSPORTS:
             raise ValueError(f"unknown transport {self.transport!r}")
         if self.state_layout not in ("tree", "flat"):
             raise ValueError(f"unknown state_layout {self.state_layout!r}")
+        if self.cloud_period < 1:
+            raise ValueError(
+                f"cloud_period must be >= 1, got {self.cloud_period}")
 
     @property
     def is_sign(self) -> bool:
@@ -122,19 +145,40 @@ class AlgoConfig:
     def is_dc(self) -> bool:
         return self.method == "dc_hier_signsgd"
 
+    @property
+    def is_scaffold(self) -> bool:
+        return self.method == "scaffold_hier_signsgd"
+
+    @property
+    def is_mtgc(self) -> bool:
+        return self.method == "mtgc_hier_signsgd"
+
+    @property
+    def has_client_correction(self) -> bool:
+        """Per-client correction state in the pre-sign slot (corr_cl +
+        corr_edge buffers): SCAFFOLD control variates or MTGC's
+        multi-timescale terms."""
+        return self.method in CLIENT_CORRECTION_METHODS
+
 
 class TrainState(NamedTuple):
     """Training state.  With ``state_layout="flat"`` the params / delta /
-    ef / mom entries are ``flatbuf.FlatState`` buffers ([P, n_pad] and
-    [P, D, n_pad]) instead of pytrees; delta / ef / mom are ``None``
-    whenever the method / options do not use them (DC correction only for
-    ``dc_hier_signsgd`` or the FSDP regime's lift plumbing)."""
+    ef / mom / corr entries are ``flatbuf.FlatState`` buffers ([P, n_pad]
+    and [P, D, n_pad]) instead of pytrees; each optional entry is ``None``
+    whenever the method / options do not read it (DC correction only for
+    ``dc_hier_signsgd`` or the FSDP regime's lift plumbing; corr_cl /
+    corr_edge only for the scaffold/mtgc client-correction methods)."""
     step: jax.Array                   # global step counter (t * T_E + tau)
     params: PyTree                    # [P, ...] per-pod edge models v_q
     delta: PyTree | None              # [P, ...] active correction c - c_q
     delta_next: PyTree | None         # staged delta (anchor_staleness=1)
     ef: PyTree | None                 # [P, D*K, ...] error-feedback residual
     mom: PyTree | None                # [P, D*K, ...] sign-momentum buffer
+    corr_cl: PyTree | None            # [P, D*K, ...] per-client correction:
+                                      #   scaffold c_local / mtgc gamma_qk
+    corr_edge: PyTree | None          # [P, ...] per-edge correction term:
+                                      #   scaffold c_global (one pod-
+                                      #   replicated copy) / mtgc eta_q
     rng: jax.Array                    # (K = clients per slice; K=1 default)
 
 
@@ -210,6 +254,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             "virtual clients (clients count/participation/weights) require "
             "the replicated regime: the FSDP lift votes per layer shard "
             "with physical-device masks")
+    if algo.has_client_correction and fsdp:
+        raise ValueError(
+            f"{algo.method} requires the replicated regime: its per-client "
+            "correction state (corr_cl) rides the explicit voter axis, "
+            "which the FSDP lift never materializes")
     # the merged voter axis: K virtual clients per physical data slice
     # (d_virtual == devices_per_pod on the inactive legacy path)
     d_virtual = topo.devices_per_pod * cc.count
@@ -395,6 +444,246 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                              c, c_q)
         return constrain_master(delta)
 
+    # ---------------- scaffold / mtgc correction refresh -----------------
+    def compute_corrections(params, corr_cl, corr_edge, batch, rngs,
+                            edge_w, dev_w, part, rnd_index):
+        """Round-boundary refresh of the pre-sign client-correction state
+        at the freshly aggregated params (always fresh -- the DC staging
+        knob does not apply).  Every quantity below is built from the
+        anchor gradients a_qk = grad f_qk(w^t) in f32, stored back in
+        ``delta_dtype``.
+
+        scaffold (option-I control variates): a participating client sets
+          c_local_qk <- a_qk
+        and the shared variate absorbs the weighted drift
+          c_global <- c_global + sum_q ew_q sum_k sh_qk (a_qk - c_local_qk)
+        -- telescoping under full participation.  An abstaining client
+        carries c_local forward (the EF contract) and its zero
+        participating share drops it from the drift sum.
+
+        mtgc (multi-timescale): the edge-level term refreshes every round,
+          gamma_qk <- c_q - a_qk,   c_q = sum_k sh_qk a_qk,
+        the cloud-level term only every ``cloud_period`` rounds,
+          eta_q <- c - c_q,         c = sum_q ew_q c_q.
+        An edge whose whole quorum abstains keeps BOTH its terms for the
+        round (its c_q is the empty sum); like DC's delta, c still sums
+        the abstained edges' zero c_q -- documented semantics.
+
+        ``dev_w``/``part`` arrive like ``compute_delta``'s: merged
+        [P, D*K] participating shares / vote gate, or UNmerged [P, D, K]
+        on the streamed path.  ``part=None`` (legacy, non-virtual) updates
+        unconditionally, mirroring EF's carry-forward contract.
+        """
+        dd = algo.delta_dtype
+        do_cloud = (rnd_index % algo.cloud_period) == 0
+
+        if stream:
+            return _corrections_stream(params, corr_cl, corr_edge, batch,
+                                       rngs, edge_w, dev_w, part, do_cloud)
+
+        # merged voter axis: all [P, D*K, ...] anchor grads at once; the
+        # flat layout runs the SAME per-coordinate arithmetic on the
+        # whole-model buffer (array leaves under the same tree.maps)
+        pt = master_views(params) if flat else params
+        g_dev, _ = per_device_grads(pt, batch, rngs)
+        if flat:
+            layout = params.layout
+            a32 = flatten_buf(layout, g_dev, 2, jnp.float32)
+            cl_old, ce_old = corr_cl.buf, corr_edge.buf
+        else:
+            a32 = jax.tree.map(lambda g: g.astype(jnp.float32), g_dev)
+            cl_old, ce_old = corr_cl, corr_edge
+        live = (jnp.ones((topo.pods,), bool) if part is None
+                else jnp.any(part, axis=1))
+
+        def gate(fresh, old):
+            if part is None:
+                return fresh
+            return jax.tree.map(
+                lambda f, o: jnp.where(
+                    part.reshape(part.shape + (1,) * (f.ndim - 2)), f, o),
+                fresh, old)
+
+        def wmean(t):
+            return jax.tree.map(
+                lambda x: votes.weighted_mean_dev(topo, x, dev_w,
+                                                  clients=k_merge), t)
+
+        if algo.is_scaffold:
+            upd_q = wmean(jax.tree.map(
+                lambda a, c: a - c.astype(jnp.float32), a32, cl_old))
+            drift = pod_avg(upd_q, edge_w)
+            ce_new = jax.tree.map(
+                lambda e, dr: (e.astype(jnp.float32) + dr).astype(dd),
+                ce_old, drift)
+            cl_new = gate(jax.tree.map(lambda a: a.astype(dd), a32), cl_old)
+        else:  # mtgc
+            c_q = wmean(a32)
+            c = pod_avg(c_q, edge_w)
+            eta = jax.tree.map(lambda u, v: (u - v).astype(dd), c, c_q)
+            sel = do_cloud & live
+            ce_new = jax.tree.map(
+                lambda f, o: jnp.where(
+                    sel.reshape((topo.pods,) + (1,) * (f.ndim - 1)), f, o),
+                eta, ce_old)
+            cl_new = gate(jax.tree.map(
+                lambda cq, a: (cq[:, None] - a).astype(dd), c_q, a32),
+                cl_old)
+        if flat:
+            return (corr_cl.replace(
+                        topo.constrain(cl_new, flat_spec(layout, 2))),
+                    constrain_master(corr_edge.replace(ce_new)))
+        cl_new = jax.tree.map(
+            lambda x, cs: topo.constrain(x, topo.dev_spec(*cs)),
+            cl_new, bundle.compute_specs)
+        return cl_new, constrain_master(ce_new)
+
+    def _corrections_stream(params, corr_cl, corr_edge, batch, rngs,
+                            edge_w, dev_w, part, do_cloud):
+        """Streamed refresh: a fori_loop over clients folds the
+        share-weighted anchor sums in the exact ``weighted_mean_dev
+        clients=`` re-association (one client's grads live at a time) and
+        writes per-client state in place.  MTGC needs c_q before gamma,
+        so it recomputes the (deterministic) anchor grads in a second
+        loop instead of stashing K f32 gradient copies -- live anchor
+        memory stays O(model)."""
+        dd = algo.delta_dtype
+        p, d, k = topo.pods, topo.devices_per_pod, cc.count
+        layout = params.layout if flat else None
+        pt = master_views(params) if flat else params
+        rngs3 = rngs.reshape((p, d, k) + rngs.shape[2:])
+        live = (jnp.ones((p,), bool) if part is None
+                else jnp.any(part, axis=(1, 2)))
+
+        def grads_c(c_idx):
+            b_c = vclients.client_slice(batch, k, c_idx)
+            r_c = jax.lax.dynamic_index_in_dim(rngs3, c_idx, axis=2,
+                                               keepdims=False)
+            g_c, _ = per_device_grads(pt, b_c, r_c, devices=d)
+            if flat:
+                return flatten_buf(layout, g_c, 2, jnp.float32)
+            return jax.tree.map(lambda g: g.astype(jnp.float32), g_c)
+
+        def wmul(x, sh):          # x: [P, D, ...], sh: [P, D]
+            return x * sh.reshape(sh.shape + (1,) * (x.ndim - 2))
+
+        def sh_of(c_idx):
+            return jax.lax.dynamic_index_in_dim(dev_w, c_idx, axis=2,
+                                                keepdims=False)
+
+        def gate_c(c_idx, fresh, old):
+            if part is None:
+                return fresh
+            g = jax.lax.dynamic_index_in_dim(part, c_idx, axis=2,
+                                             keepdims=False)
+            return jax.tree.map(
+                lambda f, o: jnp.where(
+                    g.reshape(g.shape + (1,) * (f.ndim - 2)), f, o),
+                fresh, old)
+
+        # [P, D, K, ...] views of the per-client slot (array leaf for the
+        # flat layout -- the tree.maps below treat both uniformly)
+        if flat:
+            cl3 = corr_cl.buf.reshape(p, d, k, layout.n_pad)
+            acc0 = topo.constrain(
+                jnp.zeros((p, d, layout.n_pad), jnp.float32),
+                flat_spec(layout, 2))
+        else:
+            cl3 = jax.tree.map(
+                lambda x: x.reshape((p, d, k) + x.shape[2:]), corr_cl)
+            acc0 = jax.tree.map(
+                lambda v, cs: topo.constrain(
+                    jnp.zeros((p, d) + v.shape[1:], jnp.float32),
+                    topo.dev_spec(*cs)),
+                pt, bundle.compute_specs)
+
+        def take3(t3, c_idx):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, c_idx, axis=2, keepdims=False), t3)
+
+        def put3(t3, tc, c_idx):
+            return jax.tree.map(
+                lambda x3, xc: jax.lax.dynamic_update_index_in_dim(
+                    x3, xc, c_idx, axis=2), t3, tc)
+
+        ce_old = corr_edge.buf if flat else corr_edge
+        if algo.is_scaffold:
+            # one pass: fold the share-weighted drift (a - c_local) and
+            # refresh participating clients' c_local in place
+            def body(c_idx, carry):
+                acc2, cl3_c = carry
+                a_c = grads_c(c_idx)
+                sh = sh_of(c_idx)
+                cl_c = take3(cl3_c, c_idx)
+                acc2 = jax.tree.map(
+                    lambda a2, a, cv: a2 + wmul(
+                        a - cv.astype(jnp.float32), sh),
+                    acc2, a_c, cl_c)
+                fresh = gate_c(c_idx,
+                               jax.tree.map(lambda a: a.astype(dd), a_c),
+                               cl_c)
+                return acc2, put3(cl3_c, fresh, c_idx)
+
+            acc2, cl3 = jax.lax.fori_loop(0, k, body, (acc0, cl3))
+            upd_q = jax.tree.map(lambda a: jnp.sum(a, axis=1), acc2)
+            drift = pod_avg(upd_q, edge_w)
+            ce_new = jax.tree.map(
+                lambda e, dr: (e.astype(jnp.float32) + dr).astype(dd),
+                ce_old, drift)
+        else:  # mtgc: pass 1 folds c_q, pass 2 writes gamma per client
+            def body(c_idx, acc):
+                return jax.tree.map(
+                    lambda a0, a: a0 + wmul(a, sh_of(c_idx)),
+                    acc, grads_c(c_idx))
+
+            acc = jax.lax.fori_loop(0, k, body, acc0)
+            c_q = jax.tree.map(lambda a: jnp.sum(a, axis=1), acc)
+            c = pod_avg(c_q, edge_w)
+            eta = jax.tree.map(lambda u, v: (u - v).astype(dd), c, c_q)
+            sel = do_cloud & live
+            ce_new = jax.tree.map(
+                lambda f, o: jnp.where(
+                    sel.reshape((p,) + (1,) * (f.ndim - 1)), f, o),
+                eta, ce_old)
+
+            def body2(c_idx, cl3_c):
+                a_c = grads_c(c_idx)
+                fresh = jax.tree.map(
+                    lambda cq, a: (cq[:, None] - a).astype(dd), c_q, a_c)
+                fresh = gate_c(c_idx, fresh, take3(cl3_c, c_idx))
+                return put3(cl3_c, fresh, c_idx)
+
+            cl3 = jax.lax.fori_loop(0, k, body2, cl3)
+
+        cl_t = jax.tree.map(
+            lambda x: x.reshape((p, d * k) + x.shape[3:]), cl3)
+        if flat:
+            return (corr_cl.replace(
+                        topo.constrain(cl_t, flat_spec(layout, 2))),
+                    constrain_master(corr_edge.replace(ce_new)))
+        cl_t = jax.tree.map(
+            lambda x, cs: topo.constrain(x, topo.dev_spec(*cs)),
+            cl_t, bundle.compute_specs)
+        return cl_t, constrain_master(ce_new)
+
+    def client_correction_dev(corr_cl, corr_edge):
+        """[P, D*K, ...] per-client pre-sign correction in delta_dtype:
+        scaffold q = c_global - c_local ; mtgc q = gamma + eta -- the
+        merged-voter-axis analogue of DC's shared delta broadcast.  Never
+        folded into the fused kernel (the kernel's fold is one SHARED
+        delta); instead it pre-adds into u_dev like the DC non-fold path.
+        """
+        cl = (shardflat.tree_views(topo, corr_cl, cast=False)
+              if flat else corr_cl)
+        ce = (shardflat.tree_views(topo, corr_edge, cast=False)
+              if flat else corr_edge)
+        ce_dev = _bcast_pd(topo, ce, bundle.compute_specs, None,
+                           devices=d_virtual)
+        if algo.is_scaffold:
+            return jax.tree.map(lambda e, cv: e - cv, ce_dev, cl)
+        return jax.tree.map(lambda cv, e: cv + e, cl, ce_dev)
+
     def flat_spec(layout, lead: int = 1):
         """Buffer spec (model-axis sharded iff the layout is) -- the
         single source of truth is ``shardflat.buf_spec`` so train-state
@@ -440,8 +729,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                                     batch_dims=batch_dims, dtype=dtype)
 
     # ---------------- local step direction ------------------------------
-    def local_direction(state, params, delta, batch, rngs, dev_w, vote_w,
-                        maskf):
+    def local_direction(state, params, delta, corr_cl, corr_edge, batch,
+                        rngs, dev_w, vote_w, maskf):
         """-> (direction [P,...], new_ef, new_mom, losses).
 
         dev_w: [P, D(*K)] aggregation shares (participating shares when
@@ -492,6 +781,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 u_dev = jax.tree.map(
                     lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                     u_dev, d_dev)
+            if algo.has_client_correction:
+                q_dev = client_correction_dev(corr_cl, corr_edge)
+                u_dev = jax.tree.map(
+                    lambda u, ql: u + algo.rho * ql.astype(u.dtype),
+                    u_dev, q_dev)
             if algo.transport == "fused" and not algo.error_feedback:
                 direction = votes.fused_sign_vote(
                     topo, u_dev, delta if fold_dc else None,
@@ -506,8 +800,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         return direction, new_ef, new_mom, losses
 
     # ---------------- flat-state local step -----------------------------
-    def local_step_flat(state, params, delta, batch, rngs, dev_w, vote_w,
-                        mu):
+    def local_step_flat(state, params, delta, corr_cl, corr_edge, batch,
+                        rngs, dev_w, vote_w, mu):
         """state_layout='flat': whole-buffer update, no per-leaf loops.
 
         params/delta are ``flatbuf.FlatState``; returns the *updated*
@@ -572,6 +866,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             u_dev = jax.tree.map(
                 lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                 u_dev, d_dev)
+        if algo.has_client_correction:
+            q_dev = client_correction_dev(corr_cl, corr_edge)
+            u_dev = jax.tree.map(
+                lambda u, ql: u + algo.rho * ql.astype(u.dtype),
+                u_dev, q_dev)
         if algo.transport == "fused" and not algo.error_feedback:
             # the whole-model v <- v - mu*vote is ONE vote_update
             # read-modify-write over the packed-word buffer (mu folded
@@ -592,8 +891,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         return descend(vote_direction(s_dev, vote_w)), new_ef, new_mom, losses
 
     # ---------------- streamed-client local step ------------------------
-    def local_step_stream(state, params, delta, batch, rngs, shares3,
-                          vote_w3, mu):
+    def local_step_stream(state, params, delta, corr_cl, corr_edge, batch,
+                          rngs, shares3, vote_w3, mu):
         """ClientConfig.mode='stream': fori_loop over the K virtual
         clients with only ONE client's gradient live at a time.
 
@@ -625,6 +924,14 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                   if flat else delta)
             delta_tree = _bcast_pd(topo, dt, bundle.compute_specs, None,
                                    devices=d)
+        # ... and so does the scaffold/mtgc edge-level term; the
+        # per-client term (corr3) is sliced per client inside the loop
+        ce_tree = corr3 = None
+        if algo.has_client_correction:
+            ce = (shardflat.tree_views(topo, corr_edge, cast=False)
+                  if flat else corr_edge)
+            ce_tree = _bcast_pd(topo, ce, bundle.compute_specs, None,
+                                devices=d)
 
         # per-voter state views sliced per client inside the loop
         def views3(fs_or_tree):
@@ -635,6 +942,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
 
         ef3 = views3(state.ef) if algo.error_feedback else None
         mom3 = views3(state.mom) if algo.momentum > 0.0 else None
+        if algo.has_client_correction:
+            corr3 = views3(corr_cl)
 
         def take_c(tree, c_idx):
             return jax.tree.map(
@@ -739,6 +1048,15 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 u_c = jax.tree.map(
                     lambda u, dl: u + algo.rho * dl.astype(u.dtype),
                     u_c, delta_tree)
+            if ce_tree is not None:
+                cl_c = take_c(corr3, c_idx)
+                if algo.is_scaffold:
+                    q_c = jax.tree.map(lambda e, cv: e - cv, ce_tree, cl_c)
+                else:
+                    q_c = jax.tree.map(lambda cv, e: cv + e, cl_c, ce_tree)
+                u_c = jax.tree.map(
+                    lambda u, ql: u + algo.rho * ql.astype(u.dtype),
+                    u_c, q_c)
             if fuse:
                 tally_f = votes.fused_sign_tally_accumulate(
                     topo, vlayout, u_c,
@@ -851,17 +1169,22 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 carve = lambda b: b
             else:
                 carve = lambda b: vclients.carve_batch(b, cc.count)
+            # participation gate for the correction-state refresh --
+            # same contract as EF: only clients with a live vote update
+            corr_part = (vote_w3 > 0) if stream else (vote_w > 0)
         else:
             vote_w = maskf > 0.5
             shares = dev_weights
             carve = lambda b: b
+            corr_part = None          # legacy path updates unconditionally
         train_batch = carve(batch["train"])
         anchor_batch = carve(batch.get("anchor", batch["train"]))
         agg_shares = shares3 if stream else shares
 
-        # -- prologue: cloud aggregation + anchor refresh at round start
+        # -- prologue: cloud aggregation + anchor/correction refresh at
+        # round start
         def prologue(op):
-            params, delta, delta_next = op
+            params, delta, delta_next, corr_cl, corr_edge = op
             params = pod_avg(params, edge_weights)
             params = constrain_master(params)
             if algo.is_dc:
@@ -871,19 +1194,24 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                     delta, delta_next = delta_next, fresh
                 else:
                     delta = fresh
-            return params, delta, delta_next
+            if algo.has_client_correction:
+                corr_cl, corr_edge = compute_corrections(
+                    params, corr_cl, corr_edge, anchor_batch, rngs_a,
+                    edge_weights, agg_shares, corr_part, rnd_index)
+            return params, delta, delta_next, corr_cl, corr_edge
 
         def no_op(op):
             return op
 
-        operand = (state.params, state.delta, state.delta_next)
+        operand = (state.params, state.delta, state.delta_next,
+                   state.corr_cl, state.corr_edge)
         if sync == "cond":
-            params, delta, delta_next = jax.lax.cond(
+            params, delta, delta_next, corr_cl, corr_edge = jax.lax.cond(
                 state.step % t_e == 0, prologue, no_op, operand)
         elif sync == "always":
-            params, delta, delta_next = prologue(operand)
+            params, delta, delta_next, corr_cl, corr_edge = prologue(operand)
         else:  # 'never'
-            params, delta, delta_next = operand
+            params, delta, delta_next, corr_cl, corr_edge = operand
 
         mu = jnp.asarray(
             algo.mu if algo.is_sign else algo.mu_sgd, algo.master_dtype)
@@ -893,23 +1221,24 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         # -- local sign step
         if stream:
             params, new_ef, new_mom, losses = local_step_stream(
-                state, params, delta, train_batch, rngs_l, shares3,
-                vote_w3, mu)
+                state, params, delta, corr_cl, corr_edge, train_batch,
+                rngs_l, shares3, vote_w3, mu)
         elif flat:
             params, new_ef, new_mom, losses = local_step_flat(
-                state, params, delta, train_batch, rngs_l, shares,
-                vote_w, mu)
+                state, params, delta, corr_cl, corr_edge, train_batch,
+                rngs_l, shares, vote_w, mu)
         else:
             direction, new_ef, new_mom, losses = local_direction(
-                state, params, delta, train_batch, rngs_l, shares,
-                vote_w, maskf)
+                state, params, delta, corr_cl, corr_edge, train_batch,
+                rngs_l, shares, vote_w, maskf)
             params = jax.tree.map(
                 lambda v, s: v - mu * s.astype(v.dtype), params, direction)
         params = constrain_master(params)
 
         new_state = TrainState(
             step=state.step + 1, params=params, delta=delta,
-            delta_next=delta_next, ef=new_ef, mom=new_mom, rng=rng)
+            delta_next=delta_next, ef=new_ef, mom=new_mom,
+            corr_cl=corr_cl, corr_edge=corr_edge, rng=rng)
         metrics = {
             "loss": jnp.mean(losses.astype(jnp.float32)),
             "loss_per_pod": jnp.mean(losses.astype(jnp.float32), axis=1),
@@ -966,9 +1295,16 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             ef = zeros_pd(jnp.float32)
         if not fsdp and algo.momentum > 0.0:
             mom = zeros_pd(jnp.float32)
+        # correction slots only exist where they are read (scaffold /
+        # mtgc): one per-client voter-axis buffer + one master-shaped term
+        corr_cl = corr_edge = None
+        if algo.has_client_correction:
+            corr_cl = zeros_pd(algo.delta_dtype)
+            corr_edge = zeros_m(algo.delta_dtype)
         return TrainState(step=jnp.zeros((), jnp.int32), params=params,
                           delta=delta, delta_next=delta_next, ef=ef,
-                          mom=mom, rng=rng)
+                          mom=mom, corr_cl=corr_cl, corr_edge=corr_edge,
+                          rng=rng)
 
     return init_fn, train_step
 
@@ -1029,5 +1365,7 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         delta_next=master(abstract_state.delta_next),
         ef=dev(abstract_state.ef),
         mom=dev(abstract_state.mom),
+        corr_cl=dev(abstract_state.corr_cl),
+        corr_edge=master(abstract_state.corr_edge),
         rng=rep,
     )

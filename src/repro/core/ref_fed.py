@@ -2,7 +2,11 @@
 
 A faithful, loop-over-clusters transcription of Algorithm 1 (HierSignSGD)
 and Algorithm 2 (DC-HierSignSGD), plus the two baselines the paper compares
-against (HierSGD and the Hier-Local-QSGD-style ternary-quantized variant).
+against (HierSGD and the Hier-Local-QSGD-style ternary-quantized variant),
+plus the two related-work drift corrections that share DC's pre-sign slot:
+SCAFFOLD-style per-client control variates (scaffold_hier_signsgd) and
+MTGC's multi-timescale edge/cloud correction (mtgc_hier_signsgd,
+arXiv:2409.18448) -- see ``global_round`` for the exact update rules.
 
 This module is the ground truth for the distributed implementation in
 ``repro.core.hier`` (tested bit-wise equivalent on small problems) and the
@@ -31,24 +35,41 @@ from repro.core import signs
 PyTree = Any
 GradFn = Callable[[PyTree, Any, jax.Array], PyTree]
 
+SIGN_METHODS = ("hier_signsgd", "dc_hier_signsgd", "scaffold_hier_signsgd",
+                "mtgc_hier_signsgd")
+CLIENT_CORRECTION_METHODS = ("scaffold_hier_signsgd", "mtgc_hier_signsgd")
+
 
 @dataclasses.dataclass
 class HierConfig:
     """Hyper-parameters shared by all hierarchical methods (paper Table I)."""
     mu: float = 5e-3            # step-size (mu)
     t_e: int = 15               # local steps per global round (T_E)
-    rho: float = 0.2            # correction strength (DC only)
-    method: str = "dc_hier_signsgd"  # hier_sgd | hier_local_qsgd | hier_signsgd | dc_hier_signsgd
+    rho: float = 0.2            # correction strength (DC / scaffold / mtgc)
+    method: str = "dc_hier_signsgd"  # hier_sgd | hier_local_qsgd |
+                                # hier_signsgd | dc_hier_signsgd |
+                                # scaffold_hier_signsgd | mtgc_hier_signsgd
     mu_sgd: float = 1.0         # step-size for the full-precision baselines
     decay: bool = False         # mu_t = mu0/sqrt(t+1) (paper's CIFAR setting)
+    cloud_period: int = 2       # mtgc only: rounds between eta refreshes
 
 
 @dataclasses.dataclass
 class FedState:
-    """Cloud + per-edge state across global rounds."""
+    """Cloud + per-edge state across global rounds.
+
+    corr_cl / corr_edge are the scaffold/mtgc correction states
+    (lazy-initialized to zeros on the first ``global_round`` once the
+    per-edge client counts are known from the batch structure):
+    scaffold keeps c_local per client in corr_cl[q][k] and one
+    c_global copy per edge in corr_edge[q] (all copies identical --
+    the distributed impl's pod-replicated broadcast); mtgc keeps
+    gamma_qk in corr_cl[q][k] and eta_q in corr_edge[q]."""
     w: PyTree                         # global model w^(t)
     delta: list[PyTree]               # per-edge correction c^(t-1) - c_q^(t-1)
     round: int = 0
+    corr_cl: list[list[PyTree]] | None = None
+    corr_edge: list[PyTree] | None = None
 
 
 def init_state(w0: PyTree, num_edges: int) -> FedState:
@@ -118,7 +139,7 @@ def global_round(
         (mask gates the vote only) bit-for-bit.
     """
     q_edges = len(batches)
-    mu = cfg.mu if cfg.method in ("hier_signsgd", "dc_hier_signsgd") else cfg.mu_sgd
+    mu = cfg.mu if cfg.method in SIGN_METHODS else cfg.mu_sgd
     if cfg.decay:
         mu = mu / jnp.sqrt(state.round + 1.0)
 
@@ -143,6 +164,75 @@ def global_round(
             anchors_cq.append(_tree_weighted_sum(edge_shares(q), g_devs))
         c_glob = _tree_weighted_sum(edge_weights, anchors_cq)
 
+    # ---- scaffold / mtgc correction refresh at w^(t) (fresh semantics:
+    # the refreshed state is used by THIS round's local steps, mirroring
+    # hier.compute_corrections in the round prologue)
+    corr_cl, corr_edge = state.corr_cl, state.corr_edge
+    if cfg.method in CLIENT_CORRECTION_METHODS:
+        zeros = lambda: jax.tree.map(jnp.zeros_like, state.w)
+        if corr_cl is None:
+            corr_cl = [[zeros() for _ in anchor_batches[q]]
+                       for q in range(q_edges)]
+        if corr_edge is None:
+            corr_edge = [zeros() for _ in range(q_edges)]
+
+        def participates(q, k):
+            """The distributed impl's EF carry-forward gate (vote weight
+            > 0): only meaningful on the reweighting (virtual-client)
+            path; the legacy path updates unconditionally."""
+            if not reweight_participation:
+                return True
+            ok = device_mask is None or bool(device_mask[q][k])
+            if vote_weights is not None:
+                ok = ok and vote_weights[q][k] > 0
+            return ok
+
+        anchors = []
+        for q in range(q_edges):
+            g_devs = []
+            for k in range(len(anchor_batches[q])):
+                rng, sub = jax.random.split(rng)
+                g_devs.append(grad_fn(state.w, anchor_batches[q][k], sub))
+            anchors.append(g_devs)
+
+        if cfg.method == "scaffold_hier_signsgd":
+            # c_global absorbs the share-weighted drift sum_qk (a - c_local)
+            # (abstainers enter with zero participating share), THEN the
+            # participating clients refresh c_local <- a_qk -- option-I
+            # control variates; telescopes under full participation.
+            upd = [_tree_weighted_sum(
+                       edge_shares(q),
+                       [jax.tree.map(lambda a, c: a - c, anchors[q][k],
+                                     corr_cl[q][k])
+                        for k in range(len(anchors[q]))])
+                   for q in range(q_edges)]
+            drift = _tree_weighted_sum(edge_weights, upd)
+            corr_edge = [jax.tree.map(lambda e, d: e + d, corr_edge[q],
+                                      drift)
+                         for q in range(q_edges)]
+            corr_cl = [[anchors[q][k] if participates(q, k)
+                        else corr_cl[q][k]
+                        for k in range(len(anchors[q]))]
+                       for q in range(q_edges)]
+        else:  # mtgc: gamma every round, eta every cloud_period rounds;
+            # an edge whose whole quorum abstains keeps BOTH its terms
+            # (c still sums the abstained edges' zero c_q, like DC)
+            c_qs = [_tree_weighted_sum(edge_shares(q), anchors[q])
+                    for q in range(q_edges)]
+            c = _tree_weighted_sum(edge_weights, c_qs)
+            if state.round % cfg.cloud_period == 0:
+                corr_edge = [
+                    jax.tree.map(lambda u, v: u - v, c, c_qs[q])
+                    if any(participates(q, k)
+                           for k in range(len(anchors[q])))
+                    else corr_edge[q]
+                    for q in range(q_edges)]
+            corr_cl = [[jax.tree.map(lambda u, v: u - v, c_qs[q],
+                                     anchors[q][k])
+                        if participates(q, k) else corr_cl[q][k]
+                        for k in range(len(anchors[q]))]
+                       for q in range(q_edges)]
+
     # ---- T_E local steps per edge (paper: in parallel over q)
     for q in range(q_edges):
         v = state.w
@@ -153,15 +243,27 @@ def global_round(
                 rng, sub = jax.random.split(rng)
                 g_devs.append(grad_fn(v, batches[q][k][tau], sub))
 
-            if cfg.method in ("hier_signsgd", "dc_hier_signsgd"):
-                # device-side (corrected) sign -> 1-bit uplink -> majority vote
-                def corrected_sign(g, d):
-                    if cfg.method == "dc_hier_signsgd":
-                        return signs.sgn(g + cfg.rho * d)
-                    return signs.sgn(g)
-                sign_devs = [
-                    jax.tree.map(corrected_sign, g, delta_q) for g in g_devs
-                ]
+            if cfg.method in SIGN_METHODS:
+                # device-side (corrected) sign -> 1-bit uplink -> majority
+                # vote; scaffold/mtgc put their per-client correction in
+                # the same pre-sign slot as DC's shared delta
+                if cfg.method == "dc_hier_signsgd":
+                    sign_devs = [jax.tree.map(
+                        lambda g, d: signs.sgn(g + cfg.rho * d),
+                        g, delta_q) for g in g_devs]
+                elif cfg.method == "scaffold_hier_signsgd":
+                    sign_devs = [jax.tree.map(
+                        lambda g, e, cv: signs.sgn(g + cfg.rho * (e - cv)),
+                        g_devs[k], corr_edge[q], corr_cl[q][k])
+                        for k in range(len(g_devs))]
+                elif cfg.method == "mtgc_hier_signsgd":
+                    sign_devs = [jax.tree.map(
+                        lambda g, cv, e: signs.sgn(g + cfg.rho * (cv + e)),
+                        g_devs[k], corr_cl[q][k], corr_edge[q])
+                        for k in range(len(g_devs))]
+                else:
+                    sign_devs = [jax.tree.map(signs.sgn, g)
+                                 for g in g_devs]
                 mask_q = None
                 if device_mask is not None:
                     mask_q = jnp.asarray(device_mask[q], dtype=jnp.int32)
@@ -195,4 +297,5 @@ def global_round(
 
     # ---- cloud aggregation: w^(t+1) = sum_q (D_q/N) v_q^(t, T_E)
     w_next = _tree_weighted_sum(edge_weights, edge_models)
-    return FedState(w=w_next, delta=new_delta, round=state.round + 1)
+    return FedState(w=w_next, delta=new_delta, round=state.round + 1,
+                    corr_cl=corr_cl, corr_edge=corr_edge)

@@ -169,6 +169,10 @@ def uplink_bits(method: str, d: int, t_e: int, clients: int = 1,
         base = t_e * d
     elif method == "dc_hier_signsgd":        # + one full-precision anchor
         base = t_e * d + 32 * d
+    elif method in ("scaffold_hier_signsgd", "mtgc_hier_signsgd"):
+        # the control-variate refresh uploads one full-precision anchor
+        # gradient per participating client per round, exactly like DC
+        base = t_e * d + 32 * d
     else:
         raise ValueError(f"unknown method {method!r}")
     if clients == 1 and participation_rate >= 1.0:

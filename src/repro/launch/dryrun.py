@@ -109,6 +109,12 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
     shape = SHAPES[shape_name]
     cfg = configs.get_config(arch_name)
     ok, why = configs.shape_applicable(cfg, shape)
+    if (ok and shape.kind == "train" and cfg.param_mode == "fsdp"
+            and method in hier.CLIENT_CORRECTION_METHODS):
+        # scaffold/mtgc per-client state rides the explicit voter axis,
+        # which the FSDP lift never materializes -- clean SKIP instead
+        # of the make_hier_step ValueError
+        ok, why = False, f"{method} requires the replicated regime"
     cell = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",

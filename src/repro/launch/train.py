@@ -148,6 +148,10 @@ def main():
                          "buffer (whole-model fused update)")
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--rho", type=float, default=0.2)
+    ap.add_argument("--cloud_period", type=int, default=2,
+                    help="mtgc only: rounds between cloud-timescale eta "
+                         "refreshes (the edge-timescale gamma refreshes "
+                         "every round)")
     ap.add_argument("--clients_per_device", type=int, default=1,
                     help="K virtual clients per data slice (the device "
                          "batch is carved into K per-client shards)")
@@ -185,6 +189,7 @@ def main():
     else:
         topo = single_device_topology()
     algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
+                           cloud_period=args.cloud_period,
                            t_e=args.t_e, transport=args.transport,
                            state_layout=args.state_layout,
                            clients=vclients.ClientConfig(

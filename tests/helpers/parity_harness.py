@@ -139,7 +139,7 @@ def aggregate(params, edge_weights):
         params)
 
 
-def run_oracle(problem, method, mask=None, clients=None):
+def run_oracle(problem, method, mask=None, clients=None, cloud_period=2):
     """ref_fed transcription of Algorithms 1/2 on the same trajectory.
 
     With an active ``clients`` ClientConfig the oracle hosts the same
@@ -150,7 +150,7 @@ def run_oracle(problem, method, mask=None, clients=None):
     the vote, and anchor/mean shares reweight to the participants."""
     pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
     cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
-                             method=method)
+                             method=method, cloud_period=cloud_period)
     cc = clients or vclients.ClientConfig()
     k_c = cc.count
     state = ref_fed.init_state(problem["w0"], pods)
@@ -240,7 +240,7 @@ def client_cfg(pods: int, devs: int, k: int, regime: str,
 def matrix_cells():
     """Every supported replicated (method, transport, state_layout)."""
     cells = []
-    for method in ("hier_signsgd", "dc_hier_signsgd"):
+    for method in hier.SIGN_METHODS:
         for transport in SIGN_TRANSPORTS:
             for layout in LAYOUTS:
                 cells.append((method, transport, layout))

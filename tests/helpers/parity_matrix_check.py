@@ -36,7 +36,8 @@ for method, transport, layout in H.matrix_cells():
     print(f"{method:16s} {transport:10s} {layout:5s} parity OK")
 
 # ---- paper oracle (rng-free methods) ----------------------------------
-for method in ("hier_signsgd", "dc_hier_signsgd", "hier_sgd"):
+for method in ("hier_signsgd", "dc_hier_signsgd", "scaffold_hier_signsgd",
+               "mtgc_hier_signsgd", "hier_sgd"):
     agg = H.aggregate(refs[method], ew)
     oracle = H.run_oracle(problem, method)
     H.assert_trees_equal(agg, oracle, f"oracle/{method}", exact=False,
@@ -109,6 +110,29 @@ got, _ = H.run_hier(topo, problem, "hier_sgd", clients=sc)
 merged_m, _ = H.run_hier(topo, problem, "hier_sgd", clients=cc)
 H.assert_trees_equal(merged_m, got, "stream/hier_sgd/mean")
 print("dc_hier_signsgd  K=4 streamed sweep == merged OK (incl. sharded)")
+
+# ---- drift-correction methods: K=4 sampled-weighted cell --------------
+# one sampled-weighted cell per new pre-sign-correction method: merged
+# bitwise across transports x layouts (incl. the fused program under the
+# model-SHARDED flat layout, where the per-client control variates live
+# as voter-axis FlatState slots), streamed sweep bitwise vs merged on
+# the sharded fused cell, and the cloud-aggregated model pinned against
+# the grown ref_fed oracle
+for method in ("scaffold_hier_signsgd", "mtgc_hier_signsgd"):
+    ref_m, ew = None, None
+    for transport, layout in (("ag_packed", "tree"), ("fused", "flat")):
+        got, ew = H.run_hier(topo, problem, method, transport, layout,
+                             clients=cc)
+        ref_m = got if ref_m is None else ref_m
+        H.assert_trees_equal(ref_m, got,
+                             f"corr/{method}/{transport}/{layout}")
+    got, _ = H.run_hier(topo, problem, method, "fused", "flat",
+                        clients=sc)
+    H.assert_trees_equal(ref_m, got, f"corr-stream/{method}")
+    oracle = H.run_oracle(problem, method, clients=cc)
+    H.assert_trees_equal(H.aggregate(ref_m, ew), oracle,
+                         f"corr-oracle/{method}", exact=False, atol=1e-5)
+    print(f"{method:22s} K=4 sampled-weighted cell OK (incl. sharded)")
 
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat

@@ -22,6 +22,11 @@ EXPECT_FIG4 = {f"fig4/rho{r}" for r in (0.0, 0.2, 1.0)}
 # accounting (uplink scales with sampled K, not the fleet size)
 EXPECT_CLIENTS = {f"clients/K64_p0.1/{m}"
                   for m in ("hier_signsgd", "dc_hier_signsgd")}
+# drift-correction method axis: loss proxy + per-client downlink bytes
+# (dc anchor vs scaffold c_global vs mtgc two-term accounting)
+EXPECT_METHODS = {f"methods/{m}"
+                  for m in ("hier_signsgd", "dc_hier_signsgd",
+                            "scaffold_hier_signsgd", "mtgc_hier_signsgd")}
 
 
 def test_fast_profile_is_fast_and_schema_stable(tmp_path):
@@ -44,7 +49,8 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
     assert rows and all(set(row) == {"name", "us_per_call", "derived"}
                         for row in rows)
     names = {row["name"] for row in rows}
-    for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4, EXPECT_CLIENTS):
+    for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4, EXPECT_CLIENTS,
+                   EXPECT_METHODS):
         assert expect <= names, expect - names
     by_name = {row["name"]: row for row in rows}
     for name in EXPECT_FIG2 | EXPECT_FIG3 | EXPECT_FIG4:
@@ -59,5 +65,20 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
         assert "uplink_mbits_round=" in row["derived"], row
         assert "participants=" in row["derived"], row
         assert "src=cost_model" in row["derived"], row
+    for name in EXPECT_METHODS:
+        row = by_name[name]
+        assert row["us_per_call"] > 0
+        assert "final_loss=" in row["derived"], row
+        assert "downlink_kb_round=" in row["derived"], row
+        assert "src=cost_model" in row["derived"], row
+    # the corrections pay strictly more downlink than plain sign-voting,
+    # and mtgc's cloud-amortized second term tops the table
+    def _down(name):
+        d = by_name[name]["derived"]
+        return float(d.split("downlink_kb_round=")[1].split()[0])
+    assert (_down("methods/hier_signsgd")
+            < _down("methods/dc_hier_signsgd")
+            == _down("methods/scaffold_hier_signsgd")
+            < _down("methods/mtgc_hier_signsgd"))
     # table2 rows ride along unchanged
     assert any(n.startswith("table2/") for n in names)

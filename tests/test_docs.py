@@ -13,6 +13,8 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
 import parity_harness as H  # noqa: E402
 
+from repro.core import hier  # noqa: E402
+
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
              *sorted((ROOT / "docs").glob("*.md"))]
@@ -59,8 +61,7 @@ def _readme_matrix():
 
 def test_readme_matrix_matches_parity_parametrization():
     matrix = _readme_matrix()
-    sign_methods = {m for m, _, _ in H.matrix_cells()
-                    if m in ("hier_signsgd", "dc_hier_signsgd")}
+    sign_methods = set(hier.SIGN_METHODS)
     for method, transport, layout in H.matrix_cells():
         assert method in matrix, f"README matrix is missing {method}"
         row = matrix[method]
@@ -155,6 +156,28 @@ def test_streamed_client_sweep_documented():
     assert "fused_tally_finish" in arch          # one collective/step
     assert "bench_clients.py" in readme and "bench_clients.py" in arch
     assert "BENCH_clients.json" in readme
+
+
+def test_correction_slot_documented():
+    """The drift-correction method axis is pinned: the architecture doc
+    carries the pre-sign correction slot state table (which buffer,
+    which timescale, which tier owns the update), both docs name the
+    bias study artifacts, and the EF carry-forward participation
+    contract is stated."""
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "pre-sign correction slot" in arch
+    for buf in ("corr_cl", "corr_edge"):         # state-table rows
+        assert buf in arch, buf
+    for method in hier.CLIENT_CORRECTION_METHODS:
+        assert f"`{method}`" in arch, method
+        assert f"`{method}`" in readme, method
+    assert "cloud_period" in arch and "--cloud_period" in readme
+    assert "carry-forward" in arch and "carry-forward" in readme
+    assert "bias_study.py" in readme and "bias_study.py" in arch
+    assert "BENCH_bias.json" in readme and "BENCH_bias.json" in arch
+    # the per-method wire accounting is documented next to the study
+    assert "downlink_bits" in arch
 
 
 def test_readme_tier1_command():

@@ -3,7 +3,8 @@
 One shared toy trajectory (tests/helpers/parity_harness.py) is run
 through every supported train-step combination:
 
-  * methods: hier_signsgd | dc_hier_signsgd | hier_sgd | hier_local_qsgd
+  * methods: hier_signsgd | dc_hier_signsgd | scaffold_hier_signsgd |
+    mtgc_hier_signsgd | hier_sgd | hier_local_qsgd
   * transports: ag_packed | ar_int8 | fused          (sign methods)
   * state layouts: tree | flat
   * regimes: replicated | fsdp  (flat is replicated-only by design)
@@ -75,7 +76,8 @@ def test_matrix_cross_parity(topo, problem, refs, method, transport,
 
 
 @pytest.mark.parametrize("method", ["hier_signsgd", "dc_hier_signsgd",
-                                    "hier_sgd"])
+                                    "scaffold_hier_signsgd",
+                                    "mtgc_hier_signsgd", "hier_sgd"])
 def test_matrix_vs_oracle(topo, problem, refs, method):
     """Cloud-aggregated final model == the ref_fed paper oracle.
 
@@ -118,6 +120,27 @@ def test_flat_rejects_fsdp(topo):
                             bundle)
     with pytest.raises(ValueError):
         hier.AlgoConfig(state_layout="bogus")
+
+
+def test_unknown_method_error_lists_all_methods():
+    """Bugfix regression: the unknown-method ValueError names every
+    supported method so the caller can correct a typo from the message
+    alone."""
+    with pytest.raises(ValueError) as exc:
+        hier.AlgoConfig(method="hier_signsg")
+    for method in hier.ALL_METHODS:
+        assert method in str(exc.value)
+    with pytest.raises(ValueError, match="cloud_period"):
+        hier.AlgoConfig(method="mtgc_hier_signsgd", cloud_period=0)
+
+
+@pytest.mark.parametrize("method", hier.CLIENT_CORRECTION_METHODS)
+def test_correction_methods_reject_fsdp(topo, method):
+    """scaffold/mtgc per-client state rides the explicit voter axis,
+    which the FSDP lift never materializes."""
+    bundle = H.make_bundle("fsdp")
+    with pytest.raises(ValueError, match="replicated"):
+        hier.make_hier_step(topo, hier.AlgoConfig(method=method), bundle)
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +202,34 @@ def test_client_sampled_weighted_cross_transport(topo, problem):
             ref = got if ref is None else ref
             H.assert_trees_equal(
                 ref, got, f"clients-x/{transport}/{layout}")
+
+
+@pytest.mark.parametrize("method", hier.CLIENT_CORRECTION_METHODS)
+@pytest.mark.parametrize("regime", ["full", "sampled", "weighted"])
+def test_correction_client_cells(topo, problem, method, regime):
+    """Drift-correction method axis under virtual clients: every
+    transport x layout cell of {scaffold, mtgc} is bitwise identical
+    under K=4 x {full, sampled(0.5), weighted |D_qk|} participation,
+    the streamed in-step loop lands on the same state, and the
+    cloud-aggregated model matches the grown ref_fed oracle (fresh
+    control variates, EF-style carry-forward for abstainers)."""
+    cc = H.client_cfg(1, 1, 4, regime)
+    ref = ew = None
+    for transport in H.SIGN_TRANSPORTS:
+        for layout in H.LAYOUTS:
+            got, w = H.run_hier(topo, problem, method, transport, layout,
+                                clients=cc)
+            if ref is None:
+                ref, ew = got, w
+            H.assert_trees_equal(
+                ref, got, f"corr/{method}/{regime}/{transport}/{layout}")
+    got, _ = H.run_hier(topo, problem, method, "fused", "flat",
+                        clients=_stream(cc))
+    H.assert_trees_equal(ref, got, f"corr-stream/{method}/{regime}")
+    oracle = H.run_oracle(problem, method, clients=cc)
+    H.assert_trees_equal(H.aggregate(ref, ew), oracle,
+                         f"corr-oracle/{method}/{regime}", exact=False,
+                         atol=1e-5)
 
 
 def test_client_reweighted_mean_vs_oracle(topo, problem):
@@ -360,24 +411,37 @@ def test_flat_fused_single_vote_update(topo, problem, monkeypatch):
     ("dc_hier_signsgd", {"error_feedback": True}),
     ("hier_signsgd", {}),
     ("hier_signsgd", {"error_feedback": True, "momentum": 0.9}),
+    ("scaffold_hier_signsgd", {}),
+    ("mtgc_hier_signsgd", {}),
     ("hier_sgd", {}),
 ])
 @pytest.mark.parametrize("layout", H.LAYOUTS)
 def test_state_structure(topo, problem, method, opts, layout):
     """Regression: state entries are allocated only when used -- delta
-    only for DC (or FSDP), EF residual only under error_feedback,
-    momentum only when momentum > 0 -- in both state layouts."""
+    only for DC (or FSDP), correction buffers only for scaffold/mtgc
+    (no scaffold/mtgc slots under dc and no DC anchor under
+    scaffold/mtgc), EF residual only under error_feedback, momentum
+    only when momentum > 0 -- in both state layouts."""
     algo = H._algo(method, "ag_packed", layout, **opts)
     init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
     state = init_fn(problem["w0"], jax.random.PRNGKey(0))
     assert (state.delta is not None) == (method == "dc_hier_signsgd")
     assert (state.delta_next is not None) == (method == "dc_hier_signsgd")
+    corr = method in hier.CLIENT_CORRECTION_METHODS
+    assert (state.corr_cl is not None) == corr
+    assert (state.corr_edge is not None) == corr
     assert (state.ef is not None) == opts.get("error_feedback", False)
     assert (state.mom is not None) == (opts.get("momentum", 0.0) > 0)
     if layout == "flat":
         assert isinstance(state.params, flatbuf.FlatState)
-        for fs in (state.delta, state.ef, state.mom):
+        for fs in (state.delta, state.ef, state.mom, state.corr_cl,
+                   state.corr_edge):
             assert fs is None or isinstance(fs, flatbuf.FlatState)
+        if state.corr_cl is not None:
+            assert state.corr_cl.buf.dtype == algo.delta_dtype
+            # per-client buffer on the voter axis, per-edge on master
+            assert state.corr_cl.buf.shape[:2] == (1, 1)
+            assert state.corr_cl.batch_dims == 2
         if state.delta is not None:
             assert state.delta.buf.dtype == algo.delta_dtype
             # aux buffers re-label the layout with their own dtype

@@ -1,0 +1,187 @@
+"""Property suite for the drift-correction method axis of the ``ref_fed``
+oracle: SCAFFOLD control variates + MTGC multi-timescale correction.
+
+The oracle is the ground truth for ``scaffold_hier_signsgd`` and
+``mtgc_hier_signsgd``, so their semantics are pinned here *independently*
+of the distributed implementation:
+
+  * zero inter-cluster heterogeneity (every client holds the same data)
+    makes every pre-sign correction EXACTLY zero, so all three corrected
+    methods reproduce the plain ``hier_signsgd`` trajectory bitwise;
+  * SCAFFOLD's bookkeeping telescopes: after any number of rounds under
+    full participation, c_global equals the share-weighted sum of the
+    final per-client c_local states (each round's drift increment is
+    sum ew*sh*(c_local_new - c_local_old), and the sum collapses);
+  * an all-abstaining round leaves EVERY piece of correction state (and
+    the model) untouched -- the EF-style carry-forward contract,
+    including the mtgc cloud-timescale eta term on a cloud-period round;
+  * full-participation unit-weight cells are invariant under permuting
+    the clients of an edge (state permutes with them, w is unchanged).
+
+All trajectories run on a dyadic grid (targets on 2^-4, mu = 2^-6,
+rho = 1, uniform shares over 2 or 4 clients / 1 or 2 edges) so every
+weighted sum is EXACT in float32 and the properties hold bitwise, not
+just approximately.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref_fed
+
+DIM = 8
+GRID = 2.0 ** -4          # targets live on this dyadic grid
+MU = 2.0 ** -6            # so do all step sizes / shares -> exact sums
+
+CORR_METHODS = list(ref_fed.CLIENT_CORRECTION_METHODS)
+
+
+def _grad_fn(targets):
+    """Deterministic linear grads g_qk = w - target_qk (rng unused)."""
+    def grad_fn(params, batch, rng):
+        return {"w": params["w"] - targets[batch["q"]][batch["k"]]}
+    return grad_fn
+
+
+def _targets(q_edges, n, seed, homogeneous=False):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(-32, 33, size=(q_edges, n, DIM)).astype(np.float32)
+    if homogeneous:
+        t[:] = t[0, 0]
+    return jnp.asarray(t * GRID)
+
+
+def _round(state, method, targets, order=None, mask=None, vote_w=None,
+           reweight=False, cloud_period=2, t_e=2):
+    """One oracle round; clients of edge q run in ``order`` (default
+    identity), uniform dyadic shares, uniform edge weights."""
+    q_edges, n = targets.shape[0], targets.shape[1]
+    order = list(range(n)) if order is None else list(order)
+    cfg = ref_fed.HierConfig(mu=MU, t_e=t_e, rho=1.0, method=method,
+                             cloud_period=cloud_period)
+    batches = [[[{"q": q, "k": int(k)}] * t_e for k in order]
+               for q in range(q_edges)]
+    anchors = [[{"q": q, "k": int(k)} for k in order]
+               for q in range(q_edges)]
+    return ref_fed.global_round(
+        state, cfg, _grad_fn(targets), batches, anchors,
+        [1.0 / q_edges] * q_edges, [[1.0 / n] * n] * q_edges,
+        jax.random.PRNGKey(0),
+        device_mask=None if mask is None else [list(mask)] * q_edges,
+        vote_weights=None if vote_w is None else [list(vote_w)] * q_edges,
+        reweight_participation=reweight)
+
+
+def _w(state):
+    return np.asarray(state.w["w"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 7), st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.sampled_from(CORR_METHODS + ["dc_hier_signsgd"]))
+def test_zero_heterogeneity_matches_plain_trajectory(seed, n, q_edges,
+                                                     method):
+    """Identical data everywhere -> every correction is exactly zero
+    (dyadic arithmetic) -> the corrected trajectory IS the plain
+    hier_signsgd trajectory, bitwise, round after round."""
+    targets = _targets(q_edges, n, seed, homogeneous=True)
+    plain = corrected = ref_fed.init_state({"w": jnp.zeros(DIM)}, q_edges)
+    for _ in range(3):
+        plain = _round(plain, "hier_signsgd", targets)
+        corrected = _round(corrected, method, targets)
+        np.testing.assert_array_equal(_w(plain), _w(corrected))
+    if method == "mtgc_hier_signsgd":
+        for q in range(q_edges):
+            np.testing.assert_array_equal(
+                np.asarray(corrected.corr_edge[q]["w"]), 0.0)
+            for k in range(n):
+                np.testing.assert_array_equal(
+                    np.asarray(corrected.corr_cl[q][k]["w"]), 0.0)
+    elif method == "scaffold_hier_signsgd":
+        for q in range(q_edges):       # effective term c_global - c_local
+            for k in range(n):
+                np.testing.assert_array_equal(
+                    np.asarray(corrected.corr_edge[q]["w"]),
+                    np.asarray(corrected.corr_cl[q][k]["w"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 7), st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.integers(1, 4))
+def test_scaffold_bookkeeping_telescopes(seed, n, q_edges, rounds):
+    """Under full participation each round's c_global increment is the
+    share-weighted sum of the c_local updates, so after R rounds
+    c_global == sum_q ew_q sum_k sh_qk c_local_qk -- exactly, on the
+    dyadic grid (and every edge holds the identical c_global copy)."""
+    targets = _targets(q_edges, n, seed)
+    state = ref_fed.init_state({"w": jnp.zeros(DIM)}, q_edges)
+    for _ in range(rounds):
+        state = _round(state, "scaffold_hier_signsgd", targets)
+    expect = np.zeros(DIM, np.float32)
+    for q in range(q_edges):
+        for k in range(n):
+            expect += (1.0 / q_edges) * (1.0 / n) * np.asarray(
+                state.corr_cl[q][k]["w"])
+    for q in range(q_edges):
+        np.testing.assert_array_equal(np.asarray(state.corr_edge[q]["w"]),
+                                      expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 7), st.sampled_from([2, 4]),
+       st.sampled_from(CORR_METHODS))
+def test_all_abstaining_round_is_identity(seed, n, method):
+    """EF carry-forward contract: a round in which every client abstains
+    updates NOTHING -- model, c_local/gamma, c_global/eta all bitwise
+    unchanged.  cloud_period=1 forces the mtgc eta refresh to be
+    *attempted* (and gated) on the abstaining round too."""
+    targets = _targets(2, n, seed)
+    state = ref_fed.init_state({"w": jnp.zeros(DIM)}, 2)
+    state = _round(state, method, targets, mask=[True] * n,
+                   vote_w=[1] * n, reweight=True, cloud_period=1)
+    after = _round(state, method, targets, mask=[False] * n,
+                   vote_w=[1] * n, reweight=True, cloud_period=1)
+    np.testing.assert_array_equal(_w(state), _w(after))
+    for q in range(2):
+        np.testing.assert_array_equal(np.asarray(state.corr_edge[q]["w"]),
+                                      np.asarray(after.corr_edge[q]["w"]))
+        for k in range(n):
+            np.testing.assert_array_equal(
+                np.asarray(state.corr_cl[q][k]["w"]),
+                np.asarray(after.corr_cl[q][k]["w"]))
+    assert after.round == state.round + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 7), st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.sampled_from(CORR_METHODS))
+def test_full_participation_invariant_to_client_permutation(seed, n,
+                                                            q_edges,
+                                                            method):
+    """Full-participation unit-weight cells: permuting the clients of
+    every edge permutes the per-client correction state with them and
+    leaves the model trajectory bitwise unchanged (uniform dyadic
+    shares make the weighted sums exactly commutative)."""
+    rng = np.random.default_rng(seed + 100)
+    perm = [int(i) for i in rng.permutation(n)]
+    targets = _targets(q_edges, n, seed)
+
+    def run(order):
+        state = ref_fed.init_state({"w": jnp.zeros(DIM)}, q_edges)
+        for _ in range(2):
+            state = _round(state, method, targets, order=order,
+                           mask=[True] * n, vote_w=[1] * n, reweight=True)
+        return state
+
+    ident, permuted = run(range(n)), run(perm)
+    np.testing.assert_array_equal(_w(ident), _w(permuted))
+    for q in range(q_edges):
+        np.testing.assert_array_equal(
+            np.asarray(ident.corr_edge[q]["w"]),
+            np.asarray(permuted.corr_edge[q]["w"]))
+        for j, k in enumerate(perm):
+            # slot j of the permuted run hosts client perm[j]
+            np.testing.assert_array_equal(
+                np.asarray(ident.corr_cl[q][k]["w"]),
+                np.asarray(permuted.corr_cl[q][j]["w"]))
