@@ -1,5 +1,7 @@
-"""Fault-tolerance demo: checkpointed training that survives an injected
-device failure (quorum vote) and a simulated crash (restore + replay).
+"""Fault-tolerance demo: checkpointed training that survives a chaos
+schedule -- client kill, straggler demotion, heartbeat loss, an injected
+nan-loss (restore + replay from the newest checkpoint), and a simulated
+process crash (automatic resume).
 
     PYTHONPATH=src python examples/fault_tolerant_train.py
 """
@@ -12,24 +14,37 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import clients as vclients
 from repro.core import hier
 from repro.core.topology import single_device_topology
 from repro.launch.train import RunCfg, run_training
-from repro.runtime import failures
+from repro.runtime.chaos import ChaosEvent, FaultInjector
 
 cfg = configs.get_smoke("stablelm_3b")
 topo = single_device_topology()
 algo = hier.AlgoConfig(method="dc_hier_signsgd", mu=2e-3, t_e=4, rho=0.3,
-                       compute_dtype=jnp.float32)
+                       compute_dtype=jnp.float32,
+                       clients=vclients.ClientConfig(count=2))
 
 with tempfile.TemporaryDirectory() as ckpt:
     run = RunCfg(steps=12, batch_per_device=4, seq_len=64,
                  ckpt_dir=ckpt, ckpt_every=4, log_every=4)
-    # device (0,0) dies at step 6, recovers at step 9 (vote abstention
-    # in between -- the paper's majority vote tolerates it natively)
-    inj = failures.FaultInjector({6: ("device", 0, 0),
-                                  9: ("recover", 0, 0)})
+    # One explicit chaos schedule drives everything (events at step s
+    # apply before step s; the same schedule form feeds the parity
+    # matrix's chaos cells and `launch.train --chaos SEED`):
+    inj = FaultInjector([
+        ChaosEvent(3, "client", 0, 0, 1),      # virtual client dies
+        ChaosEvent(5, "recover", 0, 0, 1),     # ...and rejoins
+        ChaosEvent(6, "straggler", 0, 0, 0),   # demoted to abstention
+        ChaosEvent(8, "recover", 0, 0, 0),
+        ChaosEvent(9, "nan"),                  # numeric blow-up: the
+        # driver restores the newest checkpoint and replays -- batches
+        # are cursor-addressable and membership replays from the
+        # schedule, so the rerun is deterministic
+    ])
     state, hist = run_training(cfg, topo, algo, run, fault_injector=inj)
+    assert min(h["live"] for h in hist) < 1.0, "churn should be visible"
+    assert hist[-1]["live"] == 1.0, "everyone recovered"
     print(f"\nphase 1 done at step {hist[-1]['step']} "
           f"(loss {hist[-1]['loss']:.3f}); simulating crash + restart...")
     # "crash": rerun with a longer horizon -- run_training resumes from

@@ -218,7 +218,11 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
 
     batch: {'train': pytree of [P, D, b, ...], 'anchor': optional same}.
     edge_weights: [P] = D_q/N;  dev_weights: [P, D] = |D_qk|/D_q;
-    dev_mask: [P, D] float in {0,1} -- vote quorum / straggler mask.
+    dev_mask: [P, D] float in {0,1} -- vote quorum / straggler mask --
+        or, with an ACTIVE ``algo.clients``, optionally [P, D, K] per
+        virtual client (the elastic Membership's client-granular
+        liveness; multiplied into the per-round participation mask, so
+        churn is a runtime value change, never a retrace).
 
     Virtual clients (``algo.clients``, replicated regime only): when the
     ClientConfig is *active*, each physical slice hosts K virtual
@@ -1142,15 +1146,26 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         rngs_a = jax.random.split(r_anchor, pd[0] * pd[1])
         rngs_a = rngs_a.reshape(pd + rngs_a.shape[1:])
         maskf = dev_mask.astype(jnp.float32)
+        if maskf.ndim == 3 and not virtual:
+            raise ValueError(
+                "a client-granular [P, D, K] dev_mask requires an ACTIVE "
+                "AlgoConfig.clients (the virtual-client path); the legacy "
+                "path takes the [P, D] device mask")
         rnd_index = state.step // t_e
         if virtual:
             # per-round participation (pinned to (seed, round), so the
             # anchor pass and every local step of round t -- and a
             # checkpoint restored mid-round -- see the same quorum),
-            # combined with the caller's physical straggler mask
+            # combined with the caller's membership mask: [P, D] device
+            # granularity, or [P, D, K] per virtual client (elastic
+            # Membership churn -- a value change, never a retrace)
+            if maskf.ndim == 3 and maskf.shape[2] != cc.count:
+                raise ValueError(
+                    f"dev_mask client dim {maskf.shape[2]} != K={cc.count}")
+            maskf3 = maskf if maskf.ndim == 3 else maskf[:, :, None]
             part = vclients.participation_mask(
                 cc, topo.pods, topo.devices_per_pod, rnd_index)
-            part = topo.constrain(part * maskf[:, :, None],
+            part = topo.constrain(part * maskf3,
                                   topo.client_spec())         # [P, D, K]
             w_arr = cc.weight_array(topo.pods, topo.devices_per_pod)
             # weighted popcount weights: pure int32 arithmetic, so

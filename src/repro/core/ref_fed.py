@@ -113,6 +113,8 @@ def global_round(
     device_mask: Sequence[Sequence[bool]] | None = None,
     vote_weights: Sequence[Sequence[int]] | None = None,
     reweight_participation: bool = False,
+    device_mask_steps: Sequence[Sequence[Sequence[bool]]] | None = None,
+    edge_weights_agg: Sequence[float] | None = None,
 ) -> FedState:
     """Run one global round t (T_E local steps + cloud aggregation).
 
@@ -137,18 +139,32 @@ def global_round(
         full-precision edge means (``device_weights`` may then be
         UNNORMALIZED raw shares).  False keeps the legacy behavior
         (mask gates the vote only) bit-for-bit.
+    device_mask_steps: optional per-local-step masks (length ``t_e``;
+        chaos-schedule semantics: local step tau uses
+        ``device_mask_steps[tau]``, mirroring the distributed step
+        where the membership mask is a fresh runtime input every step,
+        while the pinned participation draw is per round).
+        ``device_mask`` stays the ROUND mask -- it gates the anchor
+        shares and the correction-state refresh, exactly like the
+        distributed round prologue (= the tau-0 mask under churn).
+    edge_weights_agg: optional cloud-aggregation weights for THIS
+        round's closing ``w_next`` (default ``edge_weights``).  The
+        distributed step aggregates round t in the prologue of step
+        (t+1)*T_E, i.e. with the NEXT round's edge weights -- under
+        membership churn the two differ.
     """
     q_edges = len(batches)
     mu = cfg.mu if cfg.method in SIGN_METHODS else cfg.mu_sgd
     if cfg.decay:
         mu = mu / jnp.sqrt(state.round + 1.0)
 
-    def edge_shares(q):
+    def edge_shares(q, mask=None):
         if not reweight_participation:
             return device_weights[q]
+        if mask is None:
+            mask = device_mask
         return _participating_shares(
-            device_weights[q],
-            None if device_mask is None else device_mask[q])
+            device_weights[q], None if mask is None else mask[q])
 
     new_delta = list(state.delta)
     edge_models: list[PyTree] = []
@@ -238,6 +254,11 @@ def global_round(
         v = state.w
         delta_q = state.delta[q]
         for tau in range(cfg.t_e):
+            # churn semantics: the membership mask of local step tau
+            # (the distributed step reads fresh membership arrays every
+            # step; the round mask is the tau-0 / prologue view)
+            mask_tau = (device_mask if device_mask_steps is None
+                        else device_mask_steps[tau])
             g_devs = []
             for k in range(len(batches[q])):
                 rng, sub = jax.random.split(rng)
@@ -265,8 +286,8 @@ def global_round(
                     sign_devs = [jax.tree.map(signs.sgn, g)
                                  for g in g_devs]
                 mask_q = None
-                if device_mask is not None:
-                    mask_q = jnp.asarray(device_mask[q], dtype=jnp.int32)
+                if mask_tau is not None:
+                    mask_q = jnp.asarray(mask_tau[q], dtype=jnp.int32)
                 if vote_weights is not None:
                     vw = jnp.asarray(vote_weights[q], dtype=jnp.int32)
                     mask_q = vw if mask_q is None else vw * mask_q
@@ -276,7 +297,8 @@ def global_round(
                 )
                 v = jax.tree.map(lambda p, s: p - mu * s.astype(p.dtype), v, vote)
             elif cfg.method == "hier_sgd":
-                g_edge = _tree_weighted_sum(edge_shares(q), g_devs)
+                g_edge = _tree_weighted_sum(edge_shares(q, mask_tau),
+                                            g_devs)
                 v = _tree_axpy(-mu, g_edge, v)
             elif cfg.method == "hier_local_qsgd":
                 q_devs = []
@@ -287,7 +309,8 @@ def global_round(
                     q_devs.append(treedef.unflatten([
                         signs.ternary_quantize(l, r) for l, r in zip(leaves, subs)
                     ]))
-                g_edge = _tree_weighted_sum(edge_shares(q), q_devs)
+                g_edge = _tree_weighted_sum(edge_shares(q, mask_tau),
+                                            q_devs)
                 v = _tree_axpy(-mu, g_edge, v)
             else:
                 raise ValueError(cfg.method)
@@ -296,6 +319,11 @@ def global_round(
             new_delta[q] = jax.tree.map(lambda c, cq: c - cq, c_glob, anchors_cq[q])
 
     # ---- cloud aggregation: w^(t+1) = sum_q (D_q/N) v_q^(t, T_E)
-    w_next = _tree_weighted_sum(edge_weights, edge_models)
+    # (under membership churn the closing weights are the NEXT round's
+    # edge weights -- the distributed prologue's view; see
+    # ``edge_weights_agg``)
+    w_next = _tree_weighted_sum(
+        edge_weights if edge_weights_agg is None else edge_weights_agg,
+        edge_models)
     return FedState(w=w_next, delta=new_delta, round=state.round + 1,
                     corr_cl=corr_cl, corr_edge=corr_edge)

@@ -48,8 +48,38 @@ def lower_train(built, topo, algo, shape, sync):
     _, step = hier.make_hier_step(topo, algo, built.bundle, sync=sync)
     state_abs = S.train_state_abstract(built, topo, algo)
     batch_abs = S.train_batch_abstract(built.cfg, shape, topo)
-    ew, dw, mask = S.weights_abstract(topo)
+    ew, dw, mask = S.weights_abstract(topo, algo.clients)
     return jax.jit(step).lower(state_abs, batch_abs, ew, dw, mask)
+
+
+def chaos_report(topo, algo, cfg, seed, steps):
+    """Compile a seeded chaos schedule against this cell's membership
+    and verify every emitted array matches the lowered step's abstract
+    weight specs -- i.e. the whole schedule replays against ONE
+    executable (churn is recompilation-free by construction)."""
+    from repro.runtime import chaos, elastic
+    if cfg.param_mode == "fsdp":
+        return {"skipped": True,
+                "reason": "client-granular membership requires the "
+                          "replicated regime (FSDP lifts the voter axis "
+                          "away)"}
+    member = elastic.Membership(topo.pods, topo.devices_per_pod,
+                                clients=algo.clients)
+    inj = chaos.FaultInjector.seeded(seed, steps, topo.pods,
+                                     topo.devices_per_pod,
+                                     algo.clients.count)
+    arrays = chaos.compile_schedule(inj, member, steps)
+    specs = S.weights_abstract(topo, algo.clients)
+    for arr in arrays:
+        for got, want in zip(arr, specs):
+            assert got.shape == want.shape and got.dtype == want.dtype, (
+                f"membership array {got.shape}/{got.dtype} would retrace "
+                f"a step lowered for {want.shape}/{want.dtype}")
+    distinct = len({(a.edge_weights.tobytes(), a.dev_weights.tobytes(),
+                     a.mask.tobytes()) for a in arrays})
+    return {"skipped": False, "seed": seed, "steps": steps,
+            "events": len(inj.events), "distinct_memberships": distinct,
+            "recompilations": 0}
 
 
 def lower_prefill(built, topo, shape):
@@ -105,7 +135,7 @@ def analyze(lowered, label, verbose=True, axis_sizes=None,
 
 def run_cell(arch_name, shape_name, multi_pod, method, transport,
              t_e, verbose=True, tag="baseline", state_layout="tree",
-             clients=None):
+             clients=None, chaos_seed=None):
     shape = SHAPES[shape_name]
     cfg = configs.get_config(arch_name)
     ok, why = configs.shape_applicable(cfg, shape)
@@ -115,6 +145,9 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
         # which the FSDP lift never materializes -- clean SKIP instead
         # of the make_hier_step ValueError
         ok, why = False, f"{method} requires the replicated regime"
+    if (ok and shape.kind == "train" and cfg.param_mode == "fsdp"
+            and clients is not None and clients.active):
+        ok, why = False, "virtual clients require the replicated regime"
     cell = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -147,6 +180,11 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
         lowered = lower_train(built, topo, algo, shape, sync="always")
         phases["sync_step"] = analyze(lowered, "sync_step", verbose,
                                       axis_sizes, hname("sync_step"))
+        if chaos_seed is not None:
+            cell["chaos"] = chaos_report(topo, algo, cfg, chaos_seed,
+                                         steps=4 * t_e)
+            if verbose:
+                print(f"    chaos: {cell['chaos']}")
     elif shape.kind == "prefill":
         lowered = lower_prefill(built, topo, shape)
         phases["prefill"] = analyze(lowered, "prefill", verbose, axis_sizes,
@@ -181,6 +219,13 @@ def main():
                          "quorum at --participation_rate)")
     ap.add_argument("--participation_rate", type=float, default=1.0)
     ap.add_argument("--t_e", type=int, default=15)
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="attach a chaos-cell report to every train "
+                         "cell: compile a seeded fault schedule "
+                         "(runtime.chaos) against the cell's membership "
+                         "and verify the arrays replay against the ONE "
+                         "compiled step (FSDP cells report a clean "
+                         "SKIP)")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
@@ -232,7 +277,7 @@ def main():
                                     args.transport, args.t_e,
                                     verbose=not args.quiet, tag=args.tag,
                                     state_layout=args.state_layout,
-                                    clients=cc)
+                                    clients=cc, chaos_seed=args.chaos)
                     cell["wall_s"] = round(time.time() - t0, 1)
                     out.write_text(json.dumps(cell, indent=1))
                     print(f"   OK ({cell['wall_s']}s) -> {out.name}",

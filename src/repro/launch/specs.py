@@ -50,10 +50,17 @@ def train_batch_abstract(cfg: LMConfig, shape: ShapeCfg, topo: Topology):
     return {"train": batch}
 
 
-def weights_abstract(topo: Topology):
+def weights_abstract(topo: Topology, clients=None):
+    """(edge_weights, dev_weights, mask) abstract runtime inputs --
+    the arrays ``runtime.elastic.Membership.weights()`` emits.  With an
+    active ClientConfig the mask is client-granular [P, D, K]."""
     ew = _sds((topo.pods,), jnp.float32, topo, P())
     dw = _sds((topo.pods, topo.devices_per_pod), jnp.float32, topo, P())
-    mask = dw
+    if clients is not None and clients.active:
+        mask = _sds((topo.pods, topo.devices_per_pod, clients.count),
+                    jnp.float32, topo, P())
+    else:
+        mask = dw
     return ew, dw, mask
 
 

@@ -29,6 +29,7 @@ from repro.core import hier, votes
 from repro.core.topology import Topology, single_device_topology
 from repro.data import synthetic
 from repro.models import build
+from repro.runtime import chaos as chaos_mod
 from repro.runtime import elastic, failures
 
 
@@ -68,7 +69,12 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
         frontend_dim=cfg.frontend_dim, n_patches=cfg.n_patches,
         d_model=cfg.d_model))
 
-    member = elastic.Membership(topo.pods, topo.devices_per_pod)
+    # membership speaks the step's own vocabulary: with an active
+    # ClientConfig the mask it emits is client-granular [P, D, K], and
+    # every churn event is a VALUE change of fixed-shape arrays (no
+    # retrace -- pinned by the parity matrix's zero-recompilation test)
+    member = elastic.Membership(topo.pods, topo.devices_per_pod,
+                                clients=algo.clients)
     detector = failures.FailureDetector()
     saver = AsyncSaver(run.ckpt_dir) if run.ckpt_dir else None
 
@@ -84,23 +90,21 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
     step = start
     while step < run.steps:
         if fault_injector is not None:
-            ev = fault_injector.at(step)
-            if ev:
-                kind, pod, dev = ev
-                if kind == "device":
-                    member.mark_failed(pod, dev)
-                elif kind == "pod":
-                    member.mark_failed(pod)
-                elif kind == "recover":
-                    member.heartbeat(pod, dev or 0, time.time())
-                    member.live[pod, :] = True
-        ew, dw, mask = member.weights()
+            # events at step s apply BEFORE step s runs -- the same
+            # semantics chaos.compile_schedule gives the parity tests
+            chaos_mod.apply_events(member, fault_injector.at(step),
+                                   now=float(step))
+        arrays = member.weights()
         batch = {"train": stream(step)}
         t0 = time.time()
-        state, metrics = jstep(state, batch, jnp.asarray(ew),
-                               jnp.asarray(dw), jnp.asarray(mask))
+        state, metrics = jstep(state, batch,
+                               jnp.asarray(arrays.edge_weights),
+                               jnp.asarray(arrays.dev_weights),
+                               jnp.asarray(arrays.mask))
         loss = float(metrics["loss"])
         detector.record_step(time.time() - t0)
+        if fault_injector is not None and fault_injector.nan_due(step):
+            loss = float("nan")        # injected numeric blow-up
 
         if not detector.check_loss(loss):
             if saver:
@@ -110,7 +114,13 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
             if restored is None or not detector.may_restore():
                 raise RuntimeError(
                     f"non-finite loss at step {step}, no checkpoint")
+            detector.record_restore()   # may_restore() is a pure query
             step, state = restored
+            if fault_injector is not None:
+                # membership replays from the schedule so the replayed
+                # steps see the same arrays as the first pass
+                member = chaos_mod.replay_membership(fault_injector,
+                                                     member, step)
             print(f"[train] non-finite loss; restored step {step}")
             continue
 
@@ -169,6 +179,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run under a seeded fault schedule "
+                         "(runtime.chaos.FaultInjector.seeded: client/"
+                         "pod kills, heartbeat loss, straggler "
+                         "demotion, recoveries -- same seed, same "
+                         "schedule); nan-loss recovery needs --ckpt")
     ap.add_argument("--multi_pod", action="store_true",
                     help="use the production 2x16x16 mesh")
     args = ap.parse_args()
@@ -202,7 +218,15 @@ def main():
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,
                  seq_len=args.seq, ckpt_dir=args.ckpt)
-    _, history = run_training(cfg, topo, algo, run)
+    injector = None
+    if args.chaos is not None:
+        injector = chaos_mod.FaultInjector.seeded(
+            args.chaos, args.steps, topo.pods, topo.devices_per_pod,
+            algo.clients.count)
+        print(f"[train] chaos seed {args.chaos}: "
+              f"{len(injector.events)} scheduled events")
+    _, history = run_training(cfg, topo, algo, run,
+                              fault_injector=injector)
     print(f"[train] done: loss {history[0]['loss']:.4f} -> "
           f"{history[-1]['loss']:.4f}")
 

@@ -3,19 +3,25 @@
 Detection signals:
   * non-finite loss (desync / data corruption / numeric blow-up),
   * step-time outliers (straggler escalation: after ``patience``
-    consecutive slow steps a device is demoted to abstention via the
-    vote mask; the paper's majority vote makes this loss-free),
-  * injected faults (tests / chaos engineering hooks).
+    consecutive slow steps a client is demoted to abstention via the
+    membership mask; the paper's majority vote makes this loss-free),
+  * injected faults (``runtime.chaos`` -- deterministic seeded
+    schedules for tests / chaos engineering).
 
 Recovery: restore the newest intact checkpoint and replay.  Because the
-data pipeline is cursor-addressable (batch = f(seed, step)), replay is
-deterministic.
+data pipeline is cursor-addressable (batch = f(seed, step)) and the
+membership arrays replay from the chaos schedule, replay is
+deterministic (pinned bitwise in the parity matrix's
+kill-restore-replay cell).
+
+``may_restore()`` is a PURE query of the restore budget; the driver
+calls ``record_restore()`` only when a restore actually happens.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-import time
 
 
 @dataclasses.dataclass
@@ -23,13 +29,17 @@ class FailurePolicy:
     straggler_factor: float = 3.0    # x median step time
     patience: int = 3
     max_restores: int = 5
+    window: int = 256                # step-time history length
 
 
 class FailureDetector:
     def __init__(self, policy: FailurePolicy | None = None):
         self.policy = policy or FailurePolicy()
-        self.step_times: list[float] = []
-        self.slow_counts: dict[tuple[int, int], int] = {}
+        # bounded deque: appends evict the oldest entry in O(1) (the
+        # old list.pop(0) window was O(n) per step)
+        self.step_times: collections.deque[float] = collections.deque(
+            maxlen=self.policy.window)
+        self.slow_counts: dict[tuple, int] = {}
         self.restores = 0
 
     def check_loss(self, loss: float) -> bool:
@@ -38,8 +48,6 @@ class FailureDetector:
 
     def record_step(self, dt: float):
         self.step_times.append(dt)
-        if len(self.step_times) > 256:
-            self.step_times.pop(0)
 
     def median_step(self) -> float:
         if not self.step_times:
@@ -47,10 +55,13 @@ class FailureDetector:
         s = sorted(self.step_times)
         return s[len(s) // 2]
 
-    def device_slow(self, pod: int, dev: int, dt: float) -> bool:
-        """Per-device straggler accounting; True -> demote to abstention."""
+    def device_slow(self, pod: int, dev: int, dt: float,
+                    client: int | None = None) -> bool:
+        """Per-client straggler accounting; True -> demote to abstention
+        (``Membership.demote`` -- the demoted client is then
+        indistinguishable from a sampled-out one)."""
         med = self.median_step()
-        key = (pod, dev)
+        key = (pod, dev, client)
         if med and dt > self.policy.straggler_factor * med:
             self.slow_counts[key] = self.slow_counts.get(key, 0) + 1
         else:
@@ -58,16 +69,17 @@ class FailureDetector:
         return self.slow_counts[key] >= self.policy.patience
 
     def may_restore(self) -> bool:
+        """Pure budget query: would one more restore stay within
+        ``max_restores``?  Does NOT consume budget -- call
+        :meth:`record_restore` when the restore actually happens."""
+        return self.restores < self.policy.max_restores
+
+    def record_restore(self):
+        """Consume one unit of restore budget (an actual restore ran)."""
         self.restores += 1
-        return self.restores <= self.policy.max_restores
 
 
-class FaultInjector:
-    """Deterministic chaos hooks for tests/examples."""
-
-    def __init__(self, schedule: dict[int, tuple[str, int, int | None]]):
-        # schedule: step -> ("device"|"pod"|"nan", pod, dev)
-        self.schedule = schedule
-
-    def at(self, step: int):
-        return self.schedule.get(step)
+# The chaos engine superseded the old dict-schedule FaultInjector that
+# lived here; the name stays importable for existing drivers/tests (the
+# legacy ``{step: (kind, pod, dev)}`` schedule form still works).
+from repro.runtime.chaos import FaultInjector  # noqa: E402,F401

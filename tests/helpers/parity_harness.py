@@ -31,9 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.checkpoint import store
 from repro.core import clients as vclients
 from repro.core import hier, ref_fed
 from repro.core.topology import Topology
+from repro.runtime import chaos, elastic
 
 DIN, HID, DOUT = 16, 64, 33
 UNEVEN_HID = 65       # odd: w/w2 model-shard unevenly (padded blocks)
@@ -191,6 +193,142 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2):
             [list(row) for row in mask_t],
             vote_weights=vote_w if cc.active else None,
             reweight_participation=cc.active)
+    return jax.tree.map(np.asarray, state.w)
+
+
+# -- chaos cells: membership churn schedules through the SAME runners --
+
+
+def chaos_injector(pods, devs, k, t_e, nan_step=None):
+    """The deterministic mixed-churn schedule of the chaos parity cells.
+
+    Touches every membership path: a mid-round client kill, straggler
+    demotion AT a round boundary, a heartbeat-loss sweep of a whole
+    device (driving the edge through its fail-open window when P = 1),
+    recoveries, and (for multi-pod problems) a pod loss spanning a round
+    boundary.  ``nan_step`` adds a simulated numeric blow-up there
+    (restore-and-replay through the checkpoint store)."""
+    evs = [
+        chaos.ChaosEvent(1, "client", 0, devs - 1, k - 1),
+        chaos.ChaosEvent(t_e, "straggler", 0, 0, 0),
+        chaos.ChaosEvent(t_e + 1, "recover", 0, devs - 1, k - 1),
+        chaos.ChaosEvent(2 * t_e, "heartbeat", 0, 0),
+        chaos.ChaosEvent(2 * t_e + 1, "recover", 0, 0),
+        chaos.ChaosEvent(2 * t_e + 1, "recover", 0, 0, 0),
+    ]
+    if pods > 1:
+        evs += [chaos.ChaosEvent(t_e + 2, "pod", 1),
+                chaos.ChaosEvent(2 * t_e + 1, "recover", 1)]
+    if nan_step is not None:
+        evs.append(chaos.ChaosEvent(nan_step, "nan"))
+    return chaos.FaultInjector(evs)
+
+
+def chaos_arrays(problem, clients, injector):
+    """Compile the schedule to per-step membership arrays (one extra
+    entry past the horizon: the closing cloud aggregation of the final
+    round reads the post-run edge weights)."""
+    member = elastic.Membership(problem["pods"], problem["devs"],
+                                clients=clients)
+    steps = problem["rounds"] * problem["t_e"]
+    return chaos.compile_schedule(injector, member, steps + 1)
+
+
+def run_hier_chaos(topo, problem, method, transport="ag_packed",
+                   state_layout="tree", clients=None, injector=None,
+                   arrays=None, ckpt_dir=None, ckpt_every=None,
+                   **algo_kw):
+    """``run_hier`` under a chaos schedule: the membership arrays are
+    fresh runtime inputs every step (client-granular [P, D, K] mask on
+    the virtual path).  With ``ckpt_dir`` the driver checkpoints every
+    ``ckpt_every`` steps and a scheduled ``nan`` event triggers
+    restore-latest + replay (deterministic: cursor-addressable batches
+    + compiled arrays).  Returns (final per-edge params, arrays)."""
+    t_e = problem["t_e"]
+    algo = _algo(method, transport, state_layout, t_e=t_e,
+                 clients=clients, **algo_kw)
+    init_fn, step = hier.make_hier_step(topo, algo, make_bundle())
+    state = jax.jit(init_fn)(problem["w0"], jax.random.PRNGKey(1))
+    steps = problem["rounds"] * t_e
+    if arrays is None:
+        arrays = chaos_arrays(problem, clients, injector)
+    jstep = jax.jit(step)
+    xs, ys = problem["xs"], problem["ys"]
+    if ckpt_dir:
+        store.save(ckpt_dir, 0, state)
+    s = 0
+    while s < steps:
+        ew, dw, mask = arrays[s]
+        anchor = s - s % t_e
+        batch = {"train": {"x": xs[s], "y": ys[s]},
+                 "anchor": {"x": xs[anchor], "y": ys[anchor]}}
+        state, _ = jstep(state, batch, jnp.asarray(ew), jnp.asarray(dw),
+                         jnp.asarray(mask))
+        if injector is not None and injector.nan_due(s):
+            assert ckpt_dir, "a nan event needs a checkpoint dir"
+            s, state = store.restore_latest(ckpt_dir, state)
+            continue
+        s += 1
+        if ckpt_dir and ckpt_every and s % ckpt_every == 0:
+            store.save(ckpt_dir, s, state)
+    params = (state.params.tree() if state_layout == "flat"
+              else state.params)
+    return jax.tree.map(np.asarray, params), arrays
+
+
+def run_oracle_chaos(problem, method, clients, arrays, cloud_period=2):
+    """The grown ``ref_fed`` oracle under the SAME compiled schedule:
+    per-tau vote masks (``device_mask_steps`` = pinned participation of
+    round t AND the membership mask of step t*T_E + tau), round-prologue
+    weights from the arrays at step t*T_E, and the closing aggregation
+    at the NEXT round's edge weights (``edge_weights_agg``) -- exactly
+    the distributed step's churn semantics."""
+    pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
+    cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
+                             method=method, cloud_period=cloud_period)
+    cc = clients
+    k_c = cc.count
+    state = ref_fed.init_state(problem["w0"], pods)
+    grad_fn = lambda p, b, r: jax.grad(loss_fn)(p, b, r)
+    xs, ys = problem["xs"], problem["ys"]
+    b_cl = xs.shape[3] // k_c
+
+    def shard(a, s, q, dv):
+        d, c = divmod(dv, k_c)
+        return a[s, q, d, c * b_cl:(c + 1) * b_cl]
+
+    w_int = cc.weight_array(pods, devs).reshape(pods, devs * k_c)
+    vote_w = [list(map(int, w_int[q])) for q in range(pods)]
+    for t in range(problem["rounds"]):
+        batches = [[[{"x": shard(xs, t * t_e + tau, q, dv),
+                      "y": shard(ys, t * t_e + tau, q, dv)}
+                     for tau in range(t_e)] for dv in range(devs * k_c)]
+                   for q in range(pods)]
+        anchors = [[{"x": shard(xs, t * t_e, q, dv),
+                     "y": shard(ys, t * t_e, q, dv)}
+                    for dv in range(devs * k_c)] for q in range(pods)]
+        sampled = np.asarray(
+            vclients.participation_mask(cc, pods, devs, t)) > 0.5
+
+        def m_at(s):
+            mm = np.asarray(arrays[s].mask) > 0.5        # [P, D, K]
+            return (sampled & mm).reshape(pods, devs * k_c)
+
+        mask_steps = [[list(row) for row in m_at(t * t_e + tau)]
+                      for tau in range(t_e)]
+        dwq = np.asarray(arrays[t * t_e].dev_weights)
+        dev_w = [[float(w_int[q][dv]) * float(dwq[q][dv // k_c])
+                  for dv in range(devs * k_c)] for q in range(pods)]
+        state = ref_fed.global_round(
+            state, cfg, grad_fn, batches, anchors,
+            [float(x) for x in arrays[t * t_e].edge_weights],
+            dev_w, jax.random.PRNGKey(1),
+            device_mask=mask_steps[0],
+            device_mask_steps=mask_steps,
+            vote_weights=vote_w,
+            reweight_participation=True,
+            edge_weights_agg=[float(x)
+                              for x in arrays[(t + 1) * t_e].edge_weights])
     return jax.tree.map(np.asarray, state.w)
 
 

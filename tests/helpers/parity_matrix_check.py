@@ -134,6 +134,37 @@ for method in ("scaffold_hier_signsgd", "mtgc_hier_signsgd"):
                          f"corr-oracle/{method}", exact=False, atol=1e-5)
     print(f"{method:22s} K=4 sampled-weighted cell OK (incl. sharded)")
 
+# ---- chaos churn cell: K=2 sampled-weighted under a fault schedule ----
+# the deterministic churn schedule (client kill, straggler demotion,
+# heartbeat loss, POD 1 kill + recovery -- the multi-pod path exercises
+# a non-trivial edge_weights renormalization and the closing-round
+# edge_weights_agg) composed with Bernoulli(0.5) participation and
+# unequal |D_qk| weights: bitwise across transports/layouts/modes
+# (incl. the model-SHARDED fused flat cell) and pinned vs the grown
+# ref_fed oracle driven by the same compiled membership arrays (the
+# P=1 fast tier is EXACT; here the P=2 cloud aggregation associates
+# the weighted sum differently -> the usual multi-device oracle atol)
+ccc = H.client_cfg(Pn, Dn, 2, "sampled_weighted")
+inj = H.chaos_injector(Pn, Dn, 2, problem["t_e"])
+arrays = H.chaos_arrays(problem, ccc, inj)
+assert any(a.edge_weights[1] == 0.0 for a in arrays), "pod kill missing"
+ref_h, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                            clients=ccc, arrays=arrays)
+for transport, layout, mode in (("fused", "tree", "merged"),
+                                ("fused", "flat", "stream"),
+                                ("ar_int8", "flat", "merged")):
+    ccm = ccc if mode == "merged" else dataclasses.replace(ccc,
+                                                           mode="stream")
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              transport, layout, clients=ccm,
+                              arrays=arrays)
+    H.assert_trees_equal(ref_h, got,
+                         f"chaos/{transport}/{layout}/{mode}")
+oracle = H.run_oracle_chaos(problem, "dc_hier_signsgd", ccc, arrays)
+H.assert_trees_equal(H.aggregate(ref_h, arrays[-1].edge_weights),
+                     oracle, "chaos-oracle", exact=False, atol=1e-5)
+print("dc_hier_signsgd  K=2 sampled-weighted churn cell OK (pod kill)")
+
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
 # cells run the padded-block layout (LeafSlot.shard_pad) and must stay

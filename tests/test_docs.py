@@ -180,6 +180,32 @@ def test_correction_slot_documented():
     assert "downlink_bits" in arch
 
 
+def test_elastic_chaos_documented():
+    """The elastic-runtime/chaos contract is pinned: both docs carry
+    the chaos-schedule section (event kinds as data, zero-recompilation
+    churn, fail-open, kill-restore-replay bitwise), the CLI flags are
+    named, and every documented event kind exists in the engine."""
+    from repro.runtime.chaos import EVENT_KINDS
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "Elastic runtime & chaos schedules" in arch
+    for text, name in ((readme, "README"), (arch, "architecture.md")):
+        assert "--chaos" in text, name
+        assert "fail" in text and "open" in text, name
+        assert "zero recompilations" in text or "recompilation-free" in \
+            text, name
+        assert "chaos_report.py" in text, name
+        assert "chaos_cells.json" in text or "chaos report" in text, name
+    # the architecture doc names every event kind the engine accepts
+    for kind in EVENT_KINDS:
+        assert f"`{kind}`" in arch, f"architecture.md: event kind {kind}"
+    assert "replay_membership" in arch           # deterministic replay
+    assert "device_mask_steps" in arch           # oracle growth
+    assert "edge_weights_agg" in arch            # closing-round weights
+    assert "may_restore" in arch and "record_restore" in arch
+    assert "kill-restore-replay" in readme and "kill-restore-replay" in arch
+
+
 def test_readme_tier1_command():
     """The README's verify command matches ROADMAP's tier-1 gate."""
     readme = (ROOT / "README.md").read_text()

@@ -1,8 +1,15 @@
-"""Elastic membership invariants (hypothesis property tests)."""
+"""Elastic membership invariants (hypothesis property tests).
+
+The deeper churn/chaos properties live in test_runtime_chaos.py; this
+file keeps the fast array-level invariants of ``Membership.weights()``
+on both granularities (legacy [P, D] device masks and client-granular
+[P, D, K] with an active ClientConfig).
+"""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.clients import ClientConfig
 from repro.runtime import elastic, failures
 
 
@@ -28,6 +35,33 @@ def test_weights_invariants(pods, devs, seed):
     assert (dw[mask == 0] == 0).all()
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 4),
+       st.integers(0, 2**31 - 1))
+def test_client_granular_weights_invariants(pods, devs, k, seed):
+    """With an active ClientConfig the mask is per-voter [P, D, K],
+    dev_weights stays the static physical-slice share (the |D_qk|
+    shares ride inside the step), and edge weights track the LIVE
+    client data."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 100, (pods, devs))
+    m = elastic.Membership(pods, devs, clients=ClientConfig(count=k),
+                           data_sizes=sizes)
+    fail = rng.random((pods, devs, k)) < 0.3
+    fail[rng.integers(pods)] = False
+    for p, d, c in zip(*np.where(fail)):
+        m.mark_failed(p, d, c)
+    ew, dw, mask = m.weights()
+    assert mask.shape == (pods, devs, k)
+    assert np.isclose(ew.sum(), 1.0)
+    want_dw = sizes / sizes.sum(axis=1, keepdims=True)
+    np.testing.assert_allclose(dw, want_dw, rtol=1e-6)
+    # a fully-live pod's edge weight is proportional to its data
+    live_data = (m.client_sizes * mask).sum(axis=(1, 2))
+    np.testing.assert_allclose(ew, live_data / live_data.sum(),
+                               rtol=1e-6)
+
+
 def test_pod_loss_renormalizes():
     m = elastic.Membership(2, 4)
     m.mark_failed(0)                      # whole pod down
@@ -41,6 +75,20 @@ def test_quorum_gates_pod():
     m.mark_failed(0, 0)
     m.mark_failed(0, 1)                   # 50% live < 75% quorum
     assert not m.pod_live()[0]
+
+
+def test_restore_and_fresh():
+    m = elastic.Membership(2, 2, clients=ClientConfig(count=2),
+                           quorum=0.25)
+    m.mark_failed(0, 1, 0)
+    m.mark_failed(1)
+    m.restore(0, 1, 0, now=3.0)
+    assert m.live[0, 1, 0] and m.last_seen[0, 1, 0] == 3.0
+    assert not m.live[1].any()
+    f = m.fresh()                         # all-live, same config
+    assert f.live.all() and f.quorum == m.quorum
+    assert f.clients is m.clients
+    assert not m.live[1].any()            # fresh() copies, not mutates
 
 
 def test_heartbeat_sweep():
@@ -59,7 +107,9 @@ def test_failure_detector_straggler():
     assert not det.device_slow(0, 0, 1.1)
     assert not det.device_slow(0, 1, 5.0)   # first offence
     assert det.device_slow(0, 1, 5.0)       # second -> demote
-    assert not det.device_slow(0, 1, 1.0) or True  # counter reset path
+    # per-client keys escalate independently of the device-level key
+    assert not det.device_slow(0, 1, 5.0, client=3)
+    assert det.device_slow(0, 1, 5.0, client=3)
 
 
 def test_failure_detector_loss():
@@ -67,3 +117,8 @@ def test_failure_detector_loss():
     assert det.check_loss(1.0)
     assert not det.check_loss(float("nan"))
     assert not det.check_loss(float("inf"))
+
+
+def test_membership_rejects_bad_sizes():
+    with pytest.raises(ValueError):
+        elastic.Membership(2, 2, data_sizes=np.ones((3, 2)))

@@ -459,6 +459,134 @@ def test_state_structure(topo, problem, method, opts, layout):
             == jax.tree_util.tree_structure(state))
 
 
+# ---------------------------------------------------------------------------
+# Chaos cells: a deterministic churn schedule (client kill, straggler
+# demotion, heartbeat loss, pod kill, recoveries -- see
+# H.chaos_injector) is compiled to per-step membership arrays and fed
+# through every train-step combination AND the grown ref_fed oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def chaos(problem):
+    """Compiled chaos schedule for the fast cell (P=1, D=1, K=2)."""
+    cc = H.client_cfg(1, 1, 2, "full")
+    inj = H.chaos_injector(1, 1, 2, problem["t_e"])
+    return cc, inj, H.chaos_arrays(problem, cc, inj)
+
+
+CHAOS_METHODS = ["hier_signsgd", "dc_hier_signsgd",
+                 "scaffold_hier_signsgd", "mtgc_hier_signsgd"]
+
+
+@pytest.mark.parametrize("method", CHAOS_METHODS + ["hier_sgd"])
+def test_chaos_vs_oracle(topo, problem, chaos, method):
+    """HEADLINE churn contract: under the chaos schedule -- client kill,
+    straggler demotion, fail-open window, heartbeat-loss sweep, partial
+    recovery -- the cloud-aggregated model matches the grown ref_fed
+    oracle driven by the SAME compiled membership arrays
+    (device_mask_steps per local step, edge_weights_agg for the closing
+    cloud aggregation).  Sign methods are EXACT (bitwise): abstention
+    is integer arithmetic on both sides.  hier_sgd accumulates the
+    renormalized mean in a different association order -> float
+    tolerance."""
+    cc, inj, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              arrays=arrays)
+    oracle = H.run_oracle_chaos(problem, method, cc, arrays)
+    exact = method != "hier_sgd"
+    H.assert_trees_equal(H.aggregate(ref, arrays[-1].edge_weights),
+                         oracle, f"chaos-oracle/{method}", exact=exact,
+                         atol=1e-6)
+
+
+@pytest.mark.parametrize("transport", H.SIGN_TRANSPORTS)
+@pytest.mark.parametrize("layout", H.LAYOUTS)
+@pytest.mark.parametrize("mode", ["merged", "stream"])
+def test_chaos_cross_cells(topo, problem, chaos, transport, layout,
+                           mode):
+    """Every transport x layout x client-mode cell runs the SAME churn
+    schedule bitwise: membership is a runtime input, so the abstention
+    pattern is identical no matter how the votes move or the state is
+    laid out."""
+    cc, inj, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              clients=cc, arrays=arrays)
+    ccm = cc if mode == "merged" else _stream(cc)
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              transport, layout, clients=ccm,
+                              arrays=arrays)
+    H.assert_trees_equal(
+        ref, got, f"chaos-x/{transport}/{layout}/{mode}")
+
+
+def test_chaos_weighted_sampled_vs_oracle(topo, problem):
+    """Churn composed with the hardest participation regime --
+    Bernoulli(0.5) sampling AND unequal |D_qk| weights -- stays exact
+    vs the oracle (the effective mask is sampled AND live; the weighted
+    popcount is still integer) and bitwise across transports."""
+    cc = H.client_cfg(1, 1, 2, "sampled_weighted")
+    inj = H.chaos_injector(1, 1, 2, problem["t_e"])
+    arrays = H.chaos_arrays(problem, cc, inj)
+    ref, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              clients=cc, arrays=arrays)
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd", "fused",
+                              "flat", clients=_stream(cc), arrays=arrays)
+    H.assert_trees_equal(ref, got, "chaos-weighted/fused-flat-stream")
+    oracle = H.run_oracle_chaos(problem, "dc_hier_signsgd", cc, arrays)
+    H.assert_trees_equal(H.aggregate(ref, arrays[-1].edge_weights),
+                         oracle, "chaos-weighted-oracle", exact=True)
+
+
+@pytest.mark.parametrize("method", ["dc_hier_signsgd",
+                                    "scaffold_hier_signsgd"])
+def test_chaos_kill_restore_replay(topo, problem, chaos, method,
+                                   tmp_path):
+    """Kill-restore-replay is BITWISE invisible: a nan-loss event fires
+    mid-trajectory, the driver restores the newest checkpoint
+    (checkpoint/store.py) and replays -- and because batches are
+    cursor-addressable and membership replays from the compiled
+    schedule, the final state is bitwise the uninterrupted trajectory
+    (correction state, EF carry-forward and all)."""
+    cc, _, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              arrays=arrays)
+    inj_n = H.chaos_injector(1, 1, 2, problem["t_e"], nan_step=5)
+    got, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              injector=inj_n, arrays=arrays,
+                              ckpt_dir=str(tmp_path),
+                              ckpt_every=problem["t_e"])
+    H.assert_trees_equal(ref, got, f"chaos-replay/{method}")
+
+
+def test_chaos_membership_zero_recompilation(topo, problem, chaos):
+    """Membership churn causes ZERO recompilations: the (weights, mask)
+    arrays are runtime inputs with fixed shapes, so the step traces
+    exactly once across every membership change in the schedule."""
+    cc, inj, arrays = chaos
+    traces = []
+
+    algo = H._algo("dc_hier_signsgd", "ag_packed", "tree",
+                   t_e=problem["t_e"], clients=cc)
+    init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
+
+    def counting_step(state, batch, ew, dw, mask):
+        traces.append(1)
+        return step(state, batch, ew, dw, mask)
+
+    jstep = jax.jit(counting_step)
+    state = jax.jit(init_fn)(problem["w0"], jax.random.PRNGKey(1))
+    assert len({(a.edge_weights.tobytes(), a.mask.tobytes())
+                for a in arrays}) > 1, "schedule never changes membership"
+    for s in range(problem["rounds"] * problem["t_e"]):
+        a = arrays[s]
+        batch = {"train": {"x": problem["xs"][s], "y": problem["ys"][s]}}
+        state, _ = jstep(state, batch, jnp.asarray(a.edge_weights),
+                         jnp.asarray(a.dev_weights),
+                         jnp.asarray(a.mask))
+    assert sum(traces) == 1, f"recompiled: {sum(traces)} traces"
+
+
 def _run_check(script: str, want: str):
     env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
     r = subprocess.run(

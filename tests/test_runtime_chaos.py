@@ -1,0 +1,262 @@
+"""Chaos-engine + elastic-membership property suite.
+
+The runtime contract pinned here: a :class:`~repro.runtime.chaos.
+FaultInjector` schedule compiled through a :class:`~repro.runtime.
+elastic.Membership` yields the exact ``(edge_weights, dev_weights,
+mask)`` arrays the train step consumes, with
+
+  * edge weights a probability distribution over the live pods,
+  * the fail-open invariant (an all-dead fleet never zeroes the state),
+  * straggler demotion bitwise-indistinguishable from a sampled-out
+    client,
+  * seeded schedules that are pure functions of the seed, and
+  * restore-and-replay determinism (replaying a schedule prefix lands
+    on the same membership as the uninterrupted pass).
+
+Property tests run on plain numpy (fast); the two bitwise trajectory
+pins run one tiny jitted cell each.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "helpers"))
+import parity_harness as H  # noqa: E402
+
+from repro.core.clients import ClientConfig  # noqa: E402
+from repro.core.topology import single_device_topology  # noqa: E402
+from repro.runtime import chaos, elastic, failures  # noqa: E402
+
+
+def _seeded_member(pods, devs, k, seed):
+    rng = np.random.default_rng(seed)
+    cc = ClientConfig(count=k) if k > 1 else ClientConfig()
+    return elastic.Membership(
+        pods, devs, clients=cc,
+        data_sizes=rng.integers(1, 100, (pods, devs)))
+
+
+# ---------------------------------------------------------------------------
+# Membership array invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+def test_edge_weights_sum_over_live_pods(pods, devs, k, seed):
+    """edge_weights is a probability distribution concentrated on the
+    live pods, for any churn state reachable through a seeded
+    schedule."""
+    m = _seeded_member(pods, devs, k, seed)
+    inj = chaos.FaultInjector.seeded(seed, 12, pods, devs, k,
+                                     client_rate=0.3, pod_rate=0.2,
+                                     heartbeat_rate=0.2,
+                                     straggler_rate=0.3)
+    for arr in chaos.compile_schedule(inj, m, 12):
+        assert np.isclose(arr.edge_weights.sum(), 1.0, atol=1e-6)
+        assert (arr.edge_weights >= 0).all()
+        assert (arr.mask >= 0).all() and (arr.mask <= 1).all()
+        # a pod with zero cloud weight contributes no votes either
+        dead = arr.edge_weights == 0
+        assert (arr.mask[dead] == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+def test_fail_open_never_zeroes(pods, devs, k, seed):
+    """Killing the ENTIRE fleet trips fail-open: every voter stays
+    counted (all-ones mask, uniform pod weights) -- the runtime must
+    never emit arrays that zero the model state."""
+    m = _seeded_member(pods, devs, k, seed)
+    for p in range(pods):
+        m.mark_failed(p)
+    arr = m.weights()
+    assert (arr.mask == 1.0).all()
+    assert np.isclose(arr.edge_weights.sum(), 1.0, atol=1e-6)
+    assert (arr.edge_weights > 0).all()
+
+
+def test_subquorum_pod_abstains_wholesale():
+    """A pod below the vote quorum loses its cloud weight and its mask
+    in one place (the single ``pod_ok`` application -- the old code
+    multiplied it in twice), while the survivors renormalize."""
+    m = elastic.Membership(2, 4, quorum=0.75,
+                           data_sizes=np.array([[1., 1, 1, 1],
+                                                [1., 1, 1, 1]]))
+    m.mark_failed(0, 0)
+    m.mark_failed(0, 1)           # 50% live < 75% quorum
+    arr = m.weights()
+    assert arr.edge_weights[0] == 0.0
+    assert np.isclose(arr.edge_weights[1], 1.0)
+    assert (arr.mask[0] == 0).all()
+    # devices 2,3 of pod 0 are LIVE but sub-quorum: masked exactly once,
+    # and the pod's dev shares carry no weight
+    assert (arr.dev_weights[0] == 0).all()
+    assert np.isclose(arr.dev_weights[1].sum(), 1.0)
+
+
+def test_mask_granularity_follows_client_config():
+    """Active ClientConfig -> client-granular [P, D, K] mask; default
+    config -> legacy [P, D] device mask."""
+    ma = elastic.Membership(2, 3, clients=ClientConfig(count=4)).weights()
+    assert ma.mask.shape == (2, 3, 4)
+    ml = elastic.Membership(2, 3).weights()
+    assert ml.mask.shape == (2, 3)
+    assert ma.dev_weights.shape == ml.dev_weights.shape == (2, 3)
+
+
+def test_heartbeat_loss_is_swept():
+    """A silent client ages past the timeout and loses its vote on the
+    next sweep; a heartbeat (or recover) brings it back."""
+    m = elastic.Membership(1, 2, clients=ClientConfig(count=2),
+                           heartbeat_timeout=1.0)
+    chaos.apply_event(m, chaos.ChaosEvent(0, "heartbeat", 0, 1, 0),
+                      now=5.0)
+    assert not m.live[0, 1, 0] and m.live[0, 1, 1]
+    m.heartbeat(0, 1, now=6.0, client=0)
+    assert m.live[0, 1, 0]
+
+
+# ---------------------------------------------------------------------------
+# Schedule determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_seeded_schedule_is_pure(seed):
+    """Same seed => the SAME schedule (event-for-event); a different
+    seed diverges (for these rates, overwhelmingly likely)."""
+    a = chaos.FaultInjector.seeded(seed, 40, 2, 2, 2)
+    b = chaos.FaultInjector.seeded(seed, 40, 2, 2, 2)
+    assert a == b and a.events == b.events
+    c = chaos.FaultInjector.seeded(seed + 1, 40, 2, 2, 2)
+    if a.events and c.events:
+        assert a != c or a.events == c.events
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 2**31 - 1),
+       st.integers(1, 20))
+def test_replay_matches_uninterrupted_prefix(pods, devs, seed, upto):
+    """Restore-and-replay determinism at the membership layer:
+    ``replay_membership(inj, m, upto)`` (a fresh membership + every
+    event before ``upto``) emits the same arrays as the uninterrupted
+    compile at step upto-1 -- so a driver that restores a checkpoint
+    mid-schedule sees bitwise-identical membership inputs."""
+    m = _seeded_member(pods, devs, 2, seed)
+    inj = chaos.FaultInjector.seeded(seed, 24, pods, devs, 2,
+                                     client_rate=0.3, heartbeat_rate=0.2,
+                                     straggler_rate=0.3, pod_rate=0.15)
+    arrays = chaos.compile_schedule(inj, m, 24)
+    replayed = chaos.replay_membership(inj, m, upto)
+    got = replayed.weights()
+    want = arrays[upto - 1]
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_compile_schedule_leaves_caller_untouched():
+    m = elastic.Membership(2, 2)
+    inj = chaos.FaultInjector([chaos.ChaosEvent(0, "pod", 0)])
+    chaos.compile_schedule(inj, m, 4)
+    assert m.live.all()
+
+
+def test_nan_fires_once_and_legacy_dict_schedule():
+    """``nan_due`` is edge-triggered (the post-restore replay of the
+    same step must not blow up again); the legacy ``{step: (kind, pod,
+    dev)}`` dict form still builds a schedule."""
+    inj = chaos.FaultInjector([chaos.ChaosEvent(5, "nan")])
+    assert inj.nan_due(4) is False
+    assert inj.nan_due(5) is True
+    assert inj.nan_due(5) is False          # replay passes through
+    legacy = failures.FaultInjector({6: ("device", 0, 0),
+                                     9: ("recover", 0, 0)})
+    assert legacy.at(6)[0].kind == "device"
+    assert legacy.horizon == 10
+    with pytest.raises(ValueError, match="kind"):
+        chaos.ChaosEvent(0, "meteor")
+
+
+# ---------------------------------------------------------------------------
+# Bitwise trajectory pins (one tiny jitted cell each)
+# ---------------------------------------------------------------------------
+
+
+def test_demoted_straggler_equals_sampled_out_client():
+    """Straggler demotion and a client kill take different runtime
+    paths into the membership but the SAME abstention semantics out of
+    it: identical compiled arrays, and a bitwise-identical model
+    trajectory -- the demoted client is indistinguishable from one the
+    participation sampler left out."""
+    topo = single_device_topology()
+    problem = H.make_problem(1, 1)
+    cc = H.client_cfg(1, 1, 2, "full")
+    m = elastic.Membership(1, 1, clients=cc)
+    steps = problem["rounds"] * problem["t_e"] + 1
+    demote = chaos.FaultInjector([chaos.ChaosEvent(2, "straggler",
+                                                   0, 0, 1)])
+    kill = chaos.FaultInjector([chaos.ChaosEvent(2, "client", 0, 0, 1)])
+    arr_d = chaos.compile_schedule(demote, m, steps)
+    arr_k = chaos.compile_schedule(kill, m, steps)
+    for s in range(steps):
+        for a, b in zip(arr_d[s], arr_k[s]):
+            np.testing.assert_array_equal(a, b)
+    ref, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              clients=cc, arrays=arr_d)
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              clients=cc, arrays=arr_k)
+    H.assert_trees_equal(ref, got, "straggler-vs-kill")
+
+
+def test_detector_escalation_feeds_demotion():
+    """End-to-end straggler escalation: the detector's per-client slow
+    counter crosses ``patience`` and the resulting ``demote`` abstains
+    the client in the emitted arrays."""
+    det = failures.FailureDetector(failures.FailurePolicy(
+        straggler_factor=2.0, patience=2))
+    for _ in range(8):
+        det.record_step(1.0)
+    m = elastic.Membership(1, 2, clients=ClientConfig(count=2))
+    for _ in range(2):
+        slow = det.device_slow(0, 1, 9.0, client=0)
+    assert slow
+    m.demote(0, 1, 0)
+    arr = m.weights()
+    assert arr.mask[0, 1, 0] == 0.0 and arr.mask[0, 1, 1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector regressions (satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_may_restore_is_pure():
+    """Regression: ``may_restore`` used to consume restore budget ON
+    QUERY, so health checks silently burned the allowance.  It is now a
+    pure query; only ``record_restore`` spends."""
+    det = failures.FailureDetector(failures.FailurePolicy(max_restores=2))
+    for _ in range(10):
+        assert det.may_restore()            # querying never spends
+    assert det.restores == 0
+    det.record_restore()
+    det.record_restore()
+    assert not det.may_restore()
+    assert det.restores == 2
+
+
+def test_step_time_window_is_bounded_deque():
+    """Regression: the step-time history is a bounded deque (the old
+    list popped index 0 -- O(n) per step) and the median tracks the
+    window, not all history."""
+    det = failures.FailureDetector(failures.FailurePolicy(window=4))
+    for t in [1.0] * 10 + [5.0] * 4:
+        det.record_step(t)
+    assert len(det.step_times) == 4
+    assert det.median_step() == 5.0
