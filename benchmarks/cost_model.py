@@ -196,6 +196,43 @@ def methods_rows(t_e: int = 15, cloud_period: int = CLOUD_PERIOD) -> list:
     return rows
 
 
+def overlap_rows(t_e: int = 15, rtts=(1_000_000.0, 10_000_000.0)) -> list:
+    """Cloud sync-schedule rows (``--fast`` CI profile): wall-clock per
+    global round under each ``cloud_overlap`` mode as a function of the
+    cloud round-trip.
+
+      * ``sync``    -- the paper's barrier: the RTT sits on the
+                       critical path, round = compute + RTT;
+      * ``overlap`` -- the aggregate issued at one boundary commits at
+                       the next, so the RTT hides behind a full round
+                       of local stepping: round = max(compute, RTT),
+                       and the RTT only surfaces once it exceeds the
+                       compute of a round.
+
+    ``hidden_frac`` is the fraction of the RTT taken off the critical
+    path; ``speedup_vs_sync`` makes the saving directly comparable per
+    (rtt, method) pair.  The default RTTs straddle the reference
+    simulator's ~3 s round compute (a WAN cloud tier with stragglers):
+    1 s hides completely, 10 s leaves the excess on the critical
+    path."""
+    rows = []
+    for rtt in rtts:
+        for m in ("hier_signsgd", "dc_hier_signsgd"):
+            compute = round_cost_us(m, t_e)
+            sync_us = compute + rtt
+            lap_us = max(compute, rtt)
+            hidden = min(compute, rtt) / rtt
+            for sched, us in (("sync", sync_us), ("overlap", lap_us)):
+                frac = hidden if sched == "overlap" else 0.0
+                rows.append((
+                    f"overlap/rtt{int(rtt / 1000)}ms/{sched}/{m}", us,
+                    f"cloud_rtt_ms={rtt / 1000:.0f} "
+                    f"hidden_frac={frac:.2f} "
+                    f"speedup_vs_sync={sync_us / us:.2f} "
+                    f"src=cost_model"))
+    return rows
+
+
 def fig4_rows(rhos) -> list:
     rows = []
     for rho in rhos:

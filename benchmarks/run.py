@@ -14,6 +14,8 @@ BENCH_transports.json.)
             uplink + round cost (always cost-model priced)
   methods   drift-correction method axis: Thm-style loss proxy +
             per-client downlink (dc / scaffold / mtgc accounting)
+  overlap   cloud sync schedule: per-round wall-clock sync vs overlap
+            as a function of the cloud RTT (always cost-model priced)
   roofline  3-term roofline per dry-run cell    (deliverable g)
 
 Flags: ``--only fig2`` to run a subset; ``--fast`` is the CI profile --
@@ -34,7 +36,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "table2", "fig2", "fig3", "fig4",
-                             "clients", "methods", "roofline"])
+                             "clients", "methods", "overlap",
+                             "roofline"])
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out-dir", default=None,
                     help="directory for bench_results.{csv,json} "
@@ -70,6 +73,10 @@ def main() -> None:
         # per-client downlink bytes (dc anchor vs scaffold c_global vs
         # mtgc two-term)
         rows += cost_model.methods_rows()
+    if want("overlap"):
+        # cloud sync schedule (always cost-model priced): what hiding
+        # the cloud RTT behind a round of local stepping buys per round
+        rows += cost_model.overlap_rows()
     if want("roofline"):
         try:
             rows += roofline.roofline_rows()

@@ -17,11 +17,19 @@ from repro.checkpoint import store
 
 
 class AsyncSaver:
+    """A failed background save is NEVER silently dropped: the writer
+    thread records any raised exception (``BaseException`` -- a dying
+    thread must not look like a successful save) and the next
+    ``submit()`` / ``wait()`` re-raises it on the caller.  The thread
+    itself survives the failure and keeps serving later saves; the
+    sentinel ``task_done()`` runs unconditionally so ``wait()`` can
+    never deadlock on a crashed item."""
+
     def __init__(self, ckpt_dir, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._q: queue.Queue = queue.Queue()
-        self._err: Exception | None = None
+        self._err: BaseException | None = None
         self._t = threading.Thread(target=self._loop, daemon=True)
         self._t.start()
 
@@ -29,18 +37,29 @@ class AsyncSaver:
         while True:
             item = self._q.get()
             if item is None:
+                self._q.task_done()
                 return
-            step, host_tree = item
             try:
+                step, host_tree = item
                 store.save(self.ckpt_dir, step, host_tree, keep=self.keep)
-            except Exception as e:  # surfaced on next submit/wait
+            except BaseException as e:  # surfaced on next submit/wait
                 self._err = e
             finally:
                 self._q.task_done()
 
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError(
+                f"background checkpoint save failed (step dropped from "
+                f"{self.ckpt_dir})") from err
+
     def submit(self, step: int, tree):
-        if self._err:
-            raise self._err
+        self._raise_pending()
+        if not self._t.is_alive():
+            raise RuntimeError(
+                "AsyncSaver writer thread is not running (closed or "
+                "crashed); submitted steps would never reach disk")
         # synchronous device->host copy (cheap vs serialization), then
         # hand off to the writer thread.
         host = jax.tree.map(lambda x: jax.device_get(x), tree)
@@ -48,10 +67,13 @@ class AsyncSaver:
 
     def wait(self):
         self._q.join()
-        if self._err:
-            raise self._err
+        self._raise_pending()
 
     def close(self):
-        self.wait()
-        self._q.put(None)
-        self._t.join()
+        try:
+            self.wait()
+        finally:
+            # shut the thread down even when the last save failed, so a
+            # raising close() cannot leak the worker
+            self._q.put(None)
+            self._t.join()

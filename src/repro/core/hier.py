@@ -15,6 +15,16 @@ At a round boundary (step % T_E == 0) a prologue first runs
      Alg. 2; ``anchor_staleness=0`` is the fresh variant (extra cross-pod
      sync before local steps, no staging buffer).
 
+The WHEN of step 1 is the cloud sync schedule (``core.schedule``,
+selected by ``AlgoConfig.cloud_overlap``): ``"sync"`` issues and
+commits the aggregate at the same boundary (the paper's barrier,
+above); ``"overlap"`` commits the aggregate issued at the PREVIOUS
+boundary and stages the fresh one in ``TrainState.agg_next`` -- edges
+keep local-stepping on their local models while the cross-pod mean is
+in flight, and the DC/SCAFFOLD/MTGC anchors refresh at the committed
+(one-round-stale) aggregate.  Commit weights are pinned to issue-time
+membership, so churn mid-flight is well-defined.
+
 Then the local step: per-device grads -> (+ rho*delta, + EF residual) ->
 sign -> majority vote over the ``data`` axis -> v_q <- v_q - mu * vote.
 With an *active* ``AlgoConfig.clients`` (``core.clients``) the voter
@@ -77,7 +87,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clients as vclients
-from repro.core import device_axis, flatbuf, shardflat, signs, votes
+from repro.core import device_axis, flatbuf, schedule, shardflat, signs, votes
 from repro.core.device_axis import LiftCfg
 from repro.core.topology import Topology
 
@@ -111,6 +121,15 @@ class AlgoConfig:
                                       # eta term refreshes every cloud_period
                                       # rounds (the edge-level gamma term
                                       # refreshes every round)
+    cloud_overlap: str = "sync"       # cloud sync schedule (core.schedule):
+                                      # "sync" = issue+commit at the same
+                                      # round boundary (the paper's barrier);
+                                      # "overlap" = edges keep local-stepping
+                                      # on their local models while the
+                                      # cross-pod mean is in flight, commit
+                                      # one boundary later (staged agg_next
+                                      # slot; anchors refresh at the
+                                      # committed, one-round-stale aggregate)
     clients: vclients.ClientConfig = vclients.ClientConfig()
                                       # virtual-client scale-out: K clients
                                       # per data slice, per-round sampling,
@@ -136,6 +155,10 @@ class AlgoConfig:
         if self.cloud_period < 1:
             raise ValueError(
                 f"cloud_period must be >= 1, got {self.cloud_period}")
+        if self.cloud_overlap not in schedule.CLOUD_OVERLAP_MODES:
+            raise ValueError(
+                f"unknown cloud_overlap {self.cloud_overlap!r} (choose "
+                f"from {', '.join(schedule.CLOUD_OVERLAP_MODES)})")
 
     @property
     def is_sign(self) -> bool:
@@ -160,6 +183,16 @@ class AlgoConfig:
         multi-timescale terms."""
         return self.method in CLIENT_CORRECTION_METHODS
 
+    @property
+    def is_overlap(self) -> bool:
+        return self.cloud_overlap == "overlap"
+
+    @property
+    def cloud_schedule(self) -> schedule.CloudSchedule:
+        """The cloud sync schedule (issue/commit latency) this config
+        selects -- the SAME object the ``ref_fed`` oracle consumes."""
+        return schedule.CloudSchedule.from_mode(self.cloud_overlap)
+
 
 class TrainState(NamedTuple):
     """Training state.  With ``state_layout="flat"`` the params / delta /
@@ -170,6 +203,12 @@ class TrainState(NamedTuple):
     corr_edge only for the scaffold/mtgc client-correction methods)."""
     step: jax.Array                   # global step counter (t * T_E + tau)
     params: PyTree                    # [P, ...] per-pod edge models v_q
+    agg_next: PyTree | None           # [P, ...] staged in-flight cloud
+                                      #   aggregate (cloud_overlap=
+                                      #   "overlap" only: issued at the
+                                      #   previous boundary, committed at
+                                      #   the next; FlatState [P, n_pad]
+                                      #   under state_layout="flat")
     delta: PyTree | None              # [P, ...] active correction c - c_q
     delta_next: PyTree | None         # staged delta (anchor_staleness=1)
     ef: PyTree | None                 # [P, D*K, ...] error-feedback residual
@@ -263,6 +302,20 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             f"{algo.method} requires the replicated regime: its per-client "
             "correction state (corr_cl) rides the explicit voter axis, "
             "which the FSDP lift never materializes")
+    if algo.is_overlap and fsdp:
+        raise ValueError(
+            "cloud_overlap='overlap' requires the replicated regime: the "
+            "staged in-flight aggregate (agg_next) is a whole-model master "
+            "snapshot, which the FSDP lift's per-layer-shard vote never "
+            "materializes")
+    if algo.is_overlap and sync == "never":
+        raise ValueError(
+            "cloud_overlap='overlap' needs the round prologue (issue + "
+            "commit run there), which sync='never' statically removes; "
+            "lower the local-step phase with a cloud_overlap='sync' config "
+            "instead -- the local step is schedule-independent, so the "
+            "program is identical")
+    cloud_sched = algo.cloud_schedule
     # the merged voter axis: K virtual clients per physical data slice
     # (d_virtual == devices_per_pod on the inactive legacy path)
     d_virtual = topo.devices_per_pod * cc.count
@@ -1196,12 +1249,17 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         anchor_batch = carve(batch.get("anchor", batch["train"]))
         agg_shares = shares3 if stream else shares
 
-        # -- prologue: cloud aggregation + anchor/correction refresh at
-        # round start
+        # -- prologue: cloud issue/commit + anchor/correction refresh at
+        # round start.  The schedule layer (core.schedule) decides what
+        # "issue" and "commit" mean: sync commits the freshly issued
+        # aggregate at the same boundary (today's barrier, bitwise);
+        # overlap commits the aggregate issued at the PREVIOUS boundary
+        # and stages this one in agg_next, so the anchors below refresh
+        # at the committed (one-round-stale) model.
         def prologue(op):
-            params, delta, delta_next, corr_cl, corr_edge = op
-            params = pod_avg(params, edge_weights)
-            params = constrain_master(params)
+            params, agg_next, delta, delta_next, corr_cl, corr_edge = op
+            issued = constrain_master(pod_avg(params, edge_weights))
+            params, agg_next = cloud_sched.commit(issued, agg_next)
             if algo.is_dc:
                 fresh = compute_delta(params, delta, anchor_batch, rngs_a,
                                       edge_weights, agg_shares, maskf)
@@ -1213,20 +1271,23 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 corr_cl, corr_edge = compute_corrections(
                     params, corr_cl, corr_edge, anchor_batch, rngs_a,
                     edge_weights, agg_shares, corr_part, rnd_index)
-            return params, delta, delta_next, corr_cl, corr_edge
+            return params, agg_next, delta, delta_next, corr_cl, corr_edge
 
         def no_op(op):
             return op
 
-        operand = (state.params, state.delta, state.delta_next,
-                   state.corr_cl, state.corr_edge)
+        operand = (state.params, state.agg_next, state.delta,
+                   state.delta_next, state.corr_cl, state.corr_edge)
         if sync == "cond":
-            params, delta, delta_next, corr_cl, corr_edge = jax.lax.cond(
+            (params, agg_next, delta, delta_next, corr_cl,
+             corr_edge) = jax.lax.cond(
                 state.step % t_e == 0, prologue, no_op, operand)
         elif sync == "always":
-            params, delta, delta_next, corr_cl, corr_edge = prologue(operand)
+            (params, agg_next, delta, delta_next, corr_cl,
+             corr_edge) = prologue(operand)
         else:  # 'never'
-            params, delta, delta_next, corr_cl, corr_edge = operand
+            (params, agg_next, delta, delta_next, corr_cl,
+             corr_edge) = operand
 
         mu = jnp.asarray(
             algo.mu if algo.is_sign else algo.mu_sgd, algo.master_dtype)
@@ -1251,8 +1312,8 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
         params = constrain_master(params)
 
         new_state = TrainState(
-            step=state.step + 1, params=params, delta=delta,
-            delta_next=delta_next, ef=new_ef, mom=new_mom,
+            step=state.step + 1, params=params, agg_next=agg_next,
+            delta=delta, delta_next=delta_next, ef=new_ef, mom=new_mom,
             corr_cl=corr_cl, corr_edge=corr_edge, rng=rng)
         metrics = {
             "loss": jnp.mean(losses.astype(jnp.float32)),
@@ -1302,6 +1363,13 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
                 topo, jax.tree.map(
                     lambda v: jnp.zeros_like(v, dtype=dt), params_tree),
                 bundle.compute_specs, None, devices=d_virtual)
+        # the staged in-flight aggregate starts as a copy of the freshly
+        # replicated initial model: the step-0 prologue then commits
+        # exactly w0 (bitwise), so round 0 runs from the same model the
+        # oracle's round 0 does, while the first real aggregate is
+        # issued at that boundary and lands one round later
+        agg_next = (constrain_master(jax.tree.map(jnp.copy, params))
+                    if cloud_sched.staged else None)
         delta = zeros_m(algo.delta_dtype) if needs_delta else None
         delta_next = (zeros_m(algo.delta_dtype)
                       if (algo.is_dc and algo.anchor_staleness == 1) else None)
@@ -1317,9 +1385,9 @@ def make_hier_step(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
             corr_cl = zeros_pd(algo.delta_dtype)
             corr_edge = zeros_m(algo.delta_dtype)
         return TrainState(step=jnp.zeros((), jnp.int32), params=params,
-                          delta=delta, delta_next=delta_next, ef=ef,
-                          mom=mom, corr_cl=corr_cl, corr_edge=corr_edge,
-                          rng=rng)
+                          agg_next=agg_next, delta=delta,
+                          delta_next=delta_next, ef=ef, mom=mom,
+                          corr_cl=corr_cl, corr_edge=corr_edge, rng=rng)
 
     return init_fn, train_step
 
@@ -1376,6 +1444,7 @@ def state_shardings(topo: Topology, algo: AlgoConfig, bundle: ModelBundle,
     return TrainState(
         step=rep,
         params=master(abstract_state.params),
+        agg_next=master(abstract_state.agg_next),
         delta=master(abstract_state.delta),
         delta_next=master(abstract_state.delta_next),
         ef=dev(abstract_state.ef),

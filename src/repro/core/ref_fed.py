@@ -30,7 +30,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import signs
+from repro.core import schedule, signs
 
 PyTree = Any
 GradFn = Callable[[PyTree, Any, jax.Array], PyTree]
@@ -52,6 +52,16 @@ class HierConfig:
     mu_sgd: float = 1.0         # step-size for the full-precision baselines
     decay: bool = False         # mu_t = mu0/sqrt(t+1) (paper's CIFAR setting)
     cloud_period: int = 2       # mtgc only: rounds between eta refreshes
+    cloud_overlap: Any = "sync"  # cloud sync schedule: "sync" | "overlap",
+                                # or an explicit ``schedule.CloudSchedule``
+                                # (tests use lag=0 through the overlap
+                                # machinery to pin the zero-latency-commit
+                                # collapse)
+
+    def cloud_schedule(self) -> schedule.CloudSchedule:
+        if isinstance(self.cloud_overlap, schedule.CloudSchedule):
+            return self.cloud_overlap
+        return schedule.CloudSchedule.from_mode(self.cloud_overlap)
 
 
 @dataclasses.dataclass
@@ -70,6 +80,15 @@ class FedState:
     round: int = 0
     corr_cl: list[list[PyTree]] | None = None
     corr_edge: list[PyTree] | None = None
+    w_inflight: PyTree | None = None  # cloud_overlap="overlap" only: the
+                                      # aggregate issued at this round's
+                                      # opening boundary, committed one
+                                      # boundary later (lazy-initialized
+                                      # on the first round to the opening
+                                      # weights' sum of Q copies of w --
+                                      # what the distributed step-0
+                                      # boundary issues from the
+                                      # replicated init)
 
 
 def init_state(w0: PyTree, num_edges: int) -> FedState:
@@ -157,6 +176,20 @@ def global_round(
     mu = cfg.mu if cfg.method in SIGN_METHODS else cfg.mu_sgd
     if cfg.decay:
         mu = mu / jnp.sqrt(state.round + 1.0)
+
+    # ---- cloud sync schedule (core.schedule): under "overlap" the round
+    # runs from the COMMITTED (one-boundary-stale) aggregate -- which is
+    # exactly ``state.w`` here, committed by the previous call -- while
+    # ``state.w_inflight`` holds the aggregate issued at this round's
+    # opening boundary, to be committed at the close.  Lazy first-round
+    # init: the edges all hold w0 at the opening boundary, so the issued
+    # aggregate is the opening weights' sum of Q copies of w (what the
+    # distributed step-0 prologue issues from the replicated init).
+    sched = cfg.cloud_schedule()
+    w_inflight = state.w_inflight
+    if sched.staged and w_inflight is None:
+        w_inflight = _tree_weighted_sum(
+            [float(x) for x in edge_weights], [state.w] * q_edges)
 
     def edge_shares(q, mask=None):
         if not reweight_participation:
@@ -321,9 +354,14 @@ def global_round(
     # ---- cloud aggregation: w^(t+1) = sum_q (D_q/N) v_q^(t, T_E)
     # (under membership churn the closing weights are the NEXT round's
     # edge weights -- the distributed prologue's view; see
-    # ``edge_weights_agg``)
-    w_next = _tree_weighted_sum(
+    # ``edge_weights_agg``).  The schedule decides what lands: sync
+    # commits the freshly issued aggregate; overlap commits the one
+    # issued at this round's OPENING boundary (``w_inflight``, its
+    # weights pinned to issue time) and stages the fresh one.
+    issued = _tree_weighted_sum(
         edge_weights if edge_weights_agg is None else edge_weights_agg,
         edge_models)
+    w_next, w_inflight = sched.commit(issued, w_inflight)
     return FedState(w=w_next, delta=new_delta, round=state.round + 1,
-                    corr_cl=corr_cl, corr_edge=corr_edge)
+                    corr_cl=corr_cl, corr_edge=corr_edge,
+                    w_inflight=w_inflight)

@@ -1,0 +1,93 @@
+"""Cloud sync schedule: WHEN a cloud aggregate is issued vs committed.
+
+The paper's cloud tier is a synchronous barrier -- every T_E local steps
+all edges stop, the cross-pod mean lands, and the anchors refresh before
+anyone steps again.  At deployment scale the cloud round-trip dominates
+wall-clock, so the schedule of that barrier becomes its own layer: a
+round boundary splits into an *issue* phase (snapshot the edge models
+and start the cross-pod mean) and a *commit* phase (apply an aggregate
+that finished its flight), and the only question is how many boundaries
+separate the two.
+
+``CloudSchedule`` answers it with a single integer ``lag``:
+
+  * ``lag=0`` (``mode="sync"``) -- issue and commit at the SAME
+    boundary: today's behavior, bitwise-preserved.  No staged state.
+  * ``lag=1`` (``mode="overlap"``) -- the aggregate issued at boundary
+    t is committed at boundary t+1: edges run round t's local sign
+    steps against their LOCAL models while the mean is in flight, and
+    the DC ``delta`` / SCAFFOLD ``corr_*`` / MTGC ``eta`` anchors
+    refresh at the *committed* (one-round-stale) aggregate.  The
+    in-flight aggregate lives in a staged slot (``TrainState.agg_next``
+    in the distributed step, ``FedState.w_inflight`` in the ``ref_fed``
+    oracle) -- the same staging shape as DC's ``anchor_staleness`` /
+    ``delta_next`` knob, generalized to the model itself.
+
+Commit weights are pinned to ISSUE-time membership: the mean that left
+at boundary t lands unchanged at boundary t+1 even if pods died or
+recovered mid-flight (the ``edge_weights_agg`` oracle hook carries the
+issue-time weights under churn).
+
+Both ``core.hier`` (the jitted step) and ``core.ref_fed`` (the python
+oracle) consume the SAME schedule object, so the sync/overlap choice is
+a property of this layer -- never re-derived per local-step path or per
+launcher.  ``commit`` is layout-agnostic: it only swaps references, so
+pytrees, ``flatbuf.FlatState`` buffers and python model trees all ride
+through unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+CLOUD_OVERLAP_MODES = ("sync", "overlap")
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudSchedule:
+    """The cloud tier's issue->commit latency, in round boundaries.
+
+    ``lag=0`` is the synchronous barrier; ``lag=1`` overlaps one round
+    of local stepping with the aggregate's flight.  A zero-latency
+    commit (lag=0) routed through the overlap machinery collapses to
+    the sync trajectory -- property-tested in
+    tests/test_ref_fed_overlap.py.
+    """
+    lag: int = 0
+
+    def __post_init__(self):
+        if self.lag not in (0, 1):
+            raise ValueError(
+                f"CloudSchedule lag must be 0 (sync) or 1 (overlap), "
+                f"got {self.lag}")
+
+    @classmethod
+    def from_mode(cls, mode: str) -> "CloudSchedule":
+        if mode not in CLOUD_OVERLAP_MODES:
+            raise ValueError(
+                f"unknown cloud_overlap mode {mode!r} (choose from "
+                f"{', '.join(CLOUD_OVERLAP_MODES)})")
+        return cls(lag=0 if mode == "sync" else 1)
+
+    @property
+    def mode(self) -> str:
+        return "sync" if self.lag == 0 else "overlap"
+
+    @property
+    def staged(self) -> bool:
+        """Whether a staged (in-flight) aggregate slot exists at all."""
+        return self.lag > 0
+
+    def commit(self, issued, staged):
+        """One round boundary: ``(model_to_run_on, new_staged)``.
+
+        ``issued`` is the aggregate computed AT this boundary from the
+        current edge models (with this boundary's membership weights);
+        ``staged`` is the slot holding the aggregate issued ``lag``
+        boundaries ago (``None`` when nothing is staged).  Sync commits
+        ``issued`` immediately and leaves the slot untouched; overlap
+        commits the staged aggregate and stages ``issued`` in its
+        place.
+        """
+        if self.lag == 0:
+            return issued, staged
+        return staged, issued

@@ -45,6 +45,13 @@ REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
 
 
 def lower_train(built, topo, algo, shape, sync):
+    if sync == "never" and algo.is_overlap:
+        # the overlapped schedule only changes the round prologue, which
+        # sync="never" statically removes -- the local-step phase is the
+        # IDENTICAL program either way, so lower it as sync (the always
+        # phase keeps the overlap prologue: commit staged + issue fresh)
+        import dataclasses
+        algo = dataclasses.replace(algo, cloud_overlap="sync")
     _, step = hier.make_hier_step(topo, algo, built.bundle, sync=sync)
     state_abs = S.train_state_abstract(built, topo, algo)
     batch_abs = S.train_batch_abstract(built.cfg, shape, topo)
@@ -135,7 +142,7 @@ def analyze(lowered, label, verbose=True, axis_sizes=None,
 
 def run_cell(arch_name, shape_name, multi_pod, method, transport,
              t_e, verbose=True, tag="baseline", state_layout="tree",
-             clients=None, chaos_seed=None):
+             clients=None, chaos_seed=None, cloud_overlap="sync"):
     shape = SHAPES[shape_name]
     cfg = configs.get_config(arch_name)
     ok, why = configs.shape_applicable(cfg, shape)
@@ -148,10 +155,18 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
     if (ok and shape.kind == "train" and cfg.param_mode == "fsdp"
             and clients is not None and clients.active):
         ok, why = False, "virtual clients require the replicated regime"
+    if (ok and shape.kind == "train" and cfg.param_mode == "fsdp"
+            and cloud_overlap == "overlap"):
+        # the staged in-flight aggregate is a whole-model master
+        # snapshot the FSDP lift never materializes -- clean SKIP, same
+        # contract as the cells above
+        ok, why = False, ("cloud_overlap='overlap' requires the "
+                          "replicated regime")
     cell = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "method": method, "transport": transport,
+        "cloud_overlap": cloud_overlap,
         "params": None, "skipped": not ok, "skip_reason": why,
     }
     if not ok:
@@ -167,6 +182,7 @@ def run_cell(arch_name, shape_name, multi_pod, method, transport,
     from repro.core import clients as vclients
     algo = hier.AlgoConfig(method=method, transport=transport, t_e=t_e,
                            state_layout=state_layout,
+                           cloud_overlap=cloud_overlap,
                            clients=clients or vclients.ClientConfig())
     phases = {}
     mesh_tag = "multi" if multi_pod else "single"
@@ -219,6 +235,12 @@ def main():
                          "quorum at --participation_rate)")
     ap.add_argument("--participation_rate", type=float, default=1.0)
     ap.add_argument("--t_e", type=int, default=15)
+    ap.add_argument("--cloud_overlap", default="sync",
+                    help="sync | overlap (lagged cloud commit: the "
+                         "always phase carries the staged agg_next "
+                         "slot; the never phase is schedule-independent "
+                         "and lowers identically; FSDP train cells "
+                         "report a clean SKIP)")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="attach a chaos-cell report to every train "
                          "cell: compile a seeded fault schedule "
@@ -229,6 +251,12 @@ def main():
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+
+    from repro.core import schedule
+    if args.cloud_overlap not in schedule.CLOUD_OVERLAP_MODES:
+        ap.error(f"--cloud_overlap must be one of "
+                 f"{'/'.join(schedule.CLOUD_OVERLAP_MODES)}, got "
+                 f"{args.cloud_overlap!r}")
 
     archs = configs.ARCH_NAMES if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -277,7 +305,8 @@ def main():
                                     args.transport, args.t_e,
                                     verbose=not args.quiet, tag=args.tag,
                                     state_layout=args.state_layout,
-                                    clients=cc, chaos_seed=args.chaos)
+                                    clients=cc, chaos_seed=args.chaos,
+                                    cloud_overlap=args.cloud_overlap)
                     cell["wall_s"] = round(time.time() - t0, 1)
                     out.write_text(json.dumps(cell, indent=1))
                     print(f"   OK ({cell['wall_s']}s) -> {out.name}",

@@ -25,7 +25,7 @@ from repro import configs
 from repro.checkpoint import store
 from repro.checkpoint.async_ckpt import AsyncSaver
 from repro.core import clients as vclients
-from repro.core import hier, votes
+from repro.core import hier, schedule, votes
 from repro.core.topology import Topology, single_device_topology
 from repro.data import synthetic
 from repro.models import build
@@ -162,6 +162,14 @@ def main():
                     help="mtgc only: rounds between cloud-timescale eta "
                          "refreshes (the edge-timescale gamma refreshes "
                          "every round)")
+    ap.add_argument("--cloud_overlap", default="sync",
+                    choices=list(schedule.CLOUD_OVERLAP_MODES),
+                    help="cloud sync schedule: sync = issue and commit "
+                         "the cross-pod aggregate at the same round "
+                         "boundary (the paper's barrier); overlap = "
+                         "commit one boundary later, hiding the cloud "
+                         "round-trip behind a round of local stepping "
+                         "(staged agg_next slot; replicated regime only)")
     ap.add_argument("--clients_per_device", type=int, default=1,
                     help="K virtual clients per data slice (the device "
                          "batch is carved into K per-client shards)")
@@ -199,6 +207,13 @@ def main():
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))
+    # validate the schedule x regime combination up front: a clean CLI
+    # error beats the make_hier_step ValueError's jit-time traceback
+    if args.cloud_overlap == "overlap" and cfg.param_mode == "fsdp":
+        ap.error(f"--cloud_overlap=overlap requires the replicated "
+                 f"regime, but --arch {args.arch} uses param_mode='fsdp' "
+                 f"(the staged in-flight aggregate is a whole-model "
+                 f"master snapshot the FSDP lift never materializes)")
     if args.multi_pod:
         from repro.launch import mesh as mesh_mod
         topo = mesh_mod.make_topology(multi_pod=True)
@@ -206,6 +221,7 @@ def main():
         topo = single_device_topology()
     algo = hier.AlgoConfig(method=args.method, mu=args.mu, rho=args.rho,
                            cloud_period=args.cloud_period,
+                           cloud_overlap=args.cloud_overlap,
                            t_e=args.t_e, transport=args.transport,
                            state_layout=args.state_layout,
                            clients=vclients.ClientConfig(

@@ -141,7 +141,8 @@ def aggregate(params, edge_weights):
         params)
 
 
-def run_oracle(problem, method, mask=None, clients=None, cloud_period=2):
+def run_oracle(problem, method, mask=None, clients=None, cloud_period=2,
+               cloud_overlap="sync"):
     """ref_fed transcription of Algorithms 1/2 on the same trajectory.
 
     With an active ``clients`` ClientConfig the oracle hosts the same
@@ -149,10 +150,18 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2):
     slice d is oracle client d*K + c, its batch is the matching
     contiguous shard of the slice batch, the per-round participation
     mask comes from the SAME pinned (seed, round) scheme, |D_qk| weight
-    the vote, and anchor/mean shares reweight to the participants."""
+    the vote, and anchor/mean shares reweight to the participants.
+
+    Under ``cloud_overlap="overlap"`` the returned tree is the oracle's
+    ``w_inflight`` -- the aggregate issued at the CLOSING boundary from
+    the final edge models, i.e. the quantity comparable to
+    ``aggregate(final distributed edge params, closing edge weights)``
+    (the committed ``state.w`` lags one boundary behind it, mirroring
+    ``TrainState.agg_next``)."""
     pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
     cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
-                             method=method, cloud_period=cloud_period)
+                             method=method, cloud_period=cloud_period,
+                             cloud_overlap=cloud_overlap)
     cc = clients or vclients.ClientConfig()
     k_c = cc.count
     state = ref_fed.init_state(problem["w0"], pods)
@@ -193,7 +202,8 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2):
             [list(row) for row in mask_t],
             vote_weights=vote_w if cc.active else None,
             reweight_participation=cc.active)
-    return jax.tree.map(np.asarray, state.w)
+    out = state.w_inflight if cfg.cloud_schedule().staged else state.w
+    return jax.tree.map(np.asarray, out)
 
 
 # -- chaos cells: membership churn schedules through the SAME runners --
@@ -276,16 +286,22 @@ def run_hier_chaos(topo, problem, method, transport="ag_packed",
     return jax.tree.map(np.asarray, params), arrays
 
 
-def run_oracle_chaos(problem, method, clients, arrays, cloud_period=2):
+def run_oracle_chaos(problem, method, clients, arrays, cloud_period=2,
+                     cloud_overlap="sync"):
     """The grown ``ref_fed`` oracle under the SAME compiled schedule:
     per-tau vote masks (``device_mask_steps`` = pinned participation of
     round t AND the membership mask of step t*T_E + tau), round-prologue
     weights from the arrays at step t*T_E, and the closing aggregation
     at the NEXT round's edge weights (``edge_weights_agg``) -- exactly
-    the distributed step's churn semantics."""
+    the distributed step's churn semantics.  ``edge_weights_agg`` is
+    also the overlap schedule's ISSUE-time membership pin: the
+    aggregate that leaves at a boundary lands one round later with the
+    weights it left with, even when a pod dies mid-flight.  As in
+    ``run_oracle``, overlap returns ``w_inflight``."""
     pods, devs, t_e = problem["pods"], problem["devs"], problem["t_e"]
     cfg = ref_fed.HierConfig(mu=5e-3, mu_sgd=0.05, t_e=t_e, rho=1.0,
-                             method=method, cloud_period=cloud_period)
+                             method=method, cloud_period=cloud_period,
+                             cloud_overlap=cloud_overlap)
     cc = clients
     k_c = cc.count
     state = ref_fed.init_state(problem["w0"], pods)
@@ -329,7 +345,8 @@ def run_oracle_chaos(problem, method, clients, arrays, cloud_period=2):
             reweight_participation=True,
             edge_weights_agg=[float(x)
                               for x in arrays[(t + 1) * t_e].edge_weights])
-    return jax.tree.map(np.asarray, state.w)
+    out = state.w_inflight if cfg.cloud_schedule().staged else state.w
+    return jax.tree.map(np.asarray, out)
 
 
 # -- matrix definition (shared by the fast suite and the 8-device check)

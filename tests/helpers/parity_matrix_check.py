@@ -165,6 +165,44 @@ H.assert_trees_equal(H.aggregate(ref_h, arrays[-1].edge_weights),
                      oracle, "chaos-oracle", exact=False, atol=1e-5)
 print("dc_hier_signsgd  K=2 sampled-weighted churn cell OK (pod kill)")
 
+# ---- overlapped cloud tier on the 8-device mesh -----------------------
+# cloud_overlap="overlap" under the SAME churn schedule: pod 1 dies at
+# step t_e+2 -- i.e. WHILE the aggregate issued at the step-t_e boundary
+# is in flight -- and recovers one round later.  The commit weights are
+# pinned to issue-time membership (edge_weights_agg), so the in-flight
+# mean lands unchanged; cells stay bitwise across transports x layouts x
+# modes (incl. the model-SHARDED fused flat agg_next slot) and the
+# closing aggregate matches the extended oracle's w_inflight at the
+# usual multi-device atol
+ref_o, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                            clients=ccc, arrays=arrays,
+                            cloud_overlap="overlap")
+for transport, layout, mode in (("fused", "tree", "merged"),
+                                ("fused", "flat", "stream"),
+                                ("ar_int8", "flat", "merged")):
+    ccm = ccc if mode == "merged" else dataclasses.replace(ccc,
+                                                           mode="stream")
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              transport, layout, clients=ccm,
+                              arrays=arrays, cloud_overlap="overlap")
+    H.assert_trees_equal(ref_o, got,
+                         f"overlap-chaos/{transport}/{layout}/{mode}")
+oracle = H.run_oracle_chaos(problem, "dc_hier_signsgd", ccc, arrays,
+                            cloud_overlap="overlap")
+H.assert_trees_equal(H.aggregate(ref_o, arrays[-1].edge_weights),
+                     oracle, "overlap-chaos-oracle", exact=False,
+                     atol=1e-5)
+for method in ("hier_signsgd", "scaffold_hier_signsgd",
+               "mtgc_hier_signsgd"):
+    got, ew = H.run_hier(topo, problem, method, clients=cc,
+                         cloud_overlap="overlap")
+    oracle = H.run_oracle(problem, method, clients=cc,
+                          cloud_overlap="overlap")
+    H.assert_trees_equal(H.aggregate(got, ew), oracle,
+                         f"overlap-oracle/{method}", exact=False,
+                         atol=1e-5)
+print("dc_hier_signsgd  overlap churn-in-flight cell OK (pod kill)")
+
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
 # cells run the padded-block layout (LeafSlot.shard_pad) and must stay

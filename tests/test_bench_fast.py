@@ -27,6 +27,11 @@ EXPECT_CLIENTS = {f"clients/K64_p0.1/{m}"
 EXPECT_METHODS = {f"methods/{m}"
                   for m in ("hier_signsgd", "dc_hier_signsgd",
                             "scaffold_hier_signsgd", "mtgc_hier_signsgd")}
+# cloud sync schedule: per-round wall-clock with the cloud RTT on the
+# critical path (sync) vs hidden behind a round of local work (overlap)
+EXPECT_OVERLAP = {f"overlap/rtt{r}ms/{sched}/{m}"
+                  for r in (1000, 10000) for sched in ("sync", "overlap")
+                  for m in ("hier_signsgd", "dc_hier_signsgd")}
 
 
 def test_fast_profile_is_fast_and_schema_stable(tmp_path):
@@ -50,7 +55,7 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
                         for row in rows)
     names = {row["name"] for row in rows}
     for expect in (EXPECT_FIG2, EXPECT_FIG3, EXPECT_FIG4, EXPECT_CLIENTS,
-                   EXPECT_METHODS):
+                   EXPECT_METHODS, EXPECT_OVERLAP):
         assert expect <= names, expect - names
     by_name = {row["name"]: row for row in rows}
     for name in EXPECT_FIG2 | EXPECT_FIG3 | EXPECT_FIG4:
@@ -80,5 +85,24 @@ def test_fast_profile_is_fast_and_schema_stable(tmp_path):
             < _down("methods/dc_hier_signsgd")
             == _down("methods/scaffold_hier_signsgd")
             < _down("methods/mtgc_hier_signsgd"))
+    for name in EXPECT_OVERLAP:
+        row = by_name[name]
+        assert row["us_per_call"] > 0
+        assert "cloud_rtt_ms=" in row["derived"], row
+        assert "hidden_frac=" in row["derived"], row
+        assert "speedup_vs_sync=" in row["derived"], row
+        assert "src=cost_model" in row["derived"], row
+    # overlap never pays MORE than sync, and the saving is real for
+    # every (rtt, method) pair: max(round, RTT) < round + RTT whenever
+    # both are positive
+    for name in EXPECT_OVERLAP:
+        if "/overlap/" not in name:
+            continue
+        sync_row = by_name[name.replace("/overlap/", "/sync/")]
+        assert by_name[name]["us_per_call"] < sync_row["us_per_call"], (
+            name)
+        speed = float(by_name[name]["derived"]
+                      .split("speedup_vs_sync=")[1].split()[0])
+        assert speed > 1.0, name
     # table2 rows ride along unchanged
     assert any(n.startswith("table2/") for n in names)

@@ -75,12 +75,115 @@ def test_async_saver(tmp_path):
     assert int(out["step"]) == 20
 
 
+def test_async_saver_surfaces_worker_failure(tmp_path, monkeypatch):
+    """A failed background save is re-raised on the next wait() with
+    the original error chained -- and the writer thread SURVIVES the
+    failure, so later saves still land."""
+    from repro.checkpoint import async_ckpt
+    orig = store.save
+
+    def flaky(ckpt_dir, step, tree, keep=3):
+        if step == 1:
+            raise IOError("disk full")
+        return orig(ckpt_dir, step, tree, keep=keep)
+
+    monkeypatch.setattr(async_ckpt.store, "save", flaky)
+    saver = AsyncSaver(tmp_path, keep=5)
+    saver.submit(1, _tree(1))
+    with pytest.raises(RuntimeError,
+                       match="background checkpoint save failed") as exc:
+        saver.wait()
+    assert isinstance(exc.value.__cause__, IOError)
+    saver.submit(2, _tree(2))
+    saver.close()
+    assert store.available_steps(tmp_path) == [2]
+
+
+def test_async_saver_submit_reraises(tmp_path, monkeypatch):
+    """submit() surfaces a pending background failure too (a training
+    loop that never calls wait() until the end still finds out at the
+    next checkpoint interval)."""
+    import time
+
+    from repro.checkpoint import async_ckpt
+
+    def failing(*a, **kw):
+        raise IOError("disk full")
+
+    monkeypatch.setattr(async_ckpt.store, "save", failing)
+    saver = AsyncSaver(tmp_path)
+    saver.submit(1, _tree(1))
+    deadline = time.time() + 10
+    while saver._err is None and time.time() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError,
+                       match="background checkpoint save failed"):
+        saver.submit(2, _tree(2))
+    saver.close()
+
+
+def test_async_saver_malformed_item_cannot_deadlock(tmp_path):
+    """Regression: an item the worker cannot even unpack used to kill
+    the thread OUTSIDE the task_done() guard, deadlocking wait()
+    forever; now it surfaces like any other failure and the worker
+    keeps serving."""
+    saver = AsyncSaver(tmp_path)
+    saver._q.put("bogus")        # simulate a corrupted handoff
+    with pytest.raises(RuntimeError,
+                       match="background checkpoint save failed"):
+        saver.wait()
+    saver.submit(3, _tree(3))
+    saver.close()
+    assert store.available_steps(tmp_path) == [3]
+
+
+def test_async_saver_submit_after_close_raises(tmp_path):
+    """Steps submitted to a closed saver would never reach disk --
+    refuse loudly instead of enqueueing into the void."""
+    saver = AsyncSaver(tmp_path)
+    saver.close()
+    with pytest.raises(RuntimeError, match="not running"):
+        saver.submit(1, _tree(1))
+
+
 def test_manifest_records_leaves(tmp_path):
     t = _tree(0)
     path = store.save(tmp_path, 7, t)
     manifest = json.loads((path / "manifest.json").read_text())
     assert manifest["step"] == 7
     assert any("params/w" in k for k in manifest["leaves"])
+
+
+def _train_state(staged: bool):
+    """A minimal hier.TrainState, with or without the overlap schedule's
+    staged in-flight aggregate."""
+    from repro.core import hier
+    p = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.ones((3,))}
+    agg = jax.tree.map(lambda x: x + 1.0, p) if staged else None
+    return hier.TrainState(step=jnp.asarray(4, jnp.int32), params=p,
+                           agg_next=agg, delta=None, delta_next=None,
+                           ef=None, mom=None, corr_cl=None,
+                           corr_edge=None, rng=jax.random.PRNGKey(0))
+
+
+def test_overlap_staged_slot_roundtrip(tmp_path):
+    """The staged in-flight aggregate (TrainState.agg_next,
+    cloud_overlap="overlap") is recorded in the manifest and restored
+    bit-exactly -- mid-flight kill-restore-replay depends on it.  A
+    pre-overlap (sync) checkpoint restored into an overlap state
+    template fails loudly instead of fabricating an in-flight
+    aggregate."""
+    t = _train_state(staged=True)
+    path = store.save(tmp_path / "a", 4, t)
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert any("agg_next" in k for k in manifest["leaves"])
+    out = store.restore(tmp_path / "a", 4, t)
+    for k in t.params:
+        np.testing.assert_array_equal(np.asarray(out.agg_next[k]),
+                                      np.asarray(t.agg_next[k]))
+    store.save(tmp_path / "b", 5, _train_state(staged=False))
+    with pytest.raises(IOError, match="missing leaf"):
+        store.restore(tmp_path / "b", 5, t)
 
 
 # ---------------------------------------------------------------------------

@@ -206,6 +206,44 @@ def test_elastic_chaos_documented():
     assert "kill-restore-replay" in readme and "kill-restore-replay" in arch
 
 
+def test_cloud_overlap_documented():
+    """The cloud sync-schedule contract is pinned: the architecture doc
+    carries the Overlapped cloud tier section (issue/commit split,
+    staged agg_next slot, lagged-anchor + checkpoint semantics), the
+    README matrix advertises the overlap column for exactly the
+    oracle-validated methods, both docs name the CLI flag, and every
+    documented mode exists in the schedule layer."""
+    from repro.core.schedule import CLOUD_OVERLAP_MODES
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "Overlapped cloud tier" in arch
+    assert "Overlapped cloud tier" in readme
+    for mode in CLOUD_OVERLAP_MODES:
+        assert f"`{mode}`" in readme, f"README: cloud_overlap mode {mode}"
+    assert "cloud_overlap" in arch and "--cloud_overlap" in readme
+    assert "CloudSchedule" in arch and "CloudSchedule" in readme
+    for text, name in ((readme, "README"), (arch, "architecture.md")):
+        assert "agg_next" in text, name                # the staged slot
+        assert "issue" in text and "commit" in text, name
+        assert "replicated regime" in text, name       # fsdp rejection
+    assert "w_inflight" in arch and "w_inflight" in readme  # oracle twin
+    assert "edge_weights_agg" in arch    # issue-time weight pinning
+    assert "one boundary earlier" in arch and "one boundary earlier" in \
+        readme                           # the lag-1 commit rule
+    assert "test_ref_fed_overlap.py" in readme
+    assert "overlap_rows" in readme and "overlap_rows" in arch
+    assert "max(round, RTT)" in readme and "max(round, RTT)" in arch
+    # the README matrix overlap column matches the validated methods:
+    # every sign method + hier_sgd run the overlap cells vs the oracle;
+    # hier_local_qsgd is oracle-only (no distributed cell) -> not a ✓
+    matrix = _readme_matrix()
+    for method in hier.SIGN_METHODS + ("hier_sgd",):
+        assert matrix[method].get("overlap") == "✓", (
+            f"README matrix: {method} must advertise the overlap "
+            f"schedule (tested by test_parity_matrix's overlap cells)")
+    assert matrix["hier_local_qsgd"].get("overlap") == "—"
+
+
 def test_readme_tier1_command():
     """The README's verify command matches ROADMAP's tier-1 gate."""
     readme = (ROOT / "README.md").read_text()

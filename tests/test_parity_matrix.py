@@ -587,6 +587,185 @@ def test_chaos_membership_zero_recompilation(topo, problem, chaos):
     assert sum(traces) == 1, f"recompiled: {sum(traces)} traces"
 
 
+# ---------------------------------------------------------------------------
+# Overlapped cloud tier (cloud_overlap="overlap"): the round boundary
+# splits into issue (snapshot + start the cross-pod mean) and commit
+# (apply the aggregate issued one boundary earlier); edges keep
+# local-stepping on their local models while the mean is in flight.
+# The extended ref_fed oracle runs the SAME lagged schedule
+# (FedState.w_inflight mirrors TrainState.agg_next).
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_sync_mode_is_noop(topo, problem, refs):
+    """cloud_overlap="sync" (explicit) is bitwise the default trajectory
+    -- the schedule layer's lag=0 path IS the pre-existing prologue, on
+    both state layouts."""
+    ref, _ = _ref(refs, topo, problem, "dc_hier_signsgd")
+    for layout in H.LAYOUTS:
+        got, _ = H.run_hier(topo, problem, "dc_hier_signsgd", "ag_packed",
+                            layout, cloud_overlap="sync")
+        H.assert_trees_equal(ref, got, f"overlap-sync-noop/{layout}")
+
+
+def test_overlap_differs_from_sync(topo, problem, refs):
+    """Sanity: the lagged commit actually changes the trajectory (guards
+    against a schedule layer that silently commits the fresh issue)."""
+    import numpy as np
+    ref, _ = _ref(refs, topo, problem, "dc_hier_signsgd")
+    got, _ = H.run_hier(topo, problem, "dc_hier_signsgd",
+                        cloud_overlap="overlap")
+    assert any(not np.array_equal(np.asarray(ref[k]), np.asarray(got[k]))
+               for k in ref)
+
+
+OVERLAP_METHODS = ["hier_signsgd", "dc_hier_signsgd",
+                   "scaffold_hier_signsgd", "mtgc_hier_signsgd"]
+
+
+@pytest.mark.parametrize("method", OVERLAP_METHODS)
+def test_overlap_matrix_vs_oracle(topo, problem, method):
+    """HEADLINE overlap contract: every sign method x transport x
+    layout x merged/stream cell runs the lagged schedule bitwise
+    identically, and the closing-boundary aggregate of the final edge
+    models is EXACT vs the extended oracle's in-flight aggregate
+    (``w_inflight``) -- the committed model lags one boundary behind on
+    both sides by construction."""
+    cc = H.client_cfg(1, 1, 2, "full")
+    ref = ew = None
+    for transport in H.SIGN_TRANSPORTS:
+        for layout in H.LAYOUTS:
+            for mode in ("merged", "stream"):
+                ccm = cc if mode == "merged" else _stream(cc)
+                got, w = H.run_hier(topo, problem, method, transport,
+                                    layout, clients=ccm,
+                                    cloud_overlap="overlap")
+                if ref is None:
+                    ref, ew = got, w
+                H.assert_trees_equal(
+                    ref, got,
+                    f"overlap/{method}/{transport}/{layout}/{mode}")
+    oracle = H.run_oracle(problem, method, clients=cc,
+                          cloud_overlap="overlap")
+    H.assert_trees_equal(H.aggregate(ref, ew), oracle,
+                         f"overlap-oracle/{method}", exact=True)
+
+
+def test_overlap_sgd_vs_oracle(topo, problem):
+    """The full-precision mean method under the lagged schedule (float
+    tolerance: the oracle accumulates the edge mean in a different
+    association order)."""
+    cc = H.client_cfg(1, 1, 2, "full")
+    got, ew = H.run_hier(topo, problem, "hier_sgd", clients=cc,
+                         cloud_overlap="overlap")
+    oracle = H.run_oracle(problem, "hier_sgd", clients=cc,
+                          cloud_overlap="overlap")
+    H.assert_trees_equal(H.aggregate(got, ew), oracle,
+                         "overlap-oracle/hier_sgd", exact=False,
+                         atol=1e-6)
+
+
+def test_overlap_staged_slot_semantics(topo, problem):
+    """The staged slot IS the issued aggregate: at init it is a bitwise
+    copy of w0 (so the step-0 commit runs round 0 from w0, exactly like
+    sync), and at the end of the run it holds the aggregate issued at
+    the LAST executed boundary -- at P=1 / unit edge weight, bitwise
+    the edge-model snapshot taken there."""
+    import numpy as np
+    t_e = problem["t_e"]
+    algo = H._algo("dc_hier_signsgd", "ag_packed", "tree", t_e=t_e,
+                   cloud_overlap="overlap")
+    init_fn, step = hier.make_hier_step(topo, algo, H.make_bundle())
+    state = jax.jit(init_fn)(problem["w0"], jax.random.PRNGKey(1))
+    for k in problem["w0"]:   # staged copy of the initial edge params
+        assert np.array_equal(np.asarray(state.agg_next[k]),
+                              np.asarray(state.params[k]))
+    ew = jnp.ones((1,))
+    dw = mask = jnp.ones((1, 1))
+    jstep = jax.jit(step)
+    xs, ys = problem["xs"], problem["ys"]
+    snap = None
+    for s in range(problem["rounds"] * t_e):
+        anchor = s - s % t_e
+        batch = {"train": {"x": xs[s], "y": ys[s]},
+                 "anchor": {"x": xs[anchor], "y": ys[anchor]}}
+        state, _ = jstep(state, batch, ew, dw, mask)
+        if s == 2 * t_e - 1:    # end of round 1: the NEXT boundary issues
+            snap = jax.tree.map(np.asarray, state.params)
+    H.assert_trees_equal(snap, jax.tree.map(np.asarray, state.agg_next),
+                         "overlap-staged-slot")
+
+
+def test_overlap_validation(topo):
+    """Incompatible regimes reject at build time with actionable
+    messages (the dryrun/launcher SKIP contracts lean on these)."""
+    with pytest.raises(ValueError, match="cloud_overlap"):
+        hier.AlgoConfig(cloud_overlap="bogus")
+    with pytest.raises(ValueError, match="replicated"):
+        hier.make_hier_step(topo, hier.AlgoConfig(cloud_overlap="overlap"),
+                            H.make_bundle("fsdp"))
+    with pytest.raises(ValueError, match="prologue"):
+        hier.make_hier_step(topo, hier.AlgoConfig(cloud_overlap="overlap"),
+                            H.make_bundle(), sync="never")
+
+
+@pytest.mark.parametrize("method", CHAOS_METHODS)
+def test_overlap_chaos_vs_oracle(topo, problem, chaos, method):
+    """Churn while an aggregate is in flight: the chaos schedule runs
+    under the lagged commit, and the closing aggregate stays EXACT vs
+    the oracle -- commit weights are pinned to issue-time membership
+    (``edge_weights_agg``), so mid-flight kills change WHO votes next
+    round but never what lands."""
+    cc, inj, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              arrays=arrays, cloud_overlap="overlap")
+    oracle = H.run_oracle_chaos(problem, method, cc, arrays,
+                                cloud_overlap="overlap")
+    H.assert_trees_equal(H.aggregate(ref, arrays[-1].edge_weights),
+                         oracle, f"overlap-chaos-oracle/{method}",
+                         exact=True)
+
+
+@pytest.mark.parametrize("transport", H.SIGN_TRANSPORTS)
+@pytest.mark.parametrize("layout", H.LAYOUTS)
+def test_overlap_chaos_cross_cells(topo, problem, chaos, transport,
+                                   layout):
+    """Transport x layout invariance holds under churn + overlap too:
+    the staged slot rides the same schedule no matter how votes move
+    or where the state lives (flat cells exercise the FlatState
+    agg_next slot)."""
+    cc, inj, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              clients=cc, arrays=arrays,
+                              cloud_overlap="overlap")
+    got, _ = H.run_hier_chaos(topo, problem, "dc_hier_signsgd",
+                              transport, layout, clients=cc,
+                              arrays=arrays, cloud_overlap="overlap")
+    H.assert_trees_equal(ref, got,
+                         f"overlap-chaos-x/{transport}/{layout}")
+
+
+@pytest.mark.parametrize("method", ["dc_hier_signsgd",
+                                    "scaffold_hier_signsgd"])
+def test_overlap_kill_restore_replay(topo, problem, chaos, method,
+                                     tmp_path):
+    """Mid-flight kill-restore-replay is BITWISE invisible: with
+    ckpt_every=2 and the nan event at step 5, the restore lands at
+    step 4 -- mid-round, with an aggregate staged in agg_next -- and
+    the replayed trajectory is bitwise the uninterrupted one (the
+    checkpoint manifest records the staged slot like any other state
+    leaf)."""
+    cc, _, arrays = chaos
+    ref, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              arrays=arrays, cloud_overlap="overlap")
+    inj_n = H.chaos_injector(1, 1, 2, problem["t_e"], nan_step=5)
+    got, _ = H.run_hier_chaos(topo, problem, method, clients=cc,
+                              injector=inj_n, arrays=arrays,
+                              ckpt_dir=str(tmp_path), ckpt_every=2,
+                              cloud_overlap="overlap")
+    H.assert_trees_equal(ref, got, f"overlap-replay/{method}")
+
+
 def _run_check(script: str, want: str):
     env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
     r = subprocess.run(

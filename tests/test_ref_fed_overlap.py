@@ -1,0 +1,182 @@
+"""Property suite for the ``ref_fed`` oracle's cloud sync schedule
+(``HierConfig.cloud_overlap``, ``core.schedule.CloudSchedule``).
+
+The oracle is the ground truth of the whole repo, so the overlap
+semantics are pinned here *independently* of the distributed
+implementation:
+
+  * ``cloud_overlap="sync"`` is BITWISE the seed trajectory for every
+    method (the schedule layer's lag=0 path is the legacy round);
+  * a zero-latency commit (an explicit ``CloudSchedule(lag=0)``) routed
+    through the overlap machinery collapses to the sync trajectory and
+    never touches the staged slot;
+  * the first overlap commit is the identity at init: round 0 runs from
+    ``w0`` exactly (the staged slot lazy-initializes to the opening
+    weights' sum of Q copies of ``w0``, exact on a dyadic grid);
+  * each overlap round commits the aggregate issued one boundary
+    earlier: ``new.w == old.w_inflight`` bitwise;
+  * an all-abstaining issue round commits the identity aggregate:
+    every edge leaves its model untouched, so the issued mean is
+    ``sum_q ew_q * w == w`` exactly on a dyadic grid.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref_fed, schedule
+
+DIM = 6
+K = 2                      # clients per edge
+
+
+def _grad_fn(targets):
+    """Deterministic linear grads g = w - target (rng unused)."""
+    def grad_fn(params, batch, rng):
+        return {"w": params["w"] - targets[batch["k"]]}
+    return grad_fn
+
+
+def _targets(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, DIM)).astype(np.float32))
+
+
+def _w0(seed):
+    rng = np.random.default_rng(seed + 500)
+    return {"w": jnp.asarray(rng.normal(size=(DIM,)).astype(np.float32))}
+
+
+def _round_args(cfg, n_edges):
+    batches = [[[{"k": q * K + k} for _ in range(cfg.t_e)]
+                for k in range(K)] for q in range(n_edges)]
+    anchors = [[{"k": q * K + k} for k in range(K)]
+               for q in range(n_edges)]
+    return batches, anchors
+
+
+def _run(rounds, n_edges, seed, method="hier_signsgd",
+         cloud_overlap="sync", t_e=3, mask_round=None):
+    """Run ``rounds`` oracle rounds over ``n_edges`` edges with dyadic
+    edge weights; round ``mask_round`` (if set) masks EVERY client
+    out."""
+    targets = _targets(n_edges * K, seed)
+    cfg = ref_fed.HierConfig(mu=1e-2, t_e=t_e, rho=1.0, method=method,
+                             cloud_overlap=cloud_overlap)
+    state = ref_fed.init_state(_w0(seed), n_edges)
+    ew = [1.0 / n_edges] * n_edges          # n_edges in {1, 2, 4}: dyadic
+    batches, anchors = _round_args(cfg, n_edges)
+    for t in range(rounds):
+        dead = t == mask_round
+        state = ref_fed.global_round(
+            state, cfg, _grad_fn(targets), batches, anchors, ew,
+            [[0.5, 0.5]] * n_edges, jax.random.PRNGKey(0),
+            device_mask=[[not dead] * K] * n_edges,
+            vote_weights=[[1] * K] * n_edges,
+            reweight_participation=True)
+    return state
+
+
+METHODS = list(ref_fed.SIGN_METHODS) + ["hier_sgd", "hier_local_qsgd"]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]), st.integers(0, 4),
+       st.sampled_from(METHODS))
+def test_sync_mode_is_bitwise_seed_trajectory(rounds, n_edges, seed,
+                                              method):
+    """cloud_overlap="sync" (explicit) is bitwise the default-config
+    trajectory for EVERY method, and allocates no staged slot."""
+    base = _run(rounds, n_edges, seed, method)
+    got = _run(rounds, n_edges, seed, method, cloud_overlap="sync")
+    np.testing.assert_array_equal(np.asarray(base.w["w"]),
+                                  np.asarray(got.w["w"]))
+    assert got.w_inflight is None
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]), st.integers(0, 4),
+       st.sampled_from(METHODS))
+def test_zero_latency_commit_collapses_to_sync(rounds, n_edges, seed,
+                                               method):
+    """An explicit CloudSchedule(lag=0) -- issue and commit at the SAME
+    boundary -- through the overlap plumbing is bitwise the sync
+    trajectory (t_e=1: every step is a boundary), and a pre-seeded
+    staged slot rides through UNTOUCHED (zero latency never commits
+    it)."""
+    sync = _run(rounds, n_edges, seed, method, t_e=1)
+    targets = _targets(n_edges * K, seed)
+    cfg = ref_fed.HierConfig(mu=1e-2, t_e=1, rho=1.0, method=method,
+                             cloud_overlap=schedule.CloudSchedule(lag=0))
+    assert cfg.cloud_schedule().mode == "sync"
+    state = ref_fed.init_state(_w0(seed), n_edges)
+    junk = {"w": jnp.full((DIM,), 7.25)}
+    state = dataclasses.replace(state, w_inflight=junk)
+    ew = [1.0 / n_edges] * n_edges
+    batches, anchors = _round_args(cfg, n_edges)
+    for t in range(rounds):
+        state = ref_fed.global_round(
+            state, cfg, _grad_fn(targets), batches, anchors, ew,
+            [[0.5, 0.5]] * n_edges, jax.random.PRNGKey(0),
+            device_mask=[[True] * K] * n_edges,
+            vote_weights=[[1] * K] * n_edges,
+            reweight_participation=True)
+    np.testing.assert_array_equal(np.asarray(sync.w["w"]),
+                                  np.asarray(state.w["w"]))
+    np.testing.assert_array_equal(np.asarray(state.w_inflight["w"]),
+                                  np.asarray(junk["w"]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([1, 2, 4]), st.integers(0, 4),
+       st.sampled_from(METHODS))
+def test_first_overlap_commit_is_identity_at_init(n_edges, seed, method):
+    """Round 0 of an overlap run commits the lazy-initialized staged
+    slot -- the opening weights' sum of Q identical copies of w0, which
+    is w0 EXACTLY on a dyadic grid.  So round 1 runs from w0-anchored
+    models, exactly like the distributed step's staged copy(w0)."""
+    state = _run(1, n_edges, seed, method, cloud_overlap="overlap")
+    np.testing.assert_array_equal(np.asarray(state.w["w"]),
+                                  np.asarray(_w0(seed)["w"]))
+    assert state.w_inflight is not None
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]), st.integers(0, 4),
+       st.sampled_from(METHODS))
+def test_overlap_commits_previous_issue(rounds, n_edges, seed, method):
+    """One more round commits exactly what was in flight: the committed
+    model of round r+1 IS the aggregate staged at the end of round r,
+    bitwise."""
+    prev = _run(rounds, n_edges, seed, method, cloud_overlap="overlap")
+    nxt = _run(rounds + 1, n_edges, seed, method,
+               cloud_overlap="overlap")
+    np.testing.assert_array_equal(np.asarray(prev.w_inflight["w"]),
+                                  np.asarray(nxt.w["w"]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2), st.sampled_from([1, 2, 4]), st.integers(0, 4),
+       st.sampled_from(ref_fed.SIGN_METHODS))
+def test_all_abstaining_issue_round_commits_identity(mask_round, n_edges,
+                                                     seed, method):
+    """A round in which EVERY client abstains leaves every edge model
+    untouched, so the aggregate it issues is sum_q ew_q * w == w
+    exactly on a dyadic grid: the staged slot after that round equals
+    the round's committed model, bitwise."""
+    full = _run(mask_round, n_edges, seed, method,
+                cloud_overlap="overlap")
+    dead = _run(mask_round + 1, n_edges, seed, method,
+                cloud_overlap="overlap", mask_round=mask_round)
+    # the dead round still COMMITS normally: what was in flight at its
+    # opening boundary (round 0 commits the lazy init == w0 on the
+    # dyadic grid)
+    committed = full.w_inflight if mask_round > 0 else _w0(seed)
+    np.testing.assert_array_equal(np.asarray(dead.w["w"]),
+                                  np.asarray(committed["w"]))
+    # ... and ISSUES the identity aggregate of its entry model
+    # (full.w): no edge stepped, so sum_q ew_q * w == w exactly
+    np.testing.assert_array_equal(np.asarray(dead.w_inflight["w"]),
+                                  np.asarray(full.w["w"]))

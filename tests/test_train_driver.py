@@ -80,6 +80,44 @@ def test_fault_injection_device_loss(topo):
     assert hist[-1]["live"] == 1.0
 
 
+@pytest.mark.slow
+def test_overlap_driver_resumes_mid_flight(topo, tmp_path):
+    """The end-to-end driver runs the overlapped cloud schedule and
+    resumes from a checkpoint taken MID-round (t_e=4, ckpt_every=5:
+    step 10 is two local steps into a round, with an aggregate staged
+    in agg_next) -- the staged slot rides the async checkpoint path."""
+    cfg = configs.get_smoke("xlstm_350m")
+    algo = _algo(cloud_overlap="overlap")
+    run = RunCfg(steps=10, batch_per_device=4, seq_len=32,
+                 ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    _, h1 = run_training(cfg, topo, algo, run)
+    run2 = RunCfg(steps=14, batch_per_device=4, seq_len=32,
+                  ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    _, h2 = run_training(cfg, topo, algo, run2)
+    assert h2[0]["step"] == 10
+    assert all(jnp.isfinite(h["loss"]) for h in h1 + h2)
+
+
+def test_cli_rejects_overlap_on_fsdp_arch():
+    """--cloud_overlap=overlap on an FSDP arch is rejected at the CLI
+    (exit 2, readable argparse error) BEFORE any model build or
+    tracing."""
+    import pathlib
+    import subprocess
+    import sys
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "gemma3_12b", "--cloud_overlap", "overlap", "--steps", "1"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+    assert r.returncode == 2, (r.returncode, r.stderr[-2000:])
+    assert "replicated regime" in r.stderr
+    assert "--cloud_overlap" in r.stderr
+    assert "Traceback" not in r.stderr
+
+
 def test_cli_rejects_bad_client_carve():
     """A per-device batch that does not divide into --clients_per_device
     is rejected at the CLI (exit 2, readable argparse error) BEFORE any
