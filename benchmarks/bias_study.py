@@ -24,6 +24,16 @@ trajectory is method-comparable (same w-independent definition), so the
 JSON makes "which correction keeps the model nearest the unbiased
 descent direction" directly visible.
 
+A second axis tells the EDGE-ASSIGNMENT story under severe intra+inter
+skew (Dirichlet alpha=0.1 across edges AND alpha_client=0.1 within
+them): {random, clustered} client->edge assignment x {plain, DC,
+SCAFFOLD, MTGC}.  Random scatter mixes the skewed clients so every edge
+looks alike (small inter-edge drift, large intra-edge variance);
+clustered assignment (``data.cluster``, label-histogram signatures)
+concentrates similar clients per edge, maximizing exactly the
+inter-cluster bias the corrections cancel -- the 2x2 shows how much of
+the correction's win the placement policy can claim.
+
   PYTHONPATH=src python benchmarks/bias_study.py [--fast] [--out PATH]
 
 The default profile regenerates the checked-in BENCH_bias.json.
@@ -50,7 +60,13 @@ from repro.models import mlp
 METHODS = ("hier_sgd", "hier_signsgd", "dc_hier_signsgd",
            "scaffold_hier_signsgd", "mtgc_hier_signsgd")
 REGIMES = ("full", "sampled", "weighted")
-SCHEMA = "bias_study_v1"
+# the assignment story compares the sign-voting family only (hier_sgd
+# has no sign bias for the placement policy to move)
+ASSIGN_METHODS = ("hier_signsgd", "dc_hier_signsgd",
+                  "scaffold_hier_signsgd", "mtgc_hier_signsgd")
+ASSIGNS = ("random", "clustered")
+ALPHA_CLIENT = 0.1
+SCHEMA = "bias_study_v2"
 
 # K virtual clients per physical device slice: the oracle hosts them as
 # K more entries per edge (devices_per_edge * K clients under edge q)
@@ -99,12 +115,15 @@ def _drift_norm(state, shares, ew, anchors) -> float:
     return float(np.sqrt(tot))
 
 
-def run_cell(method: str, regime: str, prof: dict) -> dict:
+def run_cell(method: str, regime: str, prof: dict,
+             assign: str = "fixed",
+             alpha_client: float | None = None) -> dict:
     q_edges, devs = prof["q_edges"], prof["devices_per_edge"]
     n = devs * K_CLIENTS                     # clients per edge
     dcfg = emnist_like.FedDataCfg(
         n_train=prof["n_train"], n_test=prof["n_test"], alpha=0.1,
-        iid=False, seed=SEED, q_edges=q_edges, devices_per_edge=n)
+        iid=False, seed=SEED, q_edges=q_edges, devices_per_edge=n,
+        alpha_client=alpha_client, edge_assign=assign)
     dev, test, ew, dw = emnist_like.make_federated_data(dcfg)
     rng = np.random.default_rng(SEED)
     cc = vclients.ClientConfig(count=K_CLIENTS, participation="bernoulli",
@@ -140,6 +159,7 @@ def run_cell(method: str, regime: str, prof: dict) -> dict:
         accs.append(round(float(mlp.accuracy(state.w, test)), 4))
     return {
         "method": method, "regime": regime,
+        "assign": assign, "alpha_client": alpha_client,
         "loss": losses, "final_loss": losses[-1],
         "acc": accs, "final_acc": accs[-1],
         "drift_norm": drifts,
@@ -157,16 +177,27 @@ def main() -> None:
 
     prof = _profile(args.fast)
     cells = []
-    print("method,regime,final_loss,final_acc,drift_norm_last")
+    print("method,regime,assign,final_loss,final_acc,drift_norm_last")
     for regime in REGIMES:
         for method in METHODS:
             cell = run_cell(method, regime, prof)
             cells.append(cell)
-            print(f"{method},{regime},{cell['final_loss']},"
+            print(f"{method},{regime},fixed,{cell['final_loss']},"
                   f"{cell['final_acc']},{cell['drift_norm'][-1]}")
 
-    by = {(c["method"], c["regime"]): c for c in cells}
-    sign = [m for m in METHODS if m != "hier_sgd"]
+    # the 2x2 assignment story: severe intra+inter skew, full quorum
+    for assign in ASSIGNS:
+        for method in ASSIGN_METHODS:
+            cell = run_cell(method, "full", prof, assign=assign,
+                            alpha_client=ALPHA_CLIENT)
+            cells.append(cell)
+            print(f"{method},full,{assign},{cell['final_loss']},"
+                  f"{cell['final_acc']},{cell['drift_norm'][-1]}")
+
+    by = {(c["method"], c["regime"]): c for c in cells
+          if c["assign"] == "fixed"}
+    by_assign = {(c["method"], c["assign"]): c for c in cells
+                 if c["assign"] != "fixed"}
     checks = {
         # every correction should end at or below plain sign-voting's
         # loss under the severe non-IID full-quorum regime (recorded,
@@ -180,6 +211,15 @@ def main() -> None:
                             for m in METHODS},
         "final_loss_sampled": {m: by[(m, "sampled")]["final_loss"]
                                for m in METHODS},
+        # placement story: first drift reading per assignment mode --
+        # random scatter should START with less inter-edge drift than
+        # clustered placement of the same skewed clients
+        "drift0_by_assign": {
+            a: {m: by_assign[(m, a)]["drift_norm"][0]
+                for m in ASSIGN_METHODS} for a in ASSIGNS},
+        "final_loss_by_assign": {
+            a: {m: by_assign[(m, a)]["final_loss"]
+                for m in ASSIGN_METHODS} for a in ASSIGNS},
     }
     report = {
         "schema": SCHEMA,
@@ -189,15 +229,19 @@ def main() -> None:
             "profile": ("fast" if args.fast else "default"),
             **prof,
             "clients_per_device": K_CLIENTS,
-            "alpha": 0.1, "rho": 0.2, "mu": 5e-3, "mu_sgd": 0.5,
+            "alpha": 0.1, "alpha_client": ALPHA_CLIENT,
+            "rho": 0.2, "mu": 5e-3, "mu_sgd": 0.5,
             "seed": SEED,
             "note": "ref_fed oracle on the synthetic EMNIST-like task, "
                     "Dirichlet(0.1) inter-edge skew; drift_norm is "
                     "sqrt(sum_q ew_q ||c - c_q||^2) from share-weighted "
-                    "anchor grads at w^(t) before each round.",
+                    "anchor grads at w^(t) before each round.  assign "
+                    "cells add Dirichlet(alpha_client) intra-edge skew "
+                    "and regroup clients by data.cluster signatures.",
         },
         "methods": list(METHODS),
         "regimes": list(REGIMES),
+        "assignments": list(ASSIGNS),
         "cells": cells,
         "checks": checks,
     }

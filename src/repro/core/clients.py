@@ -11,6 +11,11 @@ mesh has a fixed number of physical ``data`` slices.  This module maps
     physical slice ``d`` is voter ``d*K + c``; the merged axis shards
     over ``data`` exactly like the physical one (each slice holds its
     own K clients), so carving is a local reshape -- no communication.
+    The data layer can make the K shards genuinely distinct
+    distributions (``alpha_client`` intra-edge skew in
+    ``data.synthetic`` / ``data.emnist_like``), and a server-side edge
+    assignment (``data.cluster``) regroups clients across the fleet by
+    permuting exactly these row blocks (:func:`regroup_clients`).
   * **participation sampling** -- per-round client masks (Bernoulli or
     fixed-size), drawn from a scheme pinned to ``(seed, round)`` only.
   * **data-share weights** -- integer ``|D_qk|`` flow into the edge
@@ -205,6 +210,42 @@ def carve_batch(batch, count: int):
         return x.reshape((p, d * count, b // count) + x.shape[3:])
 
     return jax.tree.map(carve, batch)
+
+
+def regroup_clients(batch, assignment, count: int):
+    """Apply a server-side edge assignment (``data.cluster``) to
+    [P, D, b, ...] device batches by permuting per-client row blocks
+    across the fleet.
+
+    ``assignment[s]`` is the ORIGINAL flat client index -- voter order,
+    client c of slice d of pod q is ``(q*D + d)*K + c`` -- that occupies
+    flat slot ``s`` after regrouping (the output of
+    ``data.cluster.assignment_order``).  The permutation moves exactly
+    the row blocks :func:`carve_batch` hands to each voter, so a
+    clustered/random regrouping composes with the carve with no other
+    change: voter ``s`` simply sees its newly-assigned client's rows.
+    ``assignment=None`` is the identity.  The oracle-side counterpart
+    regrouping nested per-client lists is
+    ``core.ref_fed.regroup_client_data`` (the two are pinned against
+    each other by the clustered parity cells)."""
+    if assignment is None:
+        return batch
+    idx = np.asarray(assignment, int)
+
+    def move(x):
+        p, d, b = x.shape[:3]
+        if b % count:
+            raise ValueError(
+                f"per-device batch {b} does not divide into "
+                f"{count} virtual clients")
+        if len(idx) != p * d * count:
+            raise ValueError(
+                f"assignment permutes {len(idx)} clients; batch has "
+                f"{p * d * count}")
+        flat = x.reshape((p * d * count, b // count) + x.shape[3:])
+        return flat[idx].reshape(x.shape)
+
+    return jax.tree.map(move, batch)
 
 
 def validate_batch_carve(batch_per_device: int, count: int,

@@ -16,7 +16,14 @@ participation masks, integer |D_qk| vote weights (weighted popcount with
 empty-quorum abstention), and participating-share reweighting of the
 anchor/mean aggregations -- a "device" here is any client under an edge,
 so K virtual clients per slice are simply K more entries per edge
-(property-tested in tests/test_ref_fed_participation.py).
+(property-tested in tests/test_ref_fed_participation.py).  Per-client
+data assignment is first-class: ``regroup_client_data`` regroups the
+nested per-client inputs under a server-side (clustered/random) edge
+assignment from ``data.cluster``, mirroring the distributed step's
+``core.clients.regroup_clients`` row-block permutation -- every cell of
+the parity matrix stays pinned under the intra-edge heterogeneity axis
+because heterogeneity only changes WHAT data each client holds, never
+the update arithmetic.
 
 Everything operates on flat parameter pytrees; per-device gradients come
 from a user-supplied ``grad_fn(params, device_batch, rng) -> grads`` and the
@@ -105,6 +112,35 @@ def _tree_weighted_sum(weights: Sequence[float], trees: Sequence[PyTree]) -> PyT
     for wgt, t in zip(weights[1:], trees[1:]):
         acc = jax.tree.map(lambda a, x: a + wgt * x, acc, t)
     return acc
+
+
+def regroup_client_data(nested: Sequence[Sequence[Any]], assignment,
+                        n_edges: int) -> list[list[Any]]:
+    """Per-client data assignment: regroup nested per-client oracle
+    inputs (``nested[q][k]`` -- batch lists, anchor batches, vote
+    weights, aggregation shares, anything indexed client-first-by-edge)
+    under a server-side edge assignment.
+
+    ``assignment[s]`` is the ORIGINAL flat client index (edge-major,
+    client k of edge q is ``q*K + k``) that occupies flat slot ``s``
+    after regrouping -- the output of
+    ``data.cluster.assignment_order``, and the SAME permutation
+    ``core.clients.regroup_clients`` applies to the distributed step's
+    carved row blocks.  The clustered parity cells pin the two
+    implementations against each other: oracle inputs regrouped here
+    must produce the trajectory of the distributed step fed the
+    regrouped arrays."""
+    flat = [c for edge in nested for c in edge]
+    idx = [int(i) for i in assignment]
+    if sorted(idx) != list(range(len(flat))):
+        raise ValueError(
+            f"assignment must permute all {len(flat)} clients: {idx}")
+    if len(flat) % n_edges:
+        raise ValueError(
+            f"{len(flat)} clients do not fill {n_edges} equal edges")
+    cap = len(flat) // n_edges
+    return [[flat[idx[q * cap + j]] for j in range(cap)]
+            for q in range(n_edges)]
 
 
 def _participating_shares(weights: Sequence[float],

@@ -1,10 +1,23 @@
-"""Deterministic synthetic LM token pipeline with inter-edge heterogeneity.
+"""Deterministic synthetic LM token pipeline with two-level heterogeneity.
 
-The paper's setting is *inter-cluster* statistical heterogeneity (devices
-within an edge IID; edges skewed).  For LM training we emulate multi-region
-ingestion: each edge q draws tokens from its own Zipf-like unigram
-distribution (a per-edge permutation + temperature of a shared base
-distribution, mixing-parameter alpha -> uniform mixing = IID).
+The paper's setting is *inter-cluster* statistical heterogeneity (edges
+skewed).  For LM training we emulate multi-region ingestion: each edge q
+draws tokens from its own Zipf-like unigram distribution (a per-edge
+permutation + temperature of a shared base distribution, mixing-parameter
+alpha -> uniform mixing = IID).  On top of that, ``alpha_client`` adds
+*intra-edge* heterogeneity: each virtual client tilts its edge's unigram
+by a per-client Dirichlet(alpha_client) reweighting, so the K clients
+carved from one device batch (``core.clients.carve_batch``) stream from
+genuinely distinct distributions -- client c's rows of the [P, D, b, L]
+batch are drawn from ITS logits, matching the carve contract (rows
+[c*b/K, (c+1)*b/K) of slice d belong to voter d*K + c).
+``alpha_client=None`` (default) or ``inf`` keeps the legacy per-edge
+stream bitwise.
+
+``edge_assign`` regroups clients across edges before streaming:
+``random`` scatters them uniformly (seeded), ``clustered`` groups them
+by unigram-sketch similarity (``data.cluster`` -- deterministic,
+permutation-invariant, and only the aggregate sketch crosses tiers).
 
 Everything is cursor-addressable: ``batch_at(step)`` is a pure function of
 (seed, step), so restoring a checkpointed step counter exactly resumes the
@@ -17,6 +30,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.data import cluster
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,9 +49,14 @@ class LMStreamCfg:
                                  # contiguous per-client shards
                                  # (core.clients.carve_batch), so
                                  # batch_per_device must divide by K;
-                                 # within-edge clients stay IID (the
-                                 # paper's setting -- heterogeneity is
-                                 # inter-edge)
+                                 # with alpha_client=None the K clients
+                                 # share the edge distribution (the
+                                 # paper's inter-edge-only setting)
+    alpha_client: float | None = None  # intra-edge Dirichlet tilt of
+                                 # each client's unigram; None or inf =
+                                 # legacy per-edge stream, bitwise
+    edge_assign: str = "fixed"   # fixed | random | clustered (see
+                                 # data.cluster)
     frames: int = 0            # audio stub frontend
     frontend_dim: int = 0
     n_patches: int = 0         # vlm stub frontend
@@ -55,27 +75,98 @@ def _edge_logits(cfg: LMStreamCfg) -> np.ndarray:
     return logits
 
 
+def _client_skew_active(cfg: LMStreamCfg) -> bool:
+    return cfg.alpha_client is not None and np.isfinite(cfg.alpha_client)
+
+
+def _client_logits(cfg: LMStreamCfg) -> np.ndarray:
+    """[P, D, K, V] per-virtual-client unigram logits (numpy,
+    deterministic): the edge logits tilted by log(V * Dirichlet
+    (alpha_client)) per client -- a mean-zero perturbation in
+    distribution space that vanishes as alpha_client -> inf -- then
+    regrouped across edges per ``edge_assign``."""
+    p, d, k = cfg.pods, cfg.devices_per_pod, cfg.clients_per_device
+    out = np.broadcast_to(_edge_logits(cfg)[:, None, None, :],
+                          (p, d, k, cfg.vocab)).copy()
+    if _client_skew_active(cfg):
+        rng = np.random.default_rng((cfg.seed, 0xA1FA))
+        mix = rng.dirichlet(np.full(cfg.vocab, cfg.alpha_client),
+                            size=(p, d, k))
+        out += np.log(np.maximum(mix * cfg.vocab, 1e-20)).astype(
+            np.float32)
+    if cfg.edge_assign != "fixed":
+        flat = out.reshape(p * d * k, cfg.vocab)
+        if cfg.edge_assign == "random":
+            assign = cluster.random_assignment(p * d * k, p, cfg.seed)
+        else:
+            # unigram sketches: each client contributes ONE aggregate
+            # [V] distribution (softmax of its logits), never tokens
+            probs = np.exp(flat - flat.max(axis=1, keepdims=True))
+            sigs = cluster.sketch_signatures(
+                probs / probs.sum(axis=1, keepdims=True))
+            assign = cluster.cluster_edges(sigs, p)
+        out = flat[cluster.assignment_order(assign, p)].reshape(out.shape)
+    return out
+
+
+def validate_scenario(cfg: LMStreamCfg) -> None:
+    """Scenario-axis validation shared with the launch CLIs (they call
+    this up front so a bad flag combination rejects before tracing)."""
+    if cfg.edge_assign not in cluster.EDGE_ASSIGN_MODES:
+        raise ValueError(
+            f"unknown edge_assign {cfg.edge_assign!r}; expected one of "
+            f"{cluster.EDGE_ASSIGN_MODES}")
+    if cfg.alpha_client is not None and cfg.alpha_client <= 0:
+        raise ValueError(
+            f"alpha_client must be positive (or None): {cfg.alpha_client}")
+    if cfg.edge_assign == "clustered":
+        if cfg.clients_per_device == 1:
+            raise ValueError(
+                "clustered edge assignment regroups VIRTUAL clients, so "
+                "the client carve must be active: clients_per_device > 1 "
+                "(--clients_per_device)")
+        if not _client_skew_active(cfg):
+            raise ValueError(
+                "clustered edge assignment needs --alpha_client: without "
+                "intra-edge skew the edge's clients are identical and "
+                "there is nothing to cluster")
+
+
 def make_stream(cfg: LMStreamCfg):
     """Returns batch_at(step) -> batch pytree of [P, D, b, ...].
 
     The stream always emits physical-slice batches; virtual-client
-    carving is the train step's local reshape.  Validates the carve
-    contract up front so a bad K fails at stream construction, not
-    steps into a jitted reshape error."""
+    carving is the train step's local reshape (with alpha_client
+    active, client c's rows are sampled from its own tilted unigram, so
+    the carve recovers per-client distributions).  Validates the carve
+    contract and the scenario axes up front so a bad K / edge_assign
+    fails at stream construction, not steps into a jitted error."""
     if cfg.batch_per_device % cfg.clients_per_device:
         raise ValueError(
             f"batch_per_device={cfg.batch_per_device} does not divide "
             f"into {cfg.clients_per_device} virtual clients per device")
-    logits = jnp.asarray(_edge_logits(cfg))
+    validate_scenario(cfg)
+    per_client = _client_skew_active(cfg) or cfg.edge_assign != "fixed"
+    logits = jnp.asarray(_client_logits(cfg) if per_client
+                         else _edge_logits(cfg))
+    k_c = cfg.clients_per_device
+    rows = cfg.batch_per_device // k_c
 
     def batch_at(step: int):
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
         shape = (cfg.pods, cfg.devices_per_pod, cfg.batch_per_device,
                  cfg.seq_len)
         keys = jax.random.split(key, cfg.pods)
-        toks = jnp.stack([
-            jax.random.categorical(keys[q], logits[q], shape=shape[1:])
-            for q in range(cfg.pods)])
+        if per_client:
+            toks = jnp.stack([
+                jax.random.categorical(
+                    keys[q], logits[q][:, :, None, None, :],
+                    shape=(cfg.devices_per_pod, k_c, rows, cfg.seq_len))
+                for q in range(cfg.pods)]).reshape(shape)
+        else:
+            toks = jnp.stack([
+                jax.random.categorical(keys[q], logits[q], shape=shape[1:])
+                for q in range(cfg.pods)])
         batch = {"tokens": toks.astype(jnp.int32)}
         if cfg.frames:
             kf = jax.random.fold_in(key, 1)

@@ -234,6 +234,16 @@ def main():
                     help="full | bernoulli | fixed (per-round sampled "
                          "quorum at --participation_rate)")
     ap.add_argument("--participation_rate", type=float, default=1.0)
+    ap.add_argument("--alpha_client", type=float, default=None,
+                    help="intra-edge Dirichlet concentration for the "
+                         "synthetic stream scenario (None/inf = legacy "
+                         "within-edge IID); validated up front only -- "
+                         "lowering is data-independent")
+    ap.add_argument("--edge_assign", default="fixed",
+                    help="fixed | random | clustered client->edge "
+                         "placement; clustered is rejected up front "
+                         "unless the clients carve is active "
+                         "(--clients_per_device>1 with --alpha_client)")
     ap.add_argument("--t_e", type=int, default=15)
     ap.add_argument("--cloud_overlap", default="sync",
                     help="sync | overlap (lagged cloud commit: the "
@@ -257,6 +267,20 @@ def main():
         ap.error(f"--cloud_overlap must be one of "
                  f"{'/'.join(schedule.CLOUD_OVERLAP_MODES)}, got "
                  f"{args.cloud_overlap!r}")
+
+    # scenario-axis validation up front: clustered assignment without an
+    # active clients carve (or with a bad alpha_client) is a flag error,
+    # not a deep stream-construction traceback
+    from repro.data import synthetic
+    try:
+        synthetic.validate_scenario(synthetic.LMStreamCfg(
+            vocab=2, seq_len=8,
+            batch_per_device=max(args.clients_per_device, 1),
+            pods=1, devices_per_pod=1,
+            clients_per_device=args.clients_per_device,
+            alpha_client=args.alpha_client, edge_assign=args.edge_assign))
+    except ValueError as e:
+        ap.error(str(e))
 
     archs = configs.ARCH_NAMES if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

@@ -42,6 +42,8 @@ class RunCfg:
     ckpt_every: int = 20
     log_every: int = 5
     hetero: float = 1.0
+    alpha_client: float | None = None
+    edge_assign: str = "fixed"
     seed: int = 0
 
 
@@ -64,6 +66,7 @@ def run_training(cfg, topo: Topology, algo: hier.AlgoConfig, run: RunCfg,
         batch_per_device=run.batch_per_device, pods=topo.pods,
         devices_per_pod=topo.devices_per_pod, seed=run.seed,
         hetero=run.hetero, clients_per_device=algo.clients.count,
+        alpha_client=run.alpha_client, edge_assign=run.edge_assign,
         frames=cfg.encoder_frames if cfg.family in ("encdec", "audio")
         else 0,
         frontend_dim=cfg.frontend_dim, n_patches=cfg.n_patches,
@@ -178,6 +181,18 @@ def main():
                     help="merged: widen the voter axis to D*K; stream: "
                          "loop clients inside the step in O(model/32 + "
                          "tally) memory (bitwise identical)")
+    ap.add_argument("--alpha_client", type=float, default=None,
+                    help="intra-edge Dirichlet concentration: each "
+                         "virtual client samples from its own tilted "
+                         "unigram (None/inf = the exact legacy "
+                         "within-edge IID stream)")
+    ap.add_argument("--edge_assign", default="fixed",
+                    choices=list(synthetic.cluster.EDGE_ASSIGN_MODES),
+                    help="client->edge placement: fixed = topology "
+                         "order; random = seeded balanced scatter; "
+                         "clustered = deterministic signature "
+                         "clustering (requires --clients_per_device>1 "
+                         "and --alpha_client)")
     ap.add_argument("--participation", default="full",
                     choices=list(vclients.PARTICIPATION_MODES),
                     help="per-round client sampling (pinned to "
@@ -197,11 +212,17 @@ def main():
                     help="use the production 2x16x16 mesh")
     args = ap.parse_args()
 
-    # surface the carve constraint as a clean CLI error instead of a
-    # jit-time traceback out of clients.carve_batch / client_slice
+    # surface the carve constraint and the scenario axes as clean CLI
+    # errors instead of jit-time tracebacks (clustered assignment is
+    # rejected here when the clients carve is inactive)
     try:
         vclients.validate_batch_carve(args.batch, args.clients_per_device,
                                       flag="clients_per_device")
+        synthetic.validate_scenario(synthetic.LMStreamCfg(
+            vocab=2, seq_len=args.seq, batch_per_device=args.batch,
+            pods=1, devices_per_pod=1,
+            clients_per_device=args.clients_per_device,
+            alpha_client=args.alpha_client, edge_assign=args.edge_assign))
     except ValueError as e:
         ap.error(str(e))
 
@@ -233,7 +254,9 @@ def main():
                            compute_dtype=jnp.float32 if args.smoke
                            else jnp.bfloat16)
     run = RunCfg(steps=args.steps, batch_per_device=args.batch,
-                 seq_len=args.seq, ckpt_dir=args.ckpt)
+                 seq_len=args.seq, ckpt_dir=args.ckpt,
+                 alpha_client=args.alpha_client,
+                 edge_assign=args.edge_assign)
     injector = None
     if args.chaos is not None:
         injector = chaos_mod.FaultInjector.seeded(

@@ -35,6 +35,7 @@ from repro.checkpoint import store
 from repro.core import clients as vclients
 from repro.core import hier, ref_fed
 from repro.core.topology import Topology
+from repro.data import cluster
 from repro.runtime import chaos, elastic
 
 DIN, HID, DOUT = 16, 64, 33
@@ -54,8 +55,17 @@ FSDP_MASTER_SPECS = {"w": P("data", "model"), "b": P(None),
 
 
 def make_problem(pods: int, devs: int, rounds: int = 3, t_e: int = 3,
-                 batch: int = 8, seed: int = 0, hid: int = HID):
-    """Deterministic batches [S, P, D, B, .] with per-pod targets."""
+                 batch: int = 8, seed: int = 0, hid: int = HID,
+                 clients: int = 1, alpha_client: float | None = None):
+    """Deterministic batches [S, P, D, B, .] with per-pod targets.
+
+    ``alpha_client`` adds INTRA-edge heterogeneity on top: each of the
+    ``clients`` virtual clients per slice regresses on its own target --
+    a Dirichlet(alpha_client) mixture of the pod prototype targets,
+    centered on the client's own pod -- and its rows of the slice batch
+    (``[c*b/K, (c+1)*b/K)``, the carve contract) are generated from that
+    target.  ``alpha_client=None`` (default) is the exact legacy
+    per-pod-target problem."""
     key = jax.random.PRNGKey(seed)
     w0 = {"w": jax.random.normal(key, (DIN, hid)) * 0.3,
           "b": jnp.zeros((DOUT,)),
@@ -66,9 +76,23 @@ def make_problem(pods: int, devs: int, rounds: int = 3, t_e: int = 3,
                            (steps, pods, devs, batch, DIN))
     w_true = jax.random.normal(jax.random.PRNGKey(seed + 9),
                                (pods, DIN, DOUT))
-    ys = jnp.einsum("spdbi,pio->spdbo", xs, w_true)
+    if alpha_client is None:
+        ys = jnp.einsum("spdbi,pio->spdbo", xs, w_true)
+    else:
+        assert batch % clients == 0, (batch, clients)
+        protos = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(seed + 21), (4, DIN, DOUT)))
+        mix = np.random.default_rng((seed, 31)).dirichlet(
+            np.full(len(protos), alpha_client), size=(pods, devs, clients))
+        w_cl = (0.5 * np.asarray(w_true)[:, None, None]
+                + 0.5 * np.einsum("pdkm,mio->pdkio", mix, protos))
+        rows = batch // clients
+        xs_c = xs.reshape(steps, pods, devs, clients, rows, DIN)
+        ys = jnp.einsum("spdkbi,pdkio->spdkbo", xs_c,
+                        jnp.asarray(w_cl, xs.dtype)
+                        ).reshape(steps, pods, devs, batch, DOUT)
     return {"w0": w0, "xs": xs, "ys": ys, "pods": pods, "devs": devs,
-            "rounds": rounds, "t_e": t_e}
+            "rounds": rounds, "t_e": t_e, "clients": clients}
 
 
 def _algo(method, transport, state_layout, **kw):
@@ -142,7 +166,7 @@ def aggregate(params, edge_weights):
 
 
 def run_oracle(problem, method, mask=None, clients=None, cloud_period=2,
-               cloud_overlap="sync"):
+               cloud_overlap="sync", assignment=None):
     """ref_fed transcription of Algorithms 1/2 on the same trajectory.
 
     With an active ``clients`` ClientConfig the oracle hosts the same
@@ -151,6 +175,12 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2,
     contiguous shard of the slice batch, the per-round participation
     mask comes from the SAME pinned (seed, round) scheme, |D_qk| weight
     the vote, and anchor/mean shares reweight to the participants.
+
+    ``assignment`` (a ``data.cluster.assignment_order`` permutation)
+    regroups the per-client batch/anchor lists through
+    ``ref_fed.regroup_client_data`` -- the oracle-side half of the
+    clustered-edge-assignment parity cells, compared against the
+    distributed step fed ``regroup_problem``'s permuted arrays.
 
     Under ``cloud_overlap="overlap"`` the returned tree is the oracle's
     ``w_inflight`` -- the aggregate issued at the CLOSING boundary from
@@ -186,6 +216,11 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2,
         anchors = [[{"x": shard(xs, t * t_e, q, dv),
                      "y": shard(ys, t * t_e, q, dv)}
                     for dv in range(devs * k_c)] for q in range(pods)]
+        if assignment is not None:
+            batches = ref_fed.regroup_client_data(batches, assignment,
+                                                  pods)
+            anchors = ref_fed.regroup_client_data(anchors, assignment,
+                                                  pods)
         mask_t = None if mask is None else np.asarray(mask, bool)
         if cc.active:
             part = np.asarray(vclients.participation_mask(
@@ -204,6 +239,41 @@ def run_oracle(problem, method, mask=None, clients=None, cloud_period=2,
             reweight_participation=cc.active)
     out = state.w_inflight if cfg.cloud_schedule().staged else state.w
     return jax.tree.map(np.asarray, out)
+
+
+# -- cluster-aware edge assignment: the two regrouping implementations
+#    (distributed row-block permutation vs oracle nested-list
+#    permutation) are pinned against each other by the clustered cells
+
+
+def clustered_assignment(problem, clients: int) -> np.ndarray:
+    """Mean-label-embedding sketches per virtual client (the [DOUT]
+    average of the client's target rows -- an aggregate; no raw rows
+    cross) -> the deterministic balanced clustering of ``data.cluster``
+    -> the flat slot-order permutation regrouping the fleet's P*D*K
+    clients into P pods by data similarity."""
+    ys = np.asarray(problem["ys"])            # [S, P, D, b, DOUT]
+    s, p, d, b, o = ys.shape
+    rows = b // clients
+    percl = ys.reshape(s, p * d * clients, rows, o).mean(axis=(0, 2))
+    assign = cluster.cluster_edges(cluster.sketch_signatures(percl), p)
+    return cluster.assignment_order(assign, p)
+
+
+def regroup_problem(problem, order) -> dict:
+    """The distributed-side regrouping: permute the per-client row
+    blocks of every step's batch arrays via
+    ``core.clients.regroup_clients`` (exactly the blocks the carve
+    hands each voter).  ``run_oracle(assignment=order)`` is the
+    oracle-side counterpart on the ORIGINAL problem."""
+    k = problem["clients"]
+    xs, ys = problem["xs"], problem["ys"]
+    moved = [vclients.regroup_clients({"x": xs[s], "y": ys[s]}, order, k)
+             for s in range(xs.shape[0])]
+    out = dict(problem)
+    out["xs"] = jnp.stack([m["x"] for m in moved])
+    out["ys"] = jnp.stack([m["y"] for m in moved])
+    return out
 
 
 # -- chaos cells: membership churn schedules through the SAME runners --

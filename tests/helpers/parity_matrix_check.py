@@ -203,6 +203,44 @@ for method in ("hier_signsgd", "scaffold_hier_signsgd",
                          atol=1e-5)
 print("dc_hier_signsgd  overlap churn-in-flight cell OK (pod kill)")
 
+# ---- clustered edge assignment under intra-edge skew ------------------
+# K=2 virtual clients per slice with per-client Dirichlet(0.25) target
+# mixtures (make_problem(alpha_client=...)); mean-embedding sketches +
+# the deterministic balanced clustering (data.cluster) regroup the
+# fleet's 8 virtual clients into the 2 pods by data similarity.  The
+# distributed step runs the regrouped ROW BLOCKS (clients.regroup_
+# clients on the carve coordinates, incl. the model-SHARDED fused flat
+# cell and the streamed sweep) and must stay bitwise across cells and
+# EXACT vs the grown oracle fed the SAME permutation through
+# ref_fed.regroup_client_data -- the two regrouping implementations pin
+# each other
+skewp = H.make_problem(Pn, Dn, clients=2, alpha_client=0.25)
+order = H.clustered_assignment(skewp, 2)
+assert not np.array_equal(order, np.arange(len(order))), \
+    "clustering is a no-op permutation; nothing is exercised"
+movedp = H.regroup_problem(skewp, order)
+cck = H.client_cfg(Pn, Dn, 2, "full")
+ref_a, ew = None, None
+for transport, layout, mode in (("ag_packed", "tree", "merged"),
+                                ("fused", "flat", "merged"),
+                                ("fused", "flat", "stream")):
+    ccm = cck if mode == "merged" else dataclasses.replace(cck,
+                                                           mode="stream")
+    got, ew = H.run_hier(topo, movedp, "dc_hier_signsgd", transport,
+                         layout, clients=ccm)
+    ref_a = got if ref_a is None else ref_a
+    H.assert_trees_equal(ref_a, got,
+                         f"clustered/{transport}/{layout}/{mode}")
+oracle = H.run_oracle(skewp, "dc_hier_signsgd", clients=cck,
+                      assignment=order)
+H.assert_trees_equal(H.aggregate(ref_a, ew), oracle, "clustered-oracle",
+                     exact=True)
+H.assert_trees_equal(oracle,
+                     H.run_oracle(movedp, "dc_hier_signsgd", clients=cck),
+                     "clustered-slice-vs-permute", exact=True)
+print("dc_hier_signsgd  clustered edge-assignment cell OK (intra-edge "
+      "skew)")
+
 # ---- uneven TP leaves (odd hid): padded-shard flat layout -------------
 # both weight matrices model-shard unevenly (65 % 2 != 0) -- the flat
 # cells run the padded-block layout (LeafSlot.shard_pad) and must stay

@@ -1,0 +1,307 @@
+"""Property suite for the intra-edge heterogeneity axis and the
+cluster-aware edge assignment (``data.cluster``).
+
+Pins the contracts the scenario layer promises:
+
+  * ``alpha_client=None`` / ``inf`` is BITWISE the legacy split (data
+    modules gate the new code path entirely);
+  * per-client sample counts conserve the edge totals |D_q| and the
+    fleet total N (the intra-edge split moves samples between an edge's
+    devices, never across edges);
+  * the largest-remainder apportionment replaces the floor split that
+    dumped all rounding residue on the last bucket;
+  * clustering is deterministic across global seed state and process
+    restarts, invariant to client permutation, and balanced;
+  * signatures never leak raw samples -- only label histograms /
+    aggregated sketches cross the device->server tier boundary.
+"""
+import dataclasses
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import cluster, emnist_like, synthetic
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def _cfg(seed, **kw):
+    return emnist_like.FedDataCfg(n_train=420, n_test=60, q_edges=3,
+                                  devices_per_edge=4, seed=seed, **kw)
+
+
+def _flat(device_data):
+    return [d for edge in device_data for d in edge]
+
+
+# ---------------------------------------------------------------------------
+# alpha_client=None / inf == legacy, bitwise
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_alpha_client_none_and_inf_bitwise_legacy(seed):
+    """Dirichlet(inf) is conceptually the IID split, so None and inf
+    must take the exact legacy code path -- every device's (x, y) is
+    bitwise identical, as are the weights."""
+    a, ta, ewa, dwa = emnist_like.make_federated_data(_cfg(seed))
+    b, tb, ewb, dwb = emnist_like.make_federated_data(
+        _cfg(seed, alpha_client=float("inf")))
+    for da, db in zip(_flat(a), _flat(b)):
+        np.testing.assert_array_equal(da["x"], db["x"])
+        np.testing.assert_array_equal(da["y"], db["y"])
+    assert ewa == ewb and dwa == dwb
+    np.testing.assert_array_equal(ta["x"], tb["x"])
+
+
+def test_stream_alpha_client_inf_bitwise_legacy():
+    """Same gate on the LM stream: None and inf emit bitwise-identical
+    token batches (the per-client sampling path never engages)."""
+    base = synthetic.LMStreamCfg(vocab=40, seq_len=6, batch_per_device=8,
+                                 pods=2, devices_per_pod=2,
+                                 clients_per_device=2)
+    inf = dataclasses.replace(base, alpha_client=float("inf"))
+    s0, s1 = synthetic.make_stream(base), synthetic.make_stream(inf)
+    for step in (0, 3, 17):
+        np.testing.assert_array_equal(np.asarray(s0(step)["tokens"]),
+                                      np.asarray(s1(step)["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# sample-count conservation under the intra-edge split
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.05, 0.3, 1.0, 8.0]))
+def test_per_client_counts_sum_to_edge_totals(seed, alpha_client):
+    """The intra-edge Dirichlet split redistributes each edge's samples
+    across ITS devices: per-edge totals |D_q| equal the legacy split's
+    (the edge assignment upstream is untouched) and the fleet total is
+    exactly N -- no sample is dropped or duplicated."""
+    legacy, *_ = emnist_like.make_federated_data(_cfg(seed))
+    skewed, *_ = emnist_like.make_federated_data(
+        _cfg(seed, alpha_client=alpha_client))
+    legacy_tot = [sum(len(d["y"]) for d in e) for e in legacy]
+    skew_tot = [sum(len(d["y"]) for d in e) for e in skewed]
+    assert skew_tot == legacy_tot
+    assert sum(skew_tot) == 420
+    for e in skewed:
+        for d in e:
+            assert len(d["y"]) == len(d["x"])
+
+
+def test_alpha_client_actually_skews():
+    """Guard: a small alpha_client produces devices whose label
+    histograms differ within one edge (the axis is live)."""
+    dd, *_ = emnist_like.make_federated_data(_cfg(0, alpha_client=0.05))
+    sigs = cluster.label_histogram_signatures(dd, 10)
+    per_edge = sigs.reshape(3, 4, 10)
+    spread = np.mean(np.sum(
+        (per_edge - per_edge.mean(axis=1, keepdims=True)) ** 2, axis=-1))
+    assert spread > 0.05, spread
+
+
+# ---------------------------------------------------------------------------
+# largest-remainder apportionment (the floor-split fix)
+# ---------------------------------------------------------------------------
+
+
+def test_largest_remainder_regression_uniform():
+    """Regression for the floor split: uniform 1/7 of 10 items used to
+    give the last bucket 4 (floor residue) -- largest remainder spreads
+    the residue, max-min <= 1."""
+    c = cluster.largest_remainder(np.full(7, 1 / 7), 10)
+    assert c.sum() == 10
+    assert c.max() - c.min() <= 1, c
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 9), st.integers(0, 200))
+def test_largest_remainder_properties(seed, buckets, n):
+    """Counts are nonnegative ints summing exactly to n, and each count
+    is within one of its real-valued quota (the defining property of
+    largest-remainder apportionment)."""
+    p = np.random.default_rng(seed).dirichlet(np.full(buckets, 0.2))
+    c = cluster.largest_remainder(p, n)
+    quota = p / p.sum() * n
+    assert c.sum() == n and (c >= 0).all()
+    assert np.all(c >= np.floor(quota) - 1e-9), (c, quota)
+    assert np.all(c <= np.ceil(quota) + 1e-9), (c, quota)
+
+
+# ---------------------------------------------------------------------------
+# clustering: deterministic, restart-stable, permutation-invariant
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4]))
+def test_clustering_deterministic_and_permutation_invariant(seed, n_edges):
+    """Same signature multiset -> same balanced assignment, including
+    the edge LABELS, no matter how the clients are ordered."""
+    rng = np.random.default_rng(seed)
+    n = n_edges * int(rng.integers(2, 5))
+    sigs = rng.dirichlet(np.full(6, 0.3), size=n)
+    a1 = cluster.cluster_edges(sigs, n_edges)
+    np.testing.assert_array_equal(a1, cluster.cluster_edges(sigs.copy(),
+                                                            n_edges))
+    perm = rng.permutation(n)
+    np.testing.assert_array_equal(a1[perm],
+                                  cluster.cluster_edges(sigs[perm],
+                                                        n_edges))
+    counts = [int((a1 == q).sum()) for q in range(n_edges)]
+    assert counts == [n // n_edges] * n_edges, counts
+
+
+def test_clustering_ignores_global_seed_state():
+    """The clustering consumes NO randomness at all (the determinism
+    contract mirrors the splitmix32 participation scheme): global numpy
+    seed state cannot change the assignment."""
+    sigs = np.random.default_rng(7).dirichlet(np.full(4, 0.5), size=8)
+    np.random.seed(0)
+    a = cluster.cluster_edges(sigs, 2)
+    np.random.seed(12345)
+    np.testing.assert_array_equal(a, cluster.cluster_edges(sigs, 2))
+
+
+def test_clustering_deterministic_across_process_restarts(tmp_path):
+    """A fresh interpreter re-clustering the same signatures lands on
+    the identical assignment (no hash-seed / import-order sensitivity)."""
+    code = (
+        "import numpy as np\n"
+        "from repro.data import cluster\n"
+        "sigs = np.random.default_rng(1234).dirichlet("
+        "np.full(5, 0.25), size=12)\n"
+        "print(','.join(map(str, cluster.cluster_edges(sigs, 3))))\n")
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
+           "HOME": str(tmp_path), "PYTHONHASHSEED": "random"}
+    outs = set()
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=120)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.add(r.stdout.strip())
+    sigs = np.random.default_rng(1234).dirichlet(np.full(5, 0.25), size=12)
+    here = ",".join(map(str, cluster.cluster_edges(sigs, 3)))
+    assert outs == {here}, (outs, here)
+
+
+# ---------------------------------------------------------------------------
+# signatures never leak raw samples
+# ---------------------------------------------------------------------------
+
+
+class _Poison:
+    """Stands in for raw feature rows: raises on ANY read."""
+
+    def _trip(self, *a, **k):
+        raise AssertionError("raw samples crossed the tier boundary")
+
+    __array__ = __iter__ = __getitem__ = __len__ = _trip
+
+
+def test_signatures_never_touch_raw_samples():
+    """The clustered assignment must work end-to-end with the feature
+    rows replaced by poison objects: only label HISTOGRAMS feed the
+    clustering, and LM-side sketches take already-aggregated vectors."""
+    rng = np.random.default_rng(3)
+    device_data = [[{"x": _Poison(), "y": rng.integers(0, 5, size=20)}
+                    for _ in range(3)] for _ in range(2)]
+    sigs = cluster.label_histogram_signatures(device_data, 5)
+    assert sigs.shape == (6, 5)
+    np.testing.assert_allclose(sigs.sum(axis=1), 1.0)
+    assert len(cluster.cluster_edges(sigs, 2)) == 6
+    sk = cluster.sketch_signatures(rng.normal(size=(6, 7)))
+    assert sk.shape == (6, 7)
+    np.testing.assert_allclose(np.linalg.norm(sk, axis=1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# edge assignment modes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from(["random", "clustered"]))
+def test_edge_assignment_permutes_clients(seed, mode):
+    """random/clustered regrouping is a pure client permutation: the
+    multiset of device datasets is unchanged, each edge keeps exactly
+    devices_per_edge slots, and the weights renormalize per new edge."""
+    base, *_ = emnist_like.make_federated_data(_cfg(seed,
+                                                    alpha_client=0.2))
+    moved, _, ew, dw = emnist_like.make_federated_data(
+        _cfg(seed, alpha_client=0.2, edge_assign=mode))
+    key = lambda d: (d["y"].tobytes(), d["x"].tobytes())
+    assert sorted(map(key, _flat(base))) == sorted(map(key, _flat(moved)))
+    assert all(len(e) == 4 for e in moved)
+    assert abs(sum(ew) - 1.0) < 1e-9
+    for q in range(3):
+        if sum(len(d["y"]) for d in moved[q]):
+            assert abs(sum(dw[q]) - 1.0) < 1e-9
+
+
+def test_clustered_edges_more_homogeneous_than_random():
+    """The point of the clustered mode: regrouping by label-histogram
+    similarity leaves each edge internally MORE homogeneous (smaller
+    within-edge signature spread) than a random scatter of the same
+    clients."""
+
+    def spread(mode):
+        dd, *_ = emnist_like.make_federated_data(
+            _cfg(0, alpha_client=0.1, edge_assign=mode))
+        sigs = cluster.label_histogram_signatures(dd, 10).reshape(3, 4, 10)
+        return float(np.mean(np.sum(
+            (sigs - sigs.mean(axis=1, keepdims=True)) ** 2, axis=-1)))
+
+    assert spread("clustered") < spread("random"), (
+        spread("clustered"), spread("random"))
+
+
+def test_stream_clients_distinct_distributions():
+    """With alpha_client active, the carve's row blocks stream from
+    genuinely distinct unigram distributions (large total-variation
+    distance between the two clients of one slice)."""
+    cfg = synthetic.LMStreamCfg(vocab=30, seq_len=64, batch_per_device=32,
+                                pods=1, devices_per_pod=1,
+                                clients_per_device=2, alpha_client=0.1)
+    toks = np.asarray(synthetic.make_stream(cfg)(0)["tokens"])[0, 0]
+    h0 = np.bincount(toks[:16].ravel(), minlength=30).astype(float)
+    h1 = np.bincount(toks[16:].ravel(), minlength=30).astype(float)
+    tv = 0.5 * np.abs(h0 / h0.sum() - h1 / h1.sum()).sum()
+    assert tv > 0.2, tv
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_validation_rejects_bad_axes():
+    with pytest.raises(ValueError, match="edge_assign"):
+        emnist_like.make_federated_data(_cfg(0, edge_assign="bogus"))
+    with pytest.raises(ValueError, match="alpha_client"):
+        emnist_like.make_federated_data(_cfg(0, alpha_client=-1.0))
+    base = dict(vocab=16, seq_len=4, batch_per_device=8, pods=2,
+                devices_per_pod=2)
+    with pytest.raises(ValueError, match="edge_assign"):
+        synthetic.make_stream(synthetic.LMStreamCfg(**base,
+                                                    edge_assign="bogus"))
+    # clustered needs the client carve active AND intra-edge skew
+    with pytest.raises(ValueError, match="clients_per_device"):
+        synthetic.make_stream(synthetic.LMStreamCfg(
+            **base, edge_assign="clustered"))
+    with pytest.raises(ValueError, match="alpha_client"):
+        synthetic.make_stream(synthetic.LMStreamCfg(
+            **base, clients_per_device=2, edge_assign="clustered"))
+    with pytest.raises(ValueError, match="equal edges"):
+        cluster.cluster_edges(np.eye(4), 3)
+    with pytest.raises(ValueError, match="balanced"):
+        cluster.assignment_order(np.array([0, 0, 0, 1]), 2)

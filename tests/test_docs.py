@@ -180,6 +180,41 @@ def test_correction_slot_documented():
     assert "downlink_bits" in arch
 
 
+def test_heterogeneity_clustering_documented():
+    """The heterogeneity/clustering contract is pinned: the architecture
+    doc carries the Heterogeneity & clustering section (two-level
+    Dirichlet, bitwise None/inf gate, largest-remainder apportionment,
+    signature privacy, no-RNG deterministic clustering, regrouping as a
+    pure permutation), the README scenario table lists every
+    edge-assign mode the config accepts, and both docs name the CLI
+    flags and the grown test tier."""
+    from repro.data.cluster import EDGE_ASSIGN_MODES
+    readme = (ROOT / "README.md").read_text()
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "Heterogeneity & clustering" in arch
+    for mode in EDGE_ASSIGN_MODES:
+        assert f"`{mode}`" in readme, f"README edge_assign table: {mode}"
+    for text, name in ((readme, "README"), (arch, "architecture.md")):
+        assert "--alpha_client" in text, name
+        assert "--edge_assign" in text, name
+        assert "bitwise" in text, name              # the None/inf gate
+    assert "largest-remainder" in arch
+    assert "largest_remainder" in arch              # the helper by name
+    assert "label histogram" in arch                # signature kinds
+    assert "sketch" in arch
+    assert "never leave the client" in arch         # privacy contract
+    assert "no RNG" in arch                         # determinism contract
+    assert "lexicographic" in arch
+    assert "regroup_clients" in arch                # live regroup
+    assert "regroup_client_data" in arch            # oracle counterpart
+    assert "validate_scenario" in arch              # CLI rejection hook
+    assert "test_data_hetero.py" in arch and "test_data_hetero.py" in \
+        readme
+    assert "bias_study_v2" in arch                  # the 2x2 artifact
+    # the clustered mode's precondition is stated wherever the flag is
+    assert "--clients_per_device" in readme
+
+
 def test_elastic_chaos_documented():
     """The elastic-runtime/chaos contract is pinned: both docs carry
     the chaos-schedule section (event kinds as data, zero-recompilation

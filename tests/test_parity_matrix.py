@@ -766,6 +766,77 @@ def test_overlap_kill_restore_replay(topo, problem, chaos, method,
     H.assert_trees_equal(ref, got, f"overlap-replay/{method}")
 
 
+# ---------------------------------------------------------------------------
+# Intra-edge heterogeneity axis: per-client data distributions INSIDE an
+# edge (make_problem(alpha_client=...)) and server-side edge
+# re-assignment -- the distributed row-block regrouping
+# (clients.regroup_clients on the carve coordinates) pinned against the
+# oracle's per-client data assignment (ref_fed.regroup_client_data).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def skew_problem():
+    """K=4 virtual clients per slice, each regressing on its OWN target
+    (a Dirichlet(0.25) prototype mixture): the carve recovers genuinely
+    distinct per-client distributions."""
+    return H.make_problem(1, 1, clients=4, alpha_client=0.25)
+
+
+def test_intra_edge_skew_changes_data(problem, skew_problem):
+    """Guard: the axis is live -- per-client targets differ from the
+    legacy per-pod problem AND from each other (client row blocks of
+    one slice batch have distinct statistics)."""
+    import numpy as np
+    assert not np.array_equal(np.asarray(problem["ys"]),
+                              np.asarray(skew_problem["ys"]))
+    ys = np.asarray(skew_problem["ys"])[:, 0, 0]      # [S, b, DOUT]
+    per_client = ys.reshape(ys.shape[0], 4, -1).mean(axis=(0, 2))
+    assert len(set(np.round(per_client, 6))) == 4, per_client
+
+
+@pytest.mark.parametrize("method", ["dc_hier_signsgd",
+                                    "scaffold_hier_signsgd"])
+@pytest.mark.parametrize("mode", ["merged", "stream"])
+def test_intra_edge_skew_vs_oracle(topo, skew_problem, method, mode):
+    """Intra-edge skew x {merged, stream} x {dc, scaffold}: the new data
+    axis changes WHAT each client holds, never the update arithmetic --
+    cells stay bitwise across the fused/flat route and EXACT vs the
+    grown ref_fed oracle hosting the same per-client distributions."""
+    cc = H.client_cfg(1, 1, 4, "full")
+    ccm = cc if mode == "merged" else _stream(cc)
+    ref, ew = H.run_hier(topo, skew_problem, method, clients=ccm)
+    got, _ = H.run_hier(topo, skew_problem, method, "fused", "flat",
+                        clients=ccm)
+    H.assert_trees_equal(ref, got, f"skew/{method}/{mode}/fused-flat")
+    oracle = H.run_oracle(skew_problem, method, clients=cc)
+    H.assert_trees_equal(H.aggregate(ref, ew), oracle,
+                         f"skew-oracle/{method}/{mode}", exact=True)
+
+
+def test_edge_assignment_regroup_parity(topo, skew_problem):
+    """The two halves of a server-side edge re-assignment agree
+    BITWISE: the distributed step fed the permuted row blocks
+    (clients.regroup_clients via regroup_problem) lands exactly on the
+    oracle fed the permuted nested client lists
+    (ref_fed.regroup_client_data via run_oracle(assignment=...)), and
+    slice-then-permute equals permute-then-slice on the oracle side."""
+    import numpy as np
+    order = np.array([2, 0, 3, 1])
+    moved = H.regroup_problem(skew_problem, order)
+    assert not np.array_equal(np.asarray(moved["ys"]),
+                              np.asarray(skew_problem["ys"]))
+    cc = H.client_cfg(1, 1, 4, "full")
+    ref, ew = H.run_hier(topo, moved, "dc_hier_signsgd", clients=cc)
+    oracle = H.run_oracle(skew_problem, "dc_hier_signsgd", clients=cc,
+                          assignment=order)
+    H.assert_trees_equal(H.aggregate(ref, ew), oracle, "assign-oracle",
+                         exact=True)
+    oracle2 = H.run_oracle(moved, "dc_hier_signsgd", clients=cc)
+    H.assert_trees_equal(oracle, oracle2, "assign-slice-vs-permute",
+                         exact=True)
+
+
 def _run_check(script: str, want: str):
     env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
     r = subprocess.run(
